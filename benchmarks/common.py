@@ -1,0 +1,42 @@
+"""Shared helpers for the benchmark harness (one module per paper table)."""
+
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core.simulator import SimConfig, simulate, table2_speeds  # noqa: E402
+
+CONFIGS = ("C1", "C2", "C3", "C4", "C5")
+TASKS = (480, 960, 1920, 3840, 7680)
+
+
+def median_makespan(policy, conf, tasks, seeds=5, order="interleaved", **kw):
+    ms = []
+    for seed in range(seeds):
+        cfg = SimConfig(
+            speeds=table2_speeds(conf, order=order), num_tasks=tasks,
+            seed=seed, **kw,
+        )
+        ms.append(simulate(policy, cfg).makespan)
+    return float(np.median(ms))
+
+
+def gain(a2ws: float, other: float) -> float:
+    """Paper Eq. 13 (percent)."""
+    return (1.0 - a2ws / other) * 100.0
+
+
+def timed(fn, *args, warmup=1, iters=3, **kw):
+    for _ in range(warmup):
+        fn(*args, **kw)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args, **kw)
+    dt = (time.perf_counter() - t0) / iters
+    return out, dt

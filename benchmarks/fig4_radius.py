@@ -1,0 +1,36 @@
+"""Fig. 4 — runtime vs information radius R (C4, 3840 tasks).
+
+Paper claim: runtime falls from R=1 up to an interior optimum (R=16) which
+beats full/global information (R=32); the fixed operating point is R = 20%
+of the node count.
+"""
+
+from __future__ import annotations
+
+from .common import gain, median_makespan
+
+
+def run(seeds: int = 3, csv: bool = True):
+    conf, tasks = "C4", 3840
+    radii = (1, 2, 4, 8, 16, 32)
+    rows = []
+    for r in radii:
+        mk = median_makespan("a2ws", conf, tasks, seeds=seeds, radius=r)
+        rows.append((r, mk))
+        if csv:
+            print(f"fig4_radius_R{r},{mk*1e6:.0f},makespan_s={mk:.1f}")
+    best_r = min(rows, key=lambda x: x[1])[0]
+    r1 = rows[0][1]
+    interior = dict(rows)
+    derived = {
+        "optimum_R": best_r,
+        "R1_vs_R16_gain_pct": round(gain(interior[16], r1), 2),
+        "R16_beats_R32": interior[16] <= interior[32] * 1.02,
+    }
+    if csv:
+        print(f"fig4_radius_summary,0,{derived}")
+    return rows, derived
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,41 @@
+"""Fig. 5 — per-process task counts and runtimes, C1 / 480 tasks.
+
+Paper claims: (a) A2WS and CTWS give similar per-task runtimes, (b) the
+slowest processes run FEWER tasks under A2WS than under CTWS/LW (A2WS
+prioritises fast processes), (c) LW slows process 0 (leader co-location).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .common import SimConfig, simulate, table2_speeds
+
+
+def run(seed: int = 0, csv: bool = True):
+    speeds = table2_speeds("C1", order="blocked")  # paper Fig. 5 ordering
+    cfg = SimConfig(speeds=speeds, num_tasks=480, seed=seed)
+    out = {}
+    for policy in ("a2ws", "ctws", "lw"):
+        res = simulate(policy, cfg)
+        out[policy] = res
+        if csv:
+            counts = "/".join(str(c) for c in res.per_node_tasks)
+            print(f"fig5_{policy},{res.makespan*1e6:.0f},tasks={counts}")
+    slow = speeds == 1.0
+    a_slow = np.asarray(out["a2ws"].per_node_tasks)[slow].sum()
+    c_slow = np.asarray(out["ctws"].per_node_tasks)[slow].sum()
+    l_slow = np.asarray(out["lw"].per_node_tasks)[slow].sum()
+    derived = {
+        "a2ws_slow_tasks": int(a_slow),
+        "ctws_slow_tasks": int(c_slow),
+        "lw_slow_tasks": int(l_slow),
+        "a2ws_gives_slow_fewer": bool(a_slow <= min(c_slow, l_slow)),
+    }
+    if csv:
+        print(f"fig5_summary,0,{derived}")
+    return out, derived
+
+
+if __name__ == "__main__":
+    run()

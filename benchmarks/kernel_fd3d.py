@@ -1,0 +1,50 @@
+"""FD3D stencil kernel micro-benchmark: fused Pallas (interpret on CPU; the
+TPU target) vs the unfused jnp oracle.  On CPU the oracle is the fast path —
+the interesting derived number is HBM traffic per step (the fusion motive):
+the fused kernel reads u, u_prev, c2dt2 and writes u_next once (4 passes),
+the unfused oracle issues ~7 passes over the wavefield."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import timed
+
+import sys
+sys.path.insert(0, "src")
+from repro.kernels.fd3d import fd3d_step  # noqa: E402
+from repro.kernels.fd3d.fd3d import fd3d_pallas  # noqa: E402
+
+
+def run(n: int = 64, csv: bool = True):
+    shape = (n, n, n)
+    k1, k2 = jax.random.split(jax.random.key(0))
+    u = jax.random.normal(k1, shape, jnp.float32)
+    up = jax.random.normal(k2, shape, jnp.float32)
+    c2 = jnp.full(shape, 0.1, jnp.float32)
+
+    ref = jax.jit(lambda a, b, c: fd3d_step(a, b, c, dx=10.0, backend="ref"))
+    _, t_ref = timed(lambda: jax.block_until_ready(ref(u, up, c2)), iters=5)
+    _, t_pal = timed(
+        lambda: jax.block_until_ready(
+            fd3d_pallas(u, up, c2, dx=10.0, bz=8, interpret=True)
+        ),
+        iters=1,
+    )
+    cells = n ** 3
+    bytes_fused = 4 * cells * 4  # 3 reads + 1 write, f32
+    bytes_unfused = 7 * cells * 4
+    if csv:
+        print(f"fd3d_ref_jnp,{t_ref*1e6:.0f},cells={cells}")
+        print(f"fd3d_pallas_interpret,{t_pal*1e6:.0f},cells={cells}")
+        print(
+            f"fd3d_traffic_model,0,fused_bytes={bytes_fused}"
+            f";unfused_bytes={bytes_unfused};hbm_reduction="
+            f"{bytes_unfused/bytes_fused:.2f}x"
+        )
+    return {"t_ref": t_ref, "t_pallas_interpret": t_pal}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,72 @@
+"""Roofline collation: reads experiments/dryrun/*.json into the §Roofline
+table (compute/memory/collective terms, dominant bottleneck, 6ND ratio)."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+
+
+def load_records(mesh: str | None = "16x16"):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        r = json.load(open(path))
+        if mesh and r.get("mesh") != mesh:
+            continue
+        recs.append(r)
+    return recs
+
+
+def fmt_table(recs) -> str:
+    hdr = (
+        "| arch | shape | t_comp (s) | t_mem (s) | t_coll (s) | dominant | "
+        "6ND/HLO | HBM fit |\n|---|---|---|---|---|---|---|---|"
+    )
+    lines = [hdr]
+    for r in recs:
+        if r.get("status") == "skipped":
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | — | — | — | skipped | — | — |"
+            )
+            continue
+        if r.get("status") != "ok":
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | — | — | — | ERROR | — | — |"
+            )
+            continue
+        dom = r["dominant"].replace("t_", "")
+        fit = "yes" if r.get("fits_hbm16g") else "NO"
+        ratio = r.get("useful_flops_ratio")
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute']:.3f} | "
+            f"{r['t_memory']:.3f} | {r['t_collective']:.3f} | {dom} | "
+            f"{'—' if ratio is None else format(ratio, '.2f')} | {fit} |"
+        )
+    return "\n".join(lines)
+
+
+def run(csv: bool = True):
+    recs = load_records()
+    ok = [r for r in recs if r.get("status") == "ok"]
+    if csv:
+        for r in ok:
+            dom = r["dominant"]
+            ratio = r.get("useful_flops_ratio")
+            print(
+                f"roofline_{r['arch']}_{r['shape']},"
+                f"{max(r['t_compute'], r['t_memory'], r['t_collective'])*1e6:.0f},"
+                f"dom={dom};ratio="
+                + ("-" if ratio is None else format(ratio, ".2f"))
+            )
+        n_dom = {}
+        for r in ok:
+            n_dom[r["dominant"]] = n_dom.get(r["dominant"], 0) + 1
+        print(f"roofline_summary,0,cells={len(ok)};dominants={n_dom}")
+    return recs
+
+
+if __name__ == "__main__":
+    print(fmt_table(load_records()))

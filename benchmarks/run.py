@@ -1,0 +1,61 @@
+"""Benchmark harness entry point — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--seeds N] [--fast]
+
+Prints ``name,us_per_call,derived`` CSV lines per benchmark.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--seeds", type=int, default=3)
+    ap.add_argument("--fast", action="store_true", help="seeds=1, smaller kernels")
+    ap.add_argument(
+        "--only", default="", help="comma-separated benchmark names"
+    )
+    args = ap.parse_args()
+    seeds = 1 if args.fast else args.seeds
+
+    from . import (
+        fig4_radius,
+        fig5_tasks,
+        kernel_fd3d,
+        placement_ablation,
+        roofline,
+        sched_micro,
+        table3_lw,
+        table4_ctws,
+    )
+
+    benches = {
+        "fig4": lambda: fig4_radius.run(seeds=seeds),
+        "table3": lambda: table3_lw.run(seeds=seeds),
+        "table4": lambda: table4_ctws.run(seeds=seeds),
+        "fig5": lambda: fig5_tasks.run(),
+        "placement": lambda: placement_ablation.run(seeds=seeds),
+        "kernel_fd3d": lambda: kernel_fd3d.run(n=32 if args.fast else 64),
+        "sched_micro": lambda: sched_micro.run(),
+        "roofline": lambda: roofline.run(),
+    }
+    only = set(args.only.split(",")) if args.only else None
+    t0 = time.time()
+    for name, fn in benches.items():
+        if only and name not in only:
+            continue
+        print(f"# --- {name} ---", flush=True)
+        try:
+            fn()
+        except Exception as e:  # noqa: BLE001
+            print(f"{name}_FAILED,0,{type(e).__name__}: {e}", file=sys.stderr)
+            raise
+    print(f"# done in {time.time()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

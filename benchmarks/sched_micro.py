@@ -1,0 +1,43 @@
+"""Scheduler micro-benchmarks: decision latency of the smart-stealing math
+and throughput of the threaded A2WS runtime on no-op tasks (scheduling
+overhead per task)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .common import timed
+
+import sys
+sys.path.insert(0, "src")
+from repro.core.a2ws import A2WSRuntime  # noqa: E402
+from repro.core.steal import plan_steal  # noqa: E402
+
+
+def run(csv: bool = True):
+    rng = np.random.default_rng(0)
+    p = 128
+    n = rng.integers(1, 100, p).astype(float)
+    t = rng.uniform(0.5, 10.0, p)
+    q = rng.integers(0, 50, p).astype(float)
+    _, t_plan = timed(
+        lambda: plan_steal(rng, 0, n, t, q, radius=26), iters=200
+    )
+
+    def tiny_run():
+        rt = A2WSRuntime(list(range(200)), 4, lambda w, task: None, seed=1)
+        return rt.run()
+
+    stats, t_run = timed(tiny_run, warmup=1, iters=2)
+    per_task = t_run / 200
+    if csv:
+        print(f"sched_plan_steal_128p,{t_plan*1e6:.1f},radius=26")
+        print(
+            f"sched_runtime_overhead,{per_task*1e6:.0f},"
+            f"per_task_us_4workers_200tasks"
+        )
+    return {"plan_steal_us": t_plan * 1e6, "per_task_us": per_task * 1e6}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,32 @@
+"""Table 3 — gain of A2WS over LW (leader–workers) across C1..C5 x task
+counts (median of N seeds, paper Eq. 13)."""
+
+from __future__ import annotations
+
+from .common import CONFIGS, TASKS, gain, median_makespan
+
+
+def run(seeds: int = 3, csv: bool = True, order: str = "interleaved"):
+    grid = {}
+    for tasks in TASKS:
+        for conf in CONFIGS:
+            a = median_makespan("a2ws", conf, tasks, seeds=seeds, order=order)
+            l = median_makespan("lw", conf, tasks, seeds=seeds, order=order)
+            g = gain(a, l)
+            grid[(tasks, conf)] = g
+            if csv:
+                print(f"table3_lw_{conf}_{tasks},{a*1e6:.0f},gain_pct={g:.1f}")
+    # headline cells (paper: ~10.1% at C5/3840; negative corners)
+    derived = {
+        "C5_3840_gain": round(grid[(3840, "C5")], 1),
+        "C1_480_gain": round(grid[(480, "C1")], 1),
+        "corner_C4_480_negative": grid[(480, "C4")] < 0,
+        "corner_C5_960_negative": grid[(960, "C5")] < 0,
+    }
+    if csv:
+        print(f"table3_summary,0,{derived}")
+    return grid, derived
+
+
+if __name__ == "__main__":
+    run()

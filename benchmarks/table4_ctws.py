@@ -1,0 +1,31 @@
+"""Table 4 — gain of A2WS over CTWS (cyclic token WS, Assis et al. 2019)
+across C1..C5 x task counts (median of N seeds, paper Eq. 13)."""
+
+from __future__ import annotations
+
+from .common import CONFIGS, TASKS, gain, median_makespan
+
+
+def run(seeds: int = 3, csv: bool = True, order: str = "interleaved"):
+    grid = {}
+    for tasks in TASKS:
+        for conf in CONFIGS:
+            a = median_makespan("a2ws", conf, tasks, seeds=seeds, order=order)
+            c = median_makespan("ctws", conf, tasks, seeds=seeds, order=order)
+            g = gain(a, c)
+            grid[(tasks, conf)] = g
+            if csv:
+                print(f"table4_ctws_{conf}_{tasks},{a*1e6:.0f},gain_pct={g:.1f}")
+    derived = {
+        "C5_3840_gain": round(grid[(3840, "C5")], 1),
+        "C1_480_gain": round(grid[(480, "C1")], 1),
+        "gain_grows_with_nodes_3840": grid[(3840, "C5")] > grid[(3840, "C1")],
+        "corner_C4_480_negative": grid[(480, "C4")] < 0,
+    }
+    if csv:
+        print(f"table4_summary,0,{derived}")
+    return grid, derived
+
+
+if __name__ == "__main__":
+    run()

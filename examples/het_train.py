@@ -1,0 +1,100 @@
+"""End-to-end driver: LM training with A2WS-scheduled heterogeneous data
+parallelism, fault injection, checkpoint/restart — the paper's technique as
+a first-class training feature.
+
+The global batch is cut into microbatch TASKS; worker groups (one fast, one
+deliberately slow, one that dies mid-run) own A2WS deques of them.  Fast
+workers steal microbatches from stragglers, the dying worker's tasks are
+re-queued and finished by survivors, and the driver restarts from the last
+checkpoint after removing it.  The combined gradient is exact regardless of
+who computed what, so A2WS changes step latency, never semantics.
+
+Defaults are container-sized (a ~1M-param model, 30 steps); scale with
+    --arch phi4-mini-3.8b --steps 300 --d-model 512 ...
+to the ~100M/few-hundred-step regime on real hardware.
+
+    PYTHONPATH=src python examples/het_train.py
+"""
+
+import argparse
+import os
+import sys
+import tempfile
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+
+from repro.configs import get_smoke
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.models import lm
+from repro.optim.adamw import AdamWConfig
+from repro.runtime.fault_tolerance import ResilientDriver
+from repro.runtime.het_dp import HetDPTrainer, WorkerSpec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="phi4-mini-3.8b")
+    ap.add_argument("--steps", type=int, default=30)
+    ap.add_argument("--microbatches", type=int, default=8)
+    ap.add_argument("--mb-size", type=int, default=2)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--fail-step", type=int, default=12)
+    ap.add_argument("--compress", action="store_true",
+                    help="int8+error-feedback gradient compression")
+    args = ap.parse_args()
+
+    cfg = get_smoke(args.arch)
+    params, _ = lm.init(cfg, jax.random.key(0))
+    n_params = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+    print(f"arch {cfg.name}: {n_params/1e6:.2f}M params, "
+          f"{args.microbatches} microbatch tasks/step")
+
+    data = SyntheticLM(DataConfig(
+        vocab=cfg.vocab, seq_len=args.seq,
+        global_batch=args.mb_size * args.microbatches, seed=0,
+    ))
+
+    def loss_fn(p, batch):
+        return lm.loss_fn(p, batch, cfg)
+
+    def make_microbatches(step):
+        b = data.batch_at(step)
+        return [
+            {k: jax.numpy.asarray(v[i::args.microbatches]) for k, v in b.items()}
+            for i in range(args.microbatches)
+        ]
+
+    workers = [
+        WorkerSpec("fast-pod"),
+        WorkerSpec("throttled-pod", slow_factor=5.0),
+        WorkerSpec("flaky-pod", fail_at_step=args.fail_step),
+    ]
+    trainer = HetDPTrainer(
+        loss_fn, params, workers,
+        AdamWConfig(lr=args.lr, weight_decay=0.0),
+        compress=args.compress, base_task_time=0.01,
+    )
+    ckpt_dir = tempfile.mkdtemp(prefix="het_train_ckpt_")
+    driver = ResilientDriver(trainer, make_microbatches, ckpt_dir,
+                             ckpt_every=5)
+    report = driver.run(args.steps)
+
+    print(f"steps run:        {report.steps_run}")
+    print(f"restarts:         {report.restarts}")
+    print(f"removed workers:  {report.removed_workers}")
+    print(f"final loss:       {report.final_loss:.4f}")
+    tot = [0] * 3
+    for st in trainer.history:
+        for i, c in enumerate(st.per_worker_tasks):
+            if i < len(tot):
+                tot[i] += c
+    print(f"microbatches/worker (lifetime): {tot} — the straggler ran fewer, "
+          "thanks to stealing")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""The paper's use case end-to-end: 3-D acoustic seismic modeling with shots
+scheduled by A2WS across heterogeneous workers (paper §3-4, miniaturised).
+
+Each task = one shot: inject a Ricker wavelet, propagate the 8th-order FDM
+stencil (`repro.kernels.fd3d`, the Pallas TPU kernel's jnp oracle on CPU),
+record seismograms at the receiver line.  Workers are CPU threads with
+synthetic slowdown factors standing in for 1..24-core nodes.
+
+    PYTHONPATH=src python examples/seismic_shots.py
+"""
+
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.a2ws import A2WSRuntime
+from repro.core.baselines import CTWSRuntime
+from repro.seismic.model import make_demo_model, make_shot_grid, run_shot
+
+N = 32          # model cube size
+NT = 60         # time steps per shot
+NUM_SHOTS = 12
+SLOWDOWN = {0: 1.0, 1: 1.0, 2: 4.0}  # worker 2 is a "1-core node"
+
+
+def main() -> None:
+    model = make_demo_model(n=N)
+    shots = make_shot_grid(model, NUM_SHOTS)
+    print(f"velocity model {model.velocity.shape}, {NUM_SHOTS} shots x "
+          f"{NT} steps, CFL ok: {model.cfl_ok()}")
+    # warm up the jitted solver so the first scheduler's makespan does not
+    # include XLA compilation
+    run_shot(model, jnp.asarray(shots[0].src),
+             jnp.asarray(shots[0].rec_array()), nt=NT).block_until_ready()
+
+    seismograms = {}
+
+    def task_fn(wid: int, shot):
+        t0 = time.perf_counter()
+        seis = run_shot(model, jnp.asarray(shot.src),
+                        jnp.asarray(shot.rec_array()), nt=NT)
+        seis.block_until_ready()
+        extra = (time.perf_counter() - t0) * (SLOWDOWN[wid] - 1.0)
+        if extra > 0:  # throttle: emulate a slow node
+            end = time.perf_counter() + extra
+            while time.perf_counter() < end:
+                pass
+        seismograms[shot.src] = np.asarray(seis)
+
+    for name, cls in (("a2ws", A2WSRuntime), ("ctws", CTWSRuntime)):
+        seismograms.clear()
+        rt = cls(shots, len(SLOWDOWN), task_fn)
+        stats = rt.run()
+        peak = max(float(np.abs(s).max()) for s in seismograms.values())
+        print(f"{name:5s}: makespan {stats.makespan:6.2f}s  "
+              f"tasks/worker {stats.per_worker_tasks}  "
+              f"steals {len(getattr(stats, 'steals', []) or [])}  "
+              f"peak amplitude {peak:.3e}")
+    print("slow worker (w2) should execute the fewest shots under a2ws.")
+
+
+if __name__ == "__main__":
+    main()

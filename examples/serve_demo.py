@@ -1,0 +1,77 @@
+"""Batched serving with A2WS request scheduling across heterogeneous model
+replicas: requests are tasks, replicas are workers, fast replicas steal
+queued requests from slow ones (preemptively, §2.2.1).
+
+    PYTHONPATH=src python examples/serve_demo.py
+"""
+
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke
+from repro.models import lm
+from repro.serve.engine import Replica, ServePool
+
+ARCH = "mistral-nemo-12b"
+NUM_REQUESTS = 16
+PROMPT_LEN = 12
+NEW_TOKENS = 6
+
+
+def make_generate(cfg, params):
+    cache_len = PROMPT_LEN + NEW_TOKENS
+
+    @jax.jit
+    def decode(p, tok, caches, pos):
+        return lm.decode_step(p, tok, caches, pos, cfg)
+
+    def generate(request: dict) -> dict:
+        toks = request["tokens"][None, :]  # [1, S]
+        caches = lm.init_caches(cfg, 1, cache_len)
+        out = []
+        tok = toks[:, :1]
+        for i in range(cache_len - 1):
+            logits, caches = decode(params, tok, caches, jnp.int32(i))
+            if i + 1 < PROMPT_LEN:
+                tok = toks[:, i + 1 : i + 2]
+            else:
+                tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
+                out.append(int(tok[0, 0]))
+        return {"completion": out}
+
+    return generate
+
+
+def main() -> None:
+    cfg = get_smoke(ARCH)
+    params, _ = lm.init(cfg, jax.random.key(0))
+    gen = make_generate(cfg, params)
+    rng = np.random.default_rng(0)
+    requests = [
+        {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, PROMPT_LEN),
+                               jnp.int32)}
+        for _ in range(NUM_REQUESTS)
+    ]
+    pool = ServePool([
+        Replica("fast-replica", gen),
+        Replica("slow-replica", gen, slow_factor=4.0),
+    ])
+    t0 = time.perf_counter()
+    responses, stats = pool.submit_all(requests)
+    dt = time.perf_counter() - t0
+    print(f"served {len(responses)} requests x {NEW_TOKENS} tokens "
+          f"in {dt:.2f}s ({len(responses)*NEW_TOKENS/dt:.1f} tok/s)")
+    print(f"requests/replica: {stats.per_worker_tasks} "
+          f"(steals: {len(stats.steals)}) — fast replica served more")
+    print(f"sample completion: {responses[0]['completion']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,87 @@
+"""Opcode-level byte/collective breakdown for one dry-run cell (hillclimb
+profiling tool — 'the profile is lowered.as_text() + cost_analysis')."""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=" + \
+    os.environ.get("REPRO_FORCE_DEVICES", "512")
+
+import collections
+import re
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.configs.base import SHAPES, get_config
+from repro.launch.cells import lower_cell
+from repro.launch.mesh import make_production_mesh
+from repro.launch import hlo_analysis as H
+from repro.parallel.sharding import make_context
+
+arch, shape_name = sys.argv[1], sys.argv[2]
+cfg = get_config(arch)
+mesh = make_production_mesh(multi_pod=False)
+ctx = make_context(mesh)
+with mesh:
+    lowered, meta = lower_cell(cfg, SHAPES[shape_name], ctx)
+    compiled = lowered.compile()
+text = compiled.as_text()
+
+comps = H._parse_computations(text)
+shape_of = {c: {i.name: i.rtype for i in ins} for c, ins in comps.items()}
+memo = {}
+
+def cost(cname):
+    if cname in memo:
+        return memo[cname]
+    memo[cname] = collections.Counter()
+    tot = collections.Counter()
+    shapes = shape_of.get(cname, {})
+    for ins in comps.get(cname, []):
+        op = ins.opcode
+        if op in H._FREE_OPS or op.endswith("-done"):
+            continue
+        base = op[:-6] if op.endswith("-start") else op
+        if op == "while":
+            trip = 1
+            m = H._TRIP_RE.search(ins.rest)
+            if m:
+                trip = int(m.group(1))
+            b = H._CALL_RE.search(ins.rest)
+            if b:
+                for k, v in cost(b.group(1)).items():
+                    tot[k] += v * trip
+            continue
+        if base in H._COLLECTIVES:
+            nb = H._shape_bytes(ins.rtype) * (2 if base == "all-reduce" else 1)
+            tot["COLL:" + base] += nb
+            continue
+        if op in ("fusion", "call", "conditional", "custom-call"):
+            nb = H._shape_bytes(ins.rtype)
+            for on in H._OPERAND_RE.findall(ins.rest.split(", calls=")[0]):
+                if on in shapes:
+                    nb += H._shape_bytes(shapes[on])
+            # bucket fusions by their biggest tensor's metadata op_name hint
+            m = re.search(r'op_name="([^"]+)"', ins.rest)
+            tag = "fusion"
+            if m:
+                name = m.group(1)
+                for key in ("attention", "moe", "softmax", "log_softmax",
+                            "scan", "transpose", "while"):
+                    if key in name:
+                        tag = f"fusion[{key}]"
+                        break
+            tot[tag] += nb
+            continue
+        nb = H._shape_bytes(ins.rtype)
+        for on in H._OPERAND_RE.findall(ins.rest):
+            if on in shapes:
+                nb += H._shape_bytes(shapes[on])
+        tot[base] += nb
+    memo[cname] = tot
+    return tot
+
+m = re.search(r"^ENTRY\s+%([\w.\-]+)", text, re.M)
+tot = cost(m.group(1))
+print(f"=== {arch} {shape_name}: bytes by opcode (GB, trip-scaled) ===")
+for k, v in tot.most_common(20):
+    print(f"{k:28s} {v/1e9:12.2f}")
+print("TOTAL_GB", sum(v for k, v in tot.items() if not k.startswith('COLL'))/1e9)

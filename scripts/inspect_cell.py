@@ -1,0 +1,54 @@
+import os, sys
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count="
+    + os.environ.get("REPRO_FORCE_DEVICES", "512")
+)
+import re
+import collections
+import jax
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+from repro.configs.base import SHAPES, get_config
+from repro.launch.cells import lower_cell, _shape_bytes
+from repro.launch.mesh import make_production_mesh
+from repro.parallel.sharding import make_context
+
+arch, shape_name = sys.argv[1], sys.argv[2]
+cfg = get_config(arch)
+mesh = make_production_mesh(multi_pod=False)
+ctx = make_context(mesh)
+with mesh:
+    lowered, meta = lower_cell(cfg, SHAPES[shape_name], ctx)
+    compiled = lowered.compile()
+hlo = compiled.as_text()
+open(f"/tmp/{arch}_{shape_name}.hlo", "w").write(hlo)
+
+# entry params
+for line in hlo.splitlines():
+    if line.strip().startswith("ENTRY"):
+        print(line[:400])
+        break
+
+pat = re.compile(
+    r"=\s*(\([^=]*?\)|\S+)\s+(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)(-start)?\("
+)
+sizes = collections.Counter()
+tops = []
+for m in pat.finditer(hlo):
+    b = _shape_bytes(m.group(1))
+    sizes[m.group(2)] += b
+    tops.append((b, m.group(2), m.group(1)[:120]))
+tops.sort(reverse=True)
+print("per-kind result bytes:", {k: f"{v/1e9:.2f}GB" for k, v in sizes.items()})
+print("top collectives:")
+for b, kind, shp in tops[:15]:
+    print(f"  {b/1e9:9.3f}GB {kind:20s} {shp}")
+# biggest fusions/temps hint: largest shapes anywhere
+shape_re = re.compile(r"([a-z]+\d+)\[([\d,]+)\]")
+big = collections.Counter()
+for m in shape_re.finditer(hlo):
+    big[m.group(0)] = _shape_bytes(m.group(0))
+print("largest tensor shapes in module:")
+for s, b in sorted(big.items(), key=lambda kv: -kv[1])[:12]:
+    print(f"  {b/1e9:9.3f}GB {s}")
+print(meta)

@@ -1,0 +1,21 @@
+from .base import (
+    ARCH_IDS,
+    SHAPES,
+    Shape,
+    cells,
+    get_config,
+    get_smoke,
+    input_specs,
+    shape_applicable,
+)
+
+__all__ = [
+    "ARCH_IDS",
+    "SHAPES",
+    "Shape",
+    "cells",
+    "get_config",
+    "get_smoke",
+    "input_specs",
+    "shape_applicable",
+]

@@ -1,0 +1,57 @@
+"""A2WS — Adaptive Asynchronous Work-Stealing (the paper's contribution).
+
+Layers:
+  steal        Eqs. 2-10 (steal rate, γ-rounding, victim selection)
+  info_ring    radius-R bidirectional ring information vector (§2.1)
+  deque        packed head/tail asynchronous-theft deque (§2.3, Fig. 2/3b)
+  a2ws         Algorithm 1 threaded host runtime
+  baselines    LW (leader-workers) and CTWS (cyclic token) comparisons
+  simulator    discrete-event heterogeneous-cluster simulator (paper §4 setup)
+  device_sched jitted shard_map/ppermute SPMD scheduler (TPU data plane)
+"""
+
+from .a2ws import A2WSRuntime, RunStats, partition_tasks
+from .baselines import CTWSRuntime, LWRuntime
+from .deque import AtomicInt64, StealResult, TaskDeque
+from .info_ring import RingInfo
+from .simulator import SimConfig, SimResult, simulate, table2_speeds
+from .steal import (
+    StealDecision,
+    gamma,
+    ideal_runtime,
+    neighborhood,
+    pair_steal_rate,
+    plan_steal,
+    round_steal_rate,
+    select_victim,
+    steal_rate,
+    steal_rate_radius,
+    victim_weights,
+)
+
+__all__ = [
+    "A2WSRuntime",
+    "RunStats",
+    "partition_tasks",
+    "CTWSRuntime",
+    "LWRuntime",
+    "AtomicInt64",
+    "StealResult",
+    "TaskDeque",
+    "RingInfo",
+    "SimConfig",
+    "SimResult",
+    "simulate",
+    "table2_speeds",
+    "StealDecision",
+    "gamma",
+    "ideal_runtime",
+    "neighborhood",
+    "pair_steal_rate",
+    "plan_steal",
+    "round_steal_rate",
+    "select_victim",
+    "steal_rate",
+    "steal_rate_radius",
+    "victim_weights",
+]

@@ -1,0 +1,296 @@
+"""A2WS Algorithm 1 — the asynchronous host runtime.
+
+This is the paper's scheduler running as the **control plane** of the
+framework: worker threads (one per heterogeneous worker group / node) execute
+opaque tasks, keep per-worker deques (``repro.core.deque``), exchange the
+information vector over the bidirectional ring (``repro.core.info_ring``) and
+steal adaptively (``repro.core.steal``).  Shared memory between threads stands
+in for MPI RMA windows — the protocol (packed head/tail get-accumulate,
+partitioned info Puts, preemptive wall-time speed estimates) is the paper's,
+see DESIGN.md §2 for the adaptation argument.
+
+The runtime is generic over the task payload: the seismic driver feeds shots,
+the training runtime (``repro.runtime.het_dp``) feeds microbatches, the server
+feeds request batches.
+
+Algorithm 1 mapping (line numbers from the paper):
+
+    1  while the process has task do            -> _worker_loop
+    2    update_process_info()                  -> _update_info
+    3-8  if ran a task: S=steal_equation();     -> plan_steal + _do_steal
+         v=select_victim(S); steal_task(v,S)
+    10   T_id = get_task_id()                   -> deque.get_task
+    11   update_process_info()                  -> _update_info
+    12   execute(T_id)                          -> task_fn
+    13   info_communication()                   -> RingInfo.communicate
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Sequence
+
+import numpy as np
+
+from .deque import AtomicInt64, TaskDeque
+from .info_ring import RingInfo
+from .steal import plan_steal
+
+__all__ = ["A2WSRuntime", "RunStats", "TaskRecord", "partition_tasks"]
+
+
+@dataclass
+class TaskRecord:
+    task: object
+    worker: int
+    start: float
+    end: float
+
+
+@dataclass
+class RunStats:
+    makespan: float
+    records: list[TaskRecord]
+    steals: list[tuple[float, int, int, int]]  # (time, thief, victim, amount)
+    failed_steals: int
+    info_cells_sent: int
+    corrections: int
+    per_worker_tasks: list[int] = field(default_factory=list)
+    per_worker_mean_t: list[float] = field(default_factory=list)
+
+    def summary(self) -> str:
+        counts = ",".join(str(c) for c in self.per_worker_tasks)
+        return (
+            f"makespan={self.makespan:.4f}s steals={len(self.steals)} "
+            f"failed={self.failed_steals} cells={self.info_cells_sent} "
+            f"tasks/worker=[{counts}]"
+        )
+
+
+def partition_tasks(tasks: Sequence, num_workers: int) -> list[list]:
+    """Static block partition used before execution starts (§2.2.1: "A2WS
+    distributes the tasks statically just before execution starts")."""
+    out: list[list] = [[] for _ in range(num_workers)]
+    base, rem = divmod(len(tasks), num_workers)
+    pos = 0
+    for w in range(num_workers):
+        k = base + (1 if w < rem else 0)
+        out[w] = list(tasks[pos : pos + k])
+        pos += k
+    return out
+
+
+class _WorkerState:
+    __slots__ = (
+        "deque", "executed", "runtime_sum", "ran_any", "start_time", "rng",
+    )
+
+    def __init__(self, deque: TaskDeque, seed: int) -> None:
+        self.deque = deque
+        self.executed = 0
+        self.runtime_sum = 0.0
+        self.ran_any = False
+        self.start_time = 0.0
+        self.rng = np.random.default_rng(seed)
+
+
+class A2WSRuntime:
+    """Threaded A2WS executor for ``num_workers`` heterogeneous workers."""
+
+    def __init__(
+        self,
+        tasks: Sequence,
+        num_workers: int,
+        task_fn: Callable[[int, object], object],
+        *,
+        radius: int | None = None,
+        seed: int = 0,
+        idle_backoff: float = 1e-4,
+        clock: Callable[[], float] = time.perf_counter,
+    ) -> None:
+        """``task_fn(worker_id, task) -> result`` runs the task on a worker.
+
+        ``radius`` defaults to the paper's operating point: 20% of the number
+        of workers (Fig. 4 discussion), at least 1.
+        """
+        self.num_workers = num_workers
+        self.task_fn = task_fn
+        self.radius = radius if radius is not None else max(1, round(0.2 * num_workers))
+        self.idle_backoff = idle_backoff
+        self.clock = clock
+        parts = partition_tasks(tasks, num_workers)
+        self.total_tasks = len(tasks)
+        self.workers = [
+            _WorkerState(TaskDeque(parts[w]), seed * 1009 + w)
+            for w in range(num_workers)
+        ]
+        self.info = RingInfo(num_workers, self.radius)
+        self.done_counter = AtomicInt64(0)
+        self.alive = AtomicInt64(num_workers)
+        # Failure tombstones (the heartbeat/failure-detector channel of a
+        # real deployment): a dead worker's info-vector cells go stale, so
+        # thieves must stop trusting them — see _try_steal.
+        self.dead = [False] * num_workers
+        self.errors: list[tuple[int, object, BaseException]] = []
+        self._steal_log: list[tuple[float, int, int, int]] = []
+        self._failed_steals = 0
+        self._records: list[TaskRecord] = []
+        self._log_lock = threading.Lock()
+
+    # ------------------------------------------------------------- Algorithm 1
+    def run(self) -> RunStats:
+        t0 = self.clock()
+        for w in self.workers:
+            w.start_time = t0
+        for i in range(self.num_workers):
+            self._update_info(i)
+        threads = [
+            threading.Thread(target=self._worker_loop, args=(i,), daemon=True)
+            for i in range(self.num_workers)
+        ]
+        for th in threads:
+            th.start()
+        for th in threads:
+            th.join()
+        t1 = self.clock()
+        per_tasks = [w.executed for w in self.workers]
+        per_t = [
+            (w.runtime_sum / w.executed) if w.executed else float("nan")
+            for w in self.workers
+        ]
+        return RunStats(
+            makespan=t1 - t0,
+            records=sorted(self._records, key=lambda r: r.start),
+            steals=list(self._steal_log),
+            failed_steals=self._failed_steals,
+            info_cells_sent=self.info.puts,
+            corrections=sum(w.deque.corrections for w in self.workers),
+            per_worker_tasks=per_tasks,
+            per_worker_mean_t=per_t,
+        )
+
+    def _worker_loop(self, i: int) -> None:
+        w = self.workers[i]
+        ran_a_task = False
+        while self.done_counter.load() < self.total_tasks:
+            self._update_info(i)  # line 2
+            if ran_a_task or w.ran_any:  # lines 3-9 (preemptive: any finished)
+                self._try_steal(i)
+            task = w.deque.get_task()  # line 10
+            if task is None:
+                # Empty deque: keep thieving until global completion.
+                if self.alive.load() == 0:
+                    return  # every worker died; nothing left to wait for
+                ran_a_task = False
+                self.info.communicate(i)
+                if not self._try_steal(i):
+                    time.sleep(self.idle_backoff)
+                continue
+            self._update_info(i)  # line 11
+            start = self.clock()
+            try:
+                self.task_fn(i, task)  # line 12
+            except BaseException as e:  # noqa: BLE001 — fault tolerance
+                # Worker failure: return the task to the deque so survivors
+                # can steal it, raise the tombstone, publish, and die.
+                w.deque.push([task])
+                with self._log_lock:
+                    self.errors.append((i, task, e))
+                self.dead[i] = True
+                self._update_info(i)
+                self.info.communicate(i)
+                self.alive.accumulate(-1)
+                return
+            end = self.clock()
+            w.executed += 1
+            w.runtime_sum += end - start
+            w.ran_any = True
+            ran_a_task = True
+            with self._log_lock:
+                self._records.append(TaskRecord(task, i, start, end))
+            self.done_counter.accumulate(1)
+            self._update_info(i)
+            self.info.communicate(i)  # line 13
+
+    # ----------------------------------------------------------------- helpers
+    def _update_info(self, i: int) -> None:
+        """n_i = executed + queued; t_i = mean runtime, or elapsed wall time
+        before the first task finishes (preemptive stealing, §2.2.1)."""
+        w = self.workers[i]
+        n_i = w.executed + len(w.deque)
+        if w.executed > 0:
+            t_i = w.runtime_sum / w.executed
+        else:
+            t_i = max(self.clock() - w.start_time, 1e-9)
+        self.info.update_local(i, float(n_i), float(t_i))
+
+    def _try_steal(self, i: int) -> bool:
+        """Lines 4-8: steal_equation -> select_victim -> steal_task.
+
+        Decisions use ONLY the thief's information vector (plus the elapsed
+        wall time for preemptive estimates, §2.2.1) — never ground-truth reads
+        of remote state.  Over/under-estimates are absorbed by the Fig. 3b
+        atomic adjust-and-correct protocol, exactly as in the paper.
+        """
+        w = self.workers[i]
+        n_view, t_view = self.info.view(i)
+        now = self.clock()
+        elapsed = max(now - w.start_time, 1e-9)
+        window = self.info.window(i)
+        queued = np.zeros(self.num_workers)
+        for j in window:
+            if j == i:
+                queued[j] = len(w.deque)
+                continue
+            if self.dead[j]:
+                # Tombstoned worker: its info cells are frozen garbage.  Its
+                # RMA window (deque) is still readable — count the orphaned
+                # tasks directly and report speed ~0 so the fair share never
+                # assigns it anything.
+                queued[j] = len(self.workers[j].deque)
+                t_view[j] = 1e12
+                n_view[j] = self.workers[j].executed + queued[j]
+                continue
+            if np.isnan(self.info.t[i, j]):
+                # No report from j yet: preemptive wall-time estimate — j
+                # looks like it has finished 0 tasks in `elapsed` seconds.
+                t_view[j] = elapsed
+            # Estimated executed count from speed; remaining = n_j - executed.
+            done_est = min(elapsed / max(t_view[j], 1e-9), n_view[j])
+            queued[j] = max(n_view[j] - done_est, 0.0)
+        decision = plan_steal(
+            w.rng, i, n_view, t_view, queued, self.radius,
+            idle=len(w.deque) == 0,
+        )
+        if decision is None:
+            return False
+        victim = self.workers[decision.victim]
+        result = victim.deque.steal(decision.amount)  # Fig. 3b protocol
+        # The get-accumulate snapshot tells the thief the victim's exact
+        # remaining queue; fold it into the information vector (Table 1).
+        observed_left = max(result.observed_tail - result.observed_head, 0)
+        victim_n_new = n_view[decision.victim] - len(result.tasks)
+        if not result:
+            self._failed_steals += 1
+            # Table 1 row 3: thief marks the victim position dirty anyway —
+            # with n_j corrected down to what the snapshot implies.
+            exec_est = n_view[decision.victim] - observed_left
+            self.info.record_remote(
+                i, decision.victim, float(max(exec_est, 0.0)),
+                self.info.t[i, decision.victim],
+            )
+            return False
+        w.deque.push(result.tasks)
+        with self._log_lock:
+            self._steal_log.append(
+                (self.clock(), i, decision.victim, len(result.tasks))
+            )
+        # Table 1 row 2: thief refreshes its own and the victim's cells.
+        self._update_info(i)
+        self.info.record_remote(
+            i, decision.victim, float(victim_n_new),
+            self.info.t[i, decision.victim],
+        )
+        return True

@@ -1,0 +1,142 @@
+"""Limited information communication over a bidirectional ring (paper §2.1).
+
+Every process ``i`` owns an *information vector* holding, for each process
+``j`` in its radius-R subsystem (Eq. 1: ``P_sub = 2R+1``), the pair
+``(n_j, t_j)`` — total task count and mean task runtime — plus a freshness
+flag (Table 1).
+
+The paper's key trick is a **write partition** that makes one-sided ``Put``s
+race-free without locks: in p_i's vector, positions ``i-R..i-1`` are written
+only by the left neighbour p_{i-1}, position ``i`` only by p_i itself, and
+positions ``i+1..i+R`` only by the right neighbour p_{i+1}.  Information about
+process j therefore flows hop-by-hop away from j in both ring directions,
+with exactly one writer per (vector, cell).
+
+TPU/JAX adaptation: this module is the *host control plane* version — numpy
+arrays in shared memory stand in for MPI RMA windows, and the single-writer
+partition carries over verbatim (so no locks are needed here either, exactly
+as in the paper).  The *device data plane* version — two ``lax.ppermute``s per
+round — lives in ``repro.core.device_sched``.
+
+Freshness flags are realised as **per-cell version counters** plus a private
+``last_sent`` watermark per direction: ``dirty(cell, dir) == version[cell] >
+last_sent[dir][cell]``.  This is equivalent to Table 1's boolean flags but
+immune to the set/clear race a boolean would have with two writers, and it
+gives staleness telemetry for free.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .steal import neighborhood
+
+__all__ = ["RingInfo"]
+
+
+class RingInfo:
+    """Shared information board for P processes with propagation radius R."""
+
+    def __init__(self, num_procs: int, radius: int) -> None:
+        if num_procs < 1:
+            raise ValueError("num_procs must be >= 1")
+        self.P = num_procs
+        self.R = int(max(0, min(radius, num_procs // 2)))
+        # board[i, j] = what process i currently believes about process j.
+        self.n = np.zeros((self.P, self.P), dtype=np.float64)
+        self.t = np.full((self.P, self.P), np.nan, dtype=np.float64)
+        self.version = np.zeros((self.P, self.P), dtype=np.int64)
+        # last_sent[d][i, j]: newest version of cell j that i pushed toward
+        # direction d (0 = to left neighbour i-1, 1 = to right neighbour i+1).
+        self.last_sent = np.zeros((2, self.P, self.P), dtype=np.int64)
+        self.puts = 0  # telemetry: number of cell-level Put operations
+        self.rounds = 0
+
+    # ------------------------------------------------------------ local write
+    def update_local(self, i: int, n_i: float, t_i: float) -> None:
+        """Alg. 1 lines 2/11: p_i refreshes its own cell (Table 1 row 1)."""
+        if (self.n[i, i] != n_i) or not _feq(self.t[i, i], t_i):
+            self.n[i, i] = n_i
+            self.t[i, i] = t_i
+            self.version[i, i] += 1
+
+    def record_remote(self, i: int, j: int, n_j: float, t_j: float) -> None:
+        """Thief-side knowledge injection (Table 1 rows 2-3).
+
+        After (attempting) a steal, the thief p_i learned the victim's new
+        queue state first-hand (it moved the tail itself), so it writes the
+        victim's cell in its OWN vector and bumps the version so the news
+        propagates outward from the thief.
+        """
+        self.n[i, j] = n_j
+        if t_j == t_j:  # not NaN
+            self.t[i, j] = t_j
+        self.version[i, j] += 1
+
+    # ------------------------------------------------------- ring propagation
+    def communicate(self, i: int) -> int:
+        """Alg. 1 line 13: push dirty cells to both ring neighbours.
+
+        p_i sends cells about indices ``j >= i`` to its LEFT neighbour (which
+        stores them in its upper window) and cells about ``j <= i`` to its
+        RIGHT neighbour — the write partition of §2.1.  Only cells whose
+        version advanced since the previous send to that direction move
+        (Table 1: "Only new information is exchanged").
+
+        Returns the number of cells transmitted (0 = nothing dirty).
+        """
+        if self.P == 1 or self.R == 0:
+            return 0
+        sent = 0
+        left = (i - 1) % self.P
+        right = (i + 1) % self.P
+        # Cells the LEFT neighbour may receive: positions j in left's upper
+        # window, i.e. ring-distance(left -> j) in [1, R] going right; those
+        # are exactly j = i .. i+R-1 (distance from i: 0..R-1).
+        for off in range(0, self.R):
+            j = (i + off) % self.P
+            sent += self._put(i, left, j, direction=0)
+        # Cells the RIGHT neighbour may receive: j = i-R+1 .. i.
+        for off in range(0, self.R):
+            j = (i - off) % self.P
+            sent += self._put(i, right, j, direction=1)
+        self.rounds += 1
+        return sent
+
+    def _put(self, src: int, dst: int, j: int, direction: int) -> int:
+        ver = self.version[src, j]
+        if ver <= self.last_sent[direction, src, j]:
+            return 0  # flag is false: nothing new to send
+        self.last_sent[direction, src, j] = ver
+        # One-sided Put into dst's window.  Single-writer per (dst, j) cell by
+        # the §2.1 partition, hence no lock.  Keep monotonicity: a cell only
+        # moves forward in version (defensive; partition already ensures it).
+        if ver > self.version[dst, j]:
+            self.n[dst, j] = self.n[src, j]
+            self.t[dst, j] = self.t[src, j]
+            self.version[dst, j] = ver
+        self.puts += 1
+        return 1
+
+    # -------------------------------------------------------------- inspection
+    def view(self, i: int) -> tuple[np.ndarray, np.ndarray]:
+        """(n, t) rows as seen by process i; unknown t defaults to own t."""
+        n = self.n[i].copy()
+        t = self.t[i].copy()
+        own = t[i]
+        mask = np.isnan(t)
+        t[mask] = own if own == own else 1.0
+        return n, t
+
+    def window(self, i: int) -> list[int]:
+        return neighborhood(i, self.P, self.R)
+
+    def staleness(self, truth_version: np.ndarray) -> np.ndarray:
+        """How many versions behind each process's view is (telemetry)."""
+        return truth_version[None, :] - self.version
+
+
+def _feq(a: float, b: float) -> bool:
+    if a != a and b != b:  # both NaN
+        return True
+    return a == b

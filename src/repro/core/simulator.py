@@ -1,0 +1,493 @@
+"""Discrete-event simulator of A2WS / CTWS / LW on a heterogeneous cluster.
+
+Reproduces the paper's experimental setup (§4) deterministically and fast:
+SDumont nodes throttled to {1,2,4,8,16,24} cores via SLURM heterogeneous jobs
+(Table 2 configurations C1-C5), tasks = seismic shots of equal work, node
+speed proportional to core count (the shot solver scales over cores; Fig. 5's
+task-count ratios ~24x between 24-core and 1-core nodes confirm this model).
+
+The simulator advances *virtual time* through an event heap.  It exercises the
+exact same decision code as the threaded runtime (``repro.core.steal``) so the
+paper's mathematics is tested once and measured twice.
+
+Modelled costs (all configurable):
+
+* task duration         = task_cost / speed_i * lognormal(noise)
+* info propagation      : process i's view of process j lags by the ring
+                          distance d(i,j): each relay forwards at its own task
+                          boundaries, so per-hop delay = hop_latency + half the
+                          relay's current mean task time.  Radius R caps the
+                          window (Eq. 5) — beyond R there is NO information.
+* info send overhead    : comm_cell_cost * cells per boundary (grows with R —
+                          the Fig. 4 tradeoff).
+* steal                 : round-trip steal_latency + per-task payload cost;
+                          claimed tasks leave the victim at decision time and
+                          reach the thief after the transfer delay.
+* CTWS token            : hop time = token_base + token_per_node * P; only the
+                          holder steals (half of the most-loaded victim).
+* LW                    : serialized leader (service time per request +
+                          request round-trip); worker 0 runs slower by
+                          leader_overhead (the co-located distributor thread).
+"""
+
+from __future__ import annotations
+
+import heapq
+from bisect import bisect_right
+from dataclasses import dataclass, field, replace
+from typing import Literal
+
+import numpy as np
+
+from .steal import plan_steal
+
+__all__ = [
+    "SimConfig",
+    "SimResult",
+    "table2_speeds",
+    "simulate",
+    "CORE_STEPS",
+]
+
+CORE_STEPS = (24, 16, 8, 4, 2, 1)  # descending, process 0 = fastest (Fig. 5)
+
+# Table 2: how many nodes of each core count per configuration.
+_TABLE2 = {
+    # cores:      1   2   4   8  16  24
+    "C1": {1: 2, 2: 1, 4: 1, 8: 1, 16: 1, 24: 2},  # 8 nodes
+    "C2": {1: 4, 2: 2, 4: 2, 8: 2, 16: 2, 24: 4},  # 16 nodes
+    "C3": {1: 8, 2: 4, 4: 4, 8: 4, 16: 4, 24: 8},  # 32 nodes
+    "C4": {1: 16, 2: 8, 4: 8, 8: 8, 16: 8, 24: 16},  # 64 nodes
+    "C5": {1: 32, 2: 16, 4: 16, 8: 16, 16: 16, 24: 32},  # 128 nodes
+}
+
+
+def table2_speeds(config: str, order: str = "interleaved") -> np.ndarray:
+    """Node speed vector for configuration C1..C5.
+
+    ``order`` is the launcher's RANK PLACEMENT policy — a knob the paper
+    never discusses but which dominates radius-limited work-stealing:
+
+    * ``"interleaved"`` (default): round-robin across core classes, so every
+      radius-R window contains a representative speed mix and the local
+      fair-share (Eq. 5) approximates the global one.  This is what our
+      launcher does on a real cluster and what reproduces the paper's gains.
+    * ``"blocked"``: SLURM-het-job-style blocks of equal nodes (fastest
+      first, process 0 = fastest as in Fig. 5).  Adversarial for small R:
+      windows deep inside a slow block see no fast nodes — kept as the
+      placement ablation in ``benchmarks/``.
+    """
+    counts = dict(_TABLE2[config])
+    speeds: list[float] = []
+    if order == "blocked":
+        for cores in CORE_STEPS:
+            speeds.extend([float(cores)] * counts[cores])
+    elif order == "interleaved":
+        while any(v > 0 for v in counts.values()):
+            for cores in CORE_STEPS:
+                if counts[cores] > 0:
+                    speeds.append(float(cores))
+                    counts[cores] -= 1
+    else:
+        raise ValueError(f"unknown placement order {order!r}")
+    return np.asarray(speeds, dtype=np.float64)
+
+
+@dataclass(frozen=True)
+class SimConfig:
+    speeds: np.ndarray
+    num_tasks: int
+    task_cost: float = 60.0  # seconds of work per task at speed 1.0
+    noise: float = 0.03
+    seed: int = 0
+    # --- A2WS ---
+    radius: int | None = None  # None -> 20% of P (paper's operating point)
+    hop_latency: float = 2e-3
+    # §2.1: info is forwarded "during the task execution if the application
+    # allows it" (the seismic app does) — relays poll every ``info_poll``
+    # virtual seconds, so per-hop delay is NOT bound to task boundaries.
+    info_poll: float = 0.25
+    comm_cell_cost: float = 3e-4
+    steal_latency: float = 2e-2
+    steal_per_task: float = 2e-3
+    retry_interval: float = 5e-2
+    # --- CTWS ---
+    token_base: float = 2e-3
+    token_per_node: float = 2.5e-4
+    # --- LW ---
+    request_rtt: float = 8e-3
+    leader_service: float = 4e-3
+    leader_overhead: float = 0.18
+
+    @property
+    def P(self) -> int:
+        return len(self.speeds)
+
+    def with_(self, **kw) -> "SimConfig":
+        return replace(self, **kw)
+
+
+@dataclass
+class SimResult:
+    makespan: float
+    per_node_tasks: list[int]
+    per_node_busy: list[float]
+    steals: int
+    failed_steals: int
+    moved_tasks: int
+    records: list[tuple[int, float, float]] = field(default_factory=list)
+    # records: (node, start, end) per task, for Fig. 5 style plots
+
+    def summary(self) -> str:
+        return (
+            f"makespan={self.makespan:.2f}s steals={self.steals} "
+            f"failed={self.failed_steals} moved={self.moved_tasks}"
+        )
+
+
+# --------------------------------------------------------------------------- #
+#                                   A2WS                                       #
+# --------------------------------------------------------------------------- #
+
+
+class _History:
+    """Append-only (time, n, t) history per node for delayed views."""
+
+    __slots__ = ("times", "ns", "ts")
+
+    def __init__(self) -> None:
+        self.times: list[float] = [0.0]
+        self.ns: list[float] = [0.0]
+        self.ts: list[float] = [float("nan")]
+
+    def append(self, time: float, n: float, t: float) -> None:
+        self.times.append(time)
+        self.ns.append(n)
+        self.ts.append(t)
+
+    def at(self, time: float) -> tuple[float, float]:
+        k = bisect_right(self.times, time) - 1
+        return self.ns[k], self.ts[k]
+
+
+def _ring_dist(i: int, j: int, p: int) -> int:
+    d = abs(i - j)
+    return min(d, p - d)
+
+
+def _simulate_a2ws(cfg: SimConfig) -> SimResult:
+    p = cfg.P
+    rng = np.random.default_rng(cfg.seed)
+    radius = cfg.radius if cfg.radius is not None else max(1, round(0.2 * p))
+    radius = min(radius, p // 2)
+
+    # Static block partition (paper §2.2.1).
+    base, rem = divmod(cfg.num_tasks, p)
+    queue = np.array([base + (1 if i < rem else 0) for i in range(p)], np.int64)
+    executed = np.zeros(p, np.int64)
+    runtime_sum = np.zeros(p, np.float64)
+    busy = np.zeros(p, np.float64)
+    hist = [_History() for _ in range(p)]
+    for i in range(p):
+        hist[i].append(0.0, float(queue[i]), float("nan"))
+    cur_t = np.full(p, np.nan)  # latest own estimate (for relay pacing)
+    pending_dur = np.zeros(p, np.float64)  # duration of the task in flight
+    idle_since = np.full(p, -1.0)
+    records: list[tuple[int, float, float]] = []
+    steals = failed = moved = 0
+    remaining_global = cfg.num_tasks
+
+    # Event heap: (time, seq, kind, node, payload)
+    heap: list[tuple[float, int, str, int, int]] = []
+    seq = 0
+
+    def push_event(time: float, kind: str, node: int, payload: int = 0) -> None:
+        nonlocal seq
+        heapq.heappush(heap, (time, seq, kind, node, payload))
+        seq += 1
+
+    def start_task(i: int, now: float) -> None:
+        nonlocal remaining_global
+        if queue[i] <= 0:
+            idle_since[i] = now
+            push_event(now + cfg.retry_interval, "retry", i, 0)
+            return
+        queue[i] -= 1
+        dur = cfg.task_cost / cfg.speeds[i]
+        if cfg.noise:
+            dur *= float(rng.lognormal(0.0, cfg.noise))
+        # Sender-side info-communication overhead at the task boundary: the
+        # dirty part of the window goes to both neighbours (≤ R cells each).
+        overhead = cfg.comm_cell_cost * 2 * radius
+        pending_dur[i] = dur
+        push_event(now + overhead + dur, "finish", i)
+        busy[i] += dur
+        records.append((i, now + overhead, now + overhead + dur))
+
+    def total_tasks_of(i: int) -> float:
+        return float(executed[i] + queue[i])
+
+    def view_for(i: int, now: float) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Delayed (n, t, queued-estimate) views of the window around i."""
+        n_view = np.zeros(p)
+        t_view = np.ones(p)
+        queued = np.zeros(p)
+        # Relay pacing: per-hop delay = link latency + half the relay's poll
+        # interval (relays forward mid-task, §2.1 — capped by poll period,
+        # never by the 60 s task duration).
+        t_relay = np.where(np.isnan(cur_t), cfg.task_cost / cfg.speeds, cur_t)
+        for off in range(-radius, radius + 1):
+            j = (i + off) % p
+            if j == i:
+                n_view[j] = total_tasks_of(i)
+                t_view[j] = _own_t(i, now)
+                queued[j] = queue[i]
+                continue
+            d = _ring_dist(i, j, p)
+            step = 1 if off > 0 else -1
+            delay = 0.0
+            for h in range(1, d + 1):
+                relay = (i + step * h) % p
+                delay += cfg.hop_latency + 0.5 * min(
+                    t_relay[relay], cfg.info_poll
+                )
+            n_j, t_j = hist[j].at(max(now - delay, 0.0))
+            if t_j != t_j:  # no report yet: preemptive wall-time estimate
+                t_j = max(now, 1e-9)
+            n_view[j] = n_j
+            t_view[j] = t_j
+            done_est = min(now / max(t_j, 1e-9), n_j)
+            queued[j] = max(n_j - done_est, 0.0)
+        return n_view, t_view, queued
+
+    def _own_t(i: int, now: float) -> float:
+        if executed[i] > 0:
+            return runtime_sum[i] / executed[i]
+        return max(now, 1e-9)
+
+    def try_steal(i: int, now: float) -> bool:
+        nonlocal steals, failed, moved
+        n_view, t_view, queued = view_for(i, now)
+        decision = plan_steal(
+            rng, i, n_view, t_view, queued, radius, idle=queue[i] <= 1
+        )
+        if decision is None:
+            return False
+        v = decision.victim
+        avail = int(queue[v])  # get-accumulate ground truth at the victim
+        take = min(decision.amount, avail)
+        if take <= 0:
+            failed += 1
+            return False
+        queue[v] -= take  # claimed now (tail shifted)
+        hist[v].append(now, total_tasks_of(v), _own_t(v, now))
+        arrive = now + cfg.steal_latency + cfg.steal_per_task * take
+        push_event(arrive, "receive", i, take)
+        steals += 1
+        moved += take
+        return True
+
+    # Boot: all nodes start their first task at t=0.
+    for i in range(p):
+        start_task(i, 0.0)
+
+    makespan = 0.0
+    total_done = 0
+    while heap and total_done < cfg.num_tasks:
+        now, _, kind, i, payload = heapq.heappop(heap)
+        if kind == "finish":
+            executed[i] += 1
+            total_done += 1
+            runtime_sum[i] += pending_dur[i]
+            makespan = max(makespan, now)
+            # Update own info + history (Alg. 1 line 11 + communicate).
+            cur_t[i] = runtime_sum[i] / executed[i]
+            hist[i].append(now, total_tasks_of(i), cur_t[i])
+            # Smart stealing right after finishing a task (preemptive).
+            try_steal(i, now)
+            start_task(i, now)
+        elif kind == "receive":
+            hist[i].append(now, total_tasks_of(i) + payload, _own_t(i, now))
+            queue[i] += payload
+            if idle_since[i] >= 0.0:
+                idle_since[i] = -1.0
+                start_task(i, now)
+        elif kind == "retry":
+            if queue[i] > 0 or idle_since[i] < 0.0:
+                continue  # no longer idle
+            if total_done >= cfg.num_tasks:
+                continue
+            if not try_steal(i, now):
+                # mild exponential backoff so long idle tails stay cheap
+                delay = cfg.retry_interval * (1.3 ** min(payload, 12))
+                push_event(now + delay, "retry", i, payload + 1)
+            # on success the stolen tasks arrive via a "receive" event
+
+    return SimResult(
+        makespan=makespan,
+        per_node_tasks=[int(x) for x in executed],
+        per_node_busy=[float(b) for b in busy],
+        steals=steals,
+        failed_steals=failed,
+        moved_tasks=moved,
+        records=records,
+    )
+
+
+# --------------------------------------------------------------------------- #
+#                                   CTWS                                       #
+# --------------------------------------------------------------------------- #
+
+
+def _simulate_ctws(cfg: SimConfig) -> SimResult:
+    p = cfg.P
+    rng = np.random.default_rng(cfg.seed)
+    base, rem = divmod(cfg.num_tasks, p)
+    queue = np.array([base + (1 if i < rem else 0) for i in range(p)], np.int64)
+    executed = np.zeros(p, np.int64)
+    busy = np.zeros(p, np.float64)
+    idle = np.zeros(p, bool)
+    records: list[tuple[int, float, float]] = []
+    steals = moved = 0
+    hop = cfg.token_base + cfg.token_per_node * p
+
+    heap: list[tuple[float, int, str, int, int]] = []
+    seq = 0
+
+    def push_event(time: float, kind: str, node: int, payload: int = 0) -> None:
+        nonlocal seq
+        heapq.heappush(heap, (time, seq, kind, node, payload))
+        seq += 1
+
+    def start_task(i: int, now: float) -> None:
+        if queue[i] <= 0:
+            idle[i] = True
+            return
+        idle[i] = False
+        queue[i] -= 1
+        dur = cfg.task_cost / cfg.speeds[i]
+        if cfg.noise:
+            dur *= float(rng.lognormal(0.0, cfg.noise))
+        push_event(now + dur, "finish", i)
+        busy[i] += dur
+        records.append((i, now, now + dur))
+
+    for i in range(p):
+        start_task(i, 0.0)
+    push_event(hop, "token", 0)
+
+    makespan = 0.0
+    total_done = 0
+    while heap and total_done < cfg.num_tasks:
+        now, _, kind, i, payload = heapq.heappop(heap)
+        if kind == "finish":
+            executed[i] += 1
+            total_done += 1
+            makespan = max(makespan, now)
+            start_task(i, now)
+        elif kind == "receive":
+            queue[i] += payload
+            if idle[i]:
+                start_task(i, now)
+        elif kind == "token":
+            # Holder steals only if its queue is empty (CTWS rule).
+            if queue[i] == 0 and idle[i]:
+                victim = int(np.argmax(queue))
+                if victim != i and queue[victim] > 0:
+                    take = max(1, int(queue[victim]) // 2)
+                    queue[victim] -= take
+                    arrive = now + cfg.steal_latency + cfg.steal_per_task * take
+                    push_event(arrive, "receive", i, take)
+                    steals += 1
+                    moved += take
+            if total_done < cfg.num_tasks:
+                push_event(now + hop, "token", (i + 1) % p)
+
+    return SimResult(
+        makespan=makespan,
+        per_node_tasks=[int(x) for x in executed],
+        per_node_busy=[float(b) for b in busy],
+        steals=steals,
+        failed_steals=0,
+        moved_tasks=moved,
+        records=records,
+    )
+
+
+# --------------------------------------------------------------------------- #
+#                                    LW                                        #
+# --------------------------------------------------------------------------- #
+
+
+def _simulate_lw(cfg: SimConfig) -> SimResult:
+    p = cfg.P
+    rng = np.random.default_rng(cfg.seed)
+    speeds = cfg.speeds.copy()
+    speeds[0] *= 1.0 - cfg.leader_overhead  # co-located distributor thread
+    executed = np.zeros(p, np.int64)
+    busy = np.zeros(p, np.float64)
+    records: list[tuple[int, float, float]] = []
+    remaining = cfg.num_tasks
+    leader_free = 0.0
+
+    heap: list[tuple[float, int, str, int]] = []
+    seq = 0
+
+    def push_event(time: float, kind: str, node: int) -> None:
+        nonlocal seq
+        heapq.heappush(heap, (time, seq, kind, node))
+        seq += 1
+
+    def request(i: int, now: float) -> None:
+        """Worker i asks the leader for a task; leader is a serial server."""
+        nonlocal leader_free, remaining
+        if remaining <= 0:
+            return
+        arrive_leader = now + cfg.request_rtt / 2
+        service_start = max(arrive_leader, leader_free)
+        leader_free = service_start + cfg.leader_service
+        remaining -= 1
+        push_event(leader_free + cfg.request_rtt / 2, "task", i)
+
+    for i in range(p):
+        request(i, 0.0)
+
+    makespan = 0.0
+    total_done = 0
+    while heap and total_done < cfg.num_tasks:
+        now, _, kind, i = heapq.heappop(heap)
+        if kind == "task":
+            dur = cfg.task_cost / speeds[i]
+            if cfg.noise:
+                dur *= float(rng.lognormal(0.0, cfg.noise))
+            push_event(now + dur, "finish", i)
+            busy[i] += dur
+            records.append((i, now, now + dur))
+        elif kind == "finish":
+            executed[i] += 1
+            total_done += 1
+            makespan = max(makespan, now)
+            request(i, now)
+
+    return SimResult(
+        makespan=makespan,
+        per_node_tasks=[int(x) for x in executed],
+        per_node_busy=[float(b) for b in busy],
+        steals=0,
+        failed_steals=0,
+        moved_tasks=0,
+        records=records,
+    )
+
+
+# --------------------------------------------------------------------------- #
+
+
+def simulate(policy: Literal["a2ws", "ctws", "lw"], cfg: SimConfig) -> SimResult:
+    if policy == "a2ws":
+        return _simulate_a2ws(cfg)
+    if policy == "ctws":
+        return _simulate_ctws(cfg)
+    if policy == "lw":
+        return _simulate_lw(cfg)
+    raise ValueError(f"unknown policy {policy!r}")

@@ -1,0 +1,303 @@
+"""Smart-stealing mathematics of A2WS (paper §2.2, Eqs. 2-10).
+
+Host-side (scalar / numpy) implementation used by the threaded runtime and the
+discrete-event simulator.  ``repro.core.device_sched`` re-implements the same
+formulas in jnp for the jitted shard_map scheduler; ``tests/test_steal.py``
+asserts the two agree.
+
+Conventions
+-----------
+* ``n[j]``  -- TOTAL number of tasks of process j: already executed + queued
+               (paper: "including the already executed and available").
+* ``t[j]``  -- average runtime per task of process j (seconds).  Processes that
+               have not yet finished a task report their *elapsed wall time*
+               (preemptive stealing, §2.2.1) so they look progressively slower.
+* ``S_i``   -- ideal steal rate of process i (Eq. 4/5).  S_i > 0: i must steal
+               S_i tasks; S_i < 0: others should steal -S_i tasks from i.
+
+Note on Eq. 6: the paper prints ``U(S) = (n_k + S)/t_k`` but defines speed as
+``1/t_k`` (Eq. 2), so the expected *runtime* of ``n_k + S`` tasks is
+``(n_k + S) * t_k``.  We implement the dimensionally-consistent product and
+flag the discrepancy here; every downstream property (γ-rounding minimises the
+pairwise makespan) only makes sense with the product form.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Sequence
+
+import numpy as np
+
+__all__ = [
+    "ideal_runtime",
+    "tail_steal_amount",
+    "steal_rate",
+    "steal_rate_radius",
+    "pair_steal_rate",
+    "expected_runtime",
+    "gamma",
+    "round_steal_rate",
+    "victim_weights",
+    "select_victim",
+    "neighborhood",
+]
+
+_EPS = 1e-12
+
+
+def ideal_runtime(n: Sequence[float], t: Sequence[float]) -> float:
+    """Eq. 2: t_ideal = N / T with N = sum(n_j) and T = sum(1/t_j)."""
+    n = np.asarray(n, dtype=np.float64)
+    t = np.asarray(t, dtype=np.float64)
+    big_n = float(n.sum())
+    big_t = float((1.0 / np.maximum(t, _EPS)).sum())
+    return big_n / max(big_t, _EPS)
+
+
+def steal_rate(i: int, n: Sequence[float], t: Sequence[float]) -> float:
+    """Eq. 4: S_i = N / (t_i * T) - n_i over the FULL system."""
+    n = np.asarray(n, dtype=np.float64)
+    t = np.asarray(t, dtype=np.float64)
+    big_n = float(n.sum())
+    big_t = float((1.0 / np.maximum(t, _EPS)).sum())
+    return big_n / (max(float(t[i]), _EPS) * max(big_t, _EPS)) - float(n[i])
+
+
+def neighborhood(i: int, num_procs: int, radius: int) -> list[int]:
+    """Indices of the radius-R subsystem around i on the ring (Eq. 1).
+
+    ``P_sub = 2R + 1`` positions, wrapping around the ring; if the radius
+    covers the whole ring the neighborhood is simply every process once.
+    """
+    if 2 * radius + 1 >= num_procs:
+        return list(range(num_procs))
+    return [(i + d) % num_procs for d in range(-radius, radius + 1)]
+
+
+def steal_rate_radius(
+    i: int, n: Sequence[float], t: Sequence[float], radius: int
+) -> float:
+    """Eq. 5: the steal rate computed only over the radius-R subsystem."""
+    n = np.asarray(n, dtype=np.float64)
+    t = np.asarray(t, dtype=np.float64)
+    idx = neighborhood(i, len(n), radius)
+    sub_n = float(n[idx].sum())
+    sub_t = float((1.0 / np.maximum(t[idx], _EPS)).sum())
+    return sub_n / (max(float(t[i]), _EPS) * max(sub_t, _EPS)) - float(n[i])
+
+
+def pair_steal_rate(n_i: float, t_i: float, n_j: float, t_j: float) -> float:
+    """Eq. 10 (simplified Eq. 9): in-pair steal rate of thief i vs victim j.
+
+    S_j = (n_i + n_j) * t_j / (t_i + t_j) - n_i
+    Positive => thief i should take S_j tasks from j when only the pair is
+    considered (used when the subsystem looks balanced, §2.2.2).
+    """
+    return (n_i + n_j) * t_j / max(t_i + t_j, _EPS) - n_i
+
+
+def expected_runtime(s: float, n_k: float, t_k: float) -> float:
+    """Eq. 6: runtime of process k after its queue changes by ``s`` tasks."""
+    return max(n_k + s, 0.0) * t_k
+
+
+def gamma(
+    s: float, n_thief: float, t_thief: float, n_victim: float, t_victim: float
+) -> float:
+    """Eq. 8: pairwise makespan if the thief steals ``s`` tasks."""
+    return max(
+        expected_runtime(-s, n_victim, t_victim),
+        expected_runtime(+s, n_thief, t_thief),
+    )
+
+
+def round_steal_rate(
+    s: float, n_thief: float, t_thief: float, n_victim: float, t_victim: float
+) -> int:
+    """Eq. 7: round fractional S to the integer minimising γ (pair makespan)."""
+    lo, hi = math.floor(s), math.ceil(s)
+    if lo == hi:
+        return int(lo)
+    g_lo = gamma(lo, n_thief, t_thief, n_victim, t_victim)
+    g_hi = gamma(hi, n_thief, t_thief, n_victim, t_victim)
+    return int(lo) if g_lo < g_hi else int(hi)
+
+
+def victim_weights(
+    i: int,
+    n: Sequence[float],
+    t: Sequence[float],
+    queued: Sequence[float],
+    radius: int,
+) -> tuple[np.ndarray, np.ndarray, str]:
+    """Victim-selection probabilities (§2.2.2) for thief ``i``.
+
+    Returns ``(candidates, weights, criterion)`` where ``criterion`` is
+    ``"closest-rate"`` or ``"in-pair"``.
+
+    Criterion 1 — *closest rate*: candidates are subsystem members with
+    S_j < 0 (surplus) and a non-empty queue.  The best victim is the one whose
+    surplus ``-S_j`` most closely matches the thief's deficit ``S_i`` (one
+    steal balances both).  Weights scale with the surplus volume and decay
+    with the mismatch, so concurrent thieves favour victims that can actually
+    satisfy them while still spreading probabilistically (the paper specifies
+    the criterion but not the exact weight; this is our realisation).
+
+    Criterion 2 — *in-pair comparison* (Eq. 9/10): used when no candidate has
+    S_j < 0 but queued tasks remain.  Each pair is evaluated in isolation and
+    weighted by the pairwise steal volume.
+    """
+    n = np.asarray(n, dtype=np.float64)
+    t = np.asarray(t, dtype=np.float64)
+    queued = np.asarray(queued, dtype=np.float64)
+    idx = [j for j in neighborhood(i, len(n), radius) if j != i]
+    if not idx:
+        return np.array([], dtype=np.int64), np.array([]), "closest-rate"
+
+    s_i = steal_rate_radius(i, n, t, radius)
+    s_j = np.array([steal_rate_radius(j, n, t, radius) for j in idx])
+    has_tasks = queued[idx] > 0.0
+
+    surplus = (s_j < 0.0) & has_tasks
+    if surplus.any():
+        cand = np.asarray(idx, dtype=np.int64)[surplus]
+        volume = -s_j[surplus]
+        mismatch = np.abs(volume - max(s_i, 0.0))
+        w = volume / (1.0 + mismatch)
+        return cand, w / w.sum(), "closest-rate"
+
+    # In-pair fallback: the subsystem looks balanced yet queues are non-empty.
+    pair = np.array(
+        [pair_steal_rate(n[i], t[i], n[j], t[j]) for j in idx], dtype=np.float64
+    )
+    good = (pair > 0.0) & has_tasks
+    if not good.any():
+        return np.array([], dtype=np.int64), np.array([]), "in-pair"
+    cand = np.asarray(idx, dtype=np.int64)[good]
+    w = pair[good]
+    return cand, w / w.sum(), "in-pair"
+
+
+def select_victim(
+    rng: np.random.Generator,
+    i: int,
+    n: Sequence[float],
+    t: Sequence[float],
+    queued: Sequence[float],
+    radius: int,
+) -> tuple[int | None, str]:
+    """Sample a victim for thief ``i`` (§2.2.2); None if no viable victim."""
+    cand, w, crit = victim_weights(i, n, t, queued, radius)
+    if len(cand) == 0:
+        return None, crit
+    return int(rng.choice(cand, p=w)), crit
+
+
+@dataclass(frozen=True)
+class StealDecision:
+    """A fully-resolved steal: victim and integer task count."""
+
+    victim: int
+    amount: int
+    criterion: str
+
+
+def tail_steal_amount(
+    q_thief: float, t_thief: float, q_victim: float, t_victim: float
+) -> int:
+    """γ-optimal steal count on REMAINING work (the §2.2 'final stages' rule).
+
+    Minimises ``max((q_v - k)·t_v, (q_i + k)·t_i)`` over integer k — the pair
+    makespan from *now* — and returns k only if it strictly beats k = 0.
+    Used when the thief is (nearly) idle: it prevents a fast process from
+    idling while a slow one still holds queued tasks, and conversely returns
+    0 when a slow thief would only stretch the pair makespan.
+    """
+    if q_victim < 1.0:
+        return 0
+    k_star = (q_victim * t_victim - q_thief * t_thief) / max(
+        t_thief + t_victim, _EPS
+    )
+    best_k, best_g = 0, max(q_victim * t_victim, q_thief * t_thief)
+    for k in {math.floor(k_star), math.ceil(k_star), 1}:
+        k = int(min(max(k, 0), q_victim))
+        g = max((q_victim - k) * t_victim, (q_thief + k) * t_thief)
+        if g < best_g - 1e-12 or (g == best_g and k < best_k):
+            best_k, best_g = k, g
+    return best_k
+
+
+def plan_steal(
+    rng: np.random.Generator,
+    i: int,
+    n: Sequence[float],
+    t: Sequence[float],
+    queued: Sequence[float],
+    radius: int,
+    idle: bool = False,
+) -> StealDecision | None:
+    """End-to-end smart-stealing decision for thief ``i`` (Alg. 1 lines 4-6).
+
+    Computes S_i (Eq. 5), selects a victim (§2.2.2), rounds with γ (Eq. 7) and
+    clamps to the victim's queued tasks.  Returns None when i should not steal.
+
+    ``idle``: the thief's deque is (nearly) empty.  Preemptive stealing
+    (S_i > 0 on TOTAL task counts, Eqs. 4-8) is the primary mechanism; a
+    (nearly) idle thief additionally applies the remaining-work γ tail rule
+    (``tail_steal_amount``) so that (a) fast processes never idle while slow
+    ones hold queued tasks (the paper's "final stages" behaviour) and (b)
+    the §2.1 relay works — an intermediary with S_i <= 0 still pulls tasks
+    across the ring when that strictly reduces the pair makespan, letting a
+    distant fast process re-steal them.
+    """
+    n = np.asarray(n, dtype=np.float64)
+    t = np.asarray(t, dtype=np.float64)
+    queued = np.asarray(queued, dtype=np.float64)
+    s_i = steal_rate_radius(i, n, t, radius)
+    if s_i > 0.0:
+        victim, crit = select_victim(rng, i, n, t, queued, radius)
+        if victim is not None:
+            if crit == "in-pair":
+                s = pair_steal_rate(
+                    float(n[i]), float(t[i]), float(n[victim]), float(t[victim])
+                )
+            else:
+                s = min(s_i, -steal_rate_radius(victim, n, t, radius))
+            if s > 0.0:
+                amount = round_steal_rate(
+                    s, float(n[i]), float(t[i]), float(n[victim]), float(t[victim])
+                )
+                amount = int(min(amount, queued[victim]))
+                if amount >= 1:
+                    return StealDecision(victim=victim, amount=amount, criterion=crit)
+
+    # Tail rule: γ on remaining (queued) work against a probabilistically
+    # chosen loaded victim.  This is the "final stages" behaviour of §2.2 —
+    # a fast process must not idle while a slower one holds queued tasks.
+    #
+    # Guards: (a) victim queue estimates are FLOORED — tasks are integral,
+    # and a fractional estimate (q=1.04) must not let a thief see a strict
+    # γ-improvement where the true comparison is a tie (this enforces the
+    # paper's "slow processes cannot steal at the end"); (b) a BUSY thief may
+    # only tail-steal from victims at most as fast as itself — a pairwise
+    # improvement that parks work on a slow node is a global regression
+    # (other fast thieves would have drained that victim).  Idle thieves are
+    # exempt from (b): that is the §2.1 relay (γ still protects the pair).
+    window = [j for j in neighborhood(i, len(n), radius) if j != i]
+    loaded = [
+        j for j in window
+        if math.floor(queued[j]) >= 1 and (idle or t[i] <= t[j])
+    ]
+    if not loaded:
+        return None
+    w = np.array([queued[j] * t[j] for j in loaded], dtype=np.float64)
+    victim = int(rng.choice(loaded, p=w / w.sum()))
+    amount = tail_steal_amount(
+        float(queued[i]), float(t[i]),
+        float(math.floor(queued[victim])), float(t[victim]),
+    )
+    if amount < 1:
+        return None
+    return StealDecision(victim=victim, amount=amount, criterion="tail")

@@ -1,0 +1,5 @@
+from .ops import fd3d_step, default_backend
+from .fd3d import fd3d_pallas
+from . import ref
+
+__all__ = ["fd3d_step", "default_backend", "fd3d_pallas", "ref"]

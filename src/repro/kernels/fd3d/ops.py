@@ -1,0 +1,46 @@
+"""Public op for the fused FD3D step: picks Pallas or the jnp oracle.
+
+``fd3d_step(u, u_prev, c2dt2, dx)`` is what the seismic substrate calls.  On
+CPU (this container) the Pallas kernel runs in interpret mode for correctness
+validation but the jnp oracle is faster, so the default backend is "ref" on
+CPU and "pallas" on TPU.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .fd3d import fd3d_pallas
+
+__all__ = ["fd3d_step", "default_backend"]
+
+
+def default_backend() -> str:
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+@functools.partial(jax.jit, static_argnames=("dx", "backend", "bz"))
+def fd3d_step(
+    u: jax.Array,
+    u_prev: jax.Array,
+    c2dt2: jax.Array,
+    *,
+    dx: float,
+    backend: str | None = None,
+    bz: int = 8,
+) -> jax.Array:
+    backend = backend or default_backend()
+    if backend == "ref":
+        return ref.fd3d_step(u, u_prev, c2dt2, dx)
+    if backend == "pallas":
+        return fd3d_pallas(
+            u, u_prev, c2dt2, dx=dx, bz=bz,
+            interpret=jax.default_backend() != "tpu",
+        )
+    if backend == "pallas_interpret":
+        return fd3d_pallas(u, u_prev, c2dt2, dx=dx, bz=bz, interpret=True)
+    raise ValueError(f"unknown backend {backend!r}")

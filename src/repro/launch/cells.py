@@ -1,0 +1,204 @@
+"""Dry-run cell builders: one lowerable program per (arch x shape x mesh).
+
+``lower_cell`` returns a ``jax.stages.Lowered`` for the cell's step function
+against ShapeDtypeStruct inputs — nothing is allocated, so the full-size
+configs (incl. the 671B one) lower on this CPU container.  ``analyze`` turns
+(lowered, compiled) into the roofline record: per-device FLOPs/bytes from
+``cost_analysis``, per-device collective payloads parsed from the
+post-partitioning HLO, memory footprint from ``memory_analysis``.
+"""
+
+from __future__ import annotations
+
+import os
+import re
+import time
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import Shape, input_specs
+from repro.models import lm
+from repro.models.config import ModelConfig
+from repro.optim.adamw import AdamWConfig
+from repro.parallel.sharding import ParallelContext, make_context
+from repro.serve.engine import abstract_caches, jit_decode_step, jit_prefill_step
+from repro.train.step import abstract_train_state, jit_train_step
+
+__all__ = ["lower_cell", "analyze", "collective_bytes", "HW", "roofline_terms"]
+
+# TPU v5e-like hardware constants (per chip).
+HW = {
+    "peak_flops": 197e12,  # bf16 FLOP/s
+    "hbm_bw": 819e9,  # bytes/s
+    "link_bw": 50e9,  # bytes/s per ICI link
+}
+
+
+def lower_cell(cfg: ModelConfig, shape: Shape, ctx: ParallelContext):
+    """Lower the cell's step.  Returns (lowered, meta)."""
+    t0 = time.time()
+    batch = input_specs(cfg, shape)
+    if shape.kind == "train":
+        opt_cfg = AdamWConfig(moment_dtype="bfloat16")
+        params_sds, opt_sds, _ = abstract_train_state(cfg, opt_cfg)
+        fn = jit_train_step(cfg, ctx, opt_cfg, batch, donate=True)
+        lowered = fn.lower(params_sds, opt_sds, batch)
+    elif shape.kind == "prefill":
+        params_sds, _ = lm.init_shapes(cfg)
+        fn = jit_prefill_step(cfg, ctx, batch)
+        lowered = fn.lower(params_sds, batch)
+    elif shape.kind == "decode":
+        params_sds, _ = lm.init_shapes(cfg)
+        b, s = shape.global_batch, shape.seq_len
+        caches = abstract_caches(cfg, b, s)
+        serve_layout = os.environ.get("REPRO_SERVE_LAYOUT", "1") != "0"
+        fn = jit_decode_step(cfg, ctx, b, s, donate=True,
+                             serve_layout=serve_layout)
+        lowered = fn.lower(params_sds, batch["tokens"], caches, batch["pos"])
+    else:
+        raise ValueError(shape.kind)
+    return lowered, {"lower_s": round(time.time() - t0, 2)}
+
+
+# ------------------------------------------------------------- HLO analysis
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"([a-z]+\d*)\[([\d,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s*(\([^=]*?\)|\S+)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\("
+)
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """bytes of one 'dtype[d0,d1]{...}' or a '(tuple, of, them)'."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Per-device payload bytes by collective kind (result-shape accounting).
+
+    The compiled module is the per-device SPMD program, so result shapes are
+    per-shard — summing them gives per-device bytes entering/leaving this
+    chip's links.  all-reduce is counted twice (reduce-scatter + all-gather
+    phases of a ring implementation).  ``*-done`` ops are skipped (their
+    ``*-start`` already counted).
+    """
+    out: dict[str, int] = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        shape_str, kind = m.group(1), m.group(2)
+        nbytes = _shape_bytes(shape_str)
+        factor = 2 if kind == "all-reduce" else 1
+        out[kind] = out.get(kind, 0) + nbytes * factor
+    return out
+
+
+def roofline_terms(
+    flops_per_dev: float,
+    bytes_per_dev: float,
+    coll_bytes_per_dev: float,
+) -> dict[str, float]:
+    """The three roofline terms in seconds (per the assignment formulas,
+    evaluated per-chip: global/(chips*X) == per_device/X)."""
+    return {
+        "t_compute": flops_per_dev / HW["peak_flops"],
+        "t_memory": bytes_per_dev / HW["hbm_bw"],
+        "t_collective": coll_bytes_per_dev / HW["link_bw"],
+    }
+
+
+def analyze(lowered, compiled, cfg: ModelConfig, shape: Shape, chips: int) -> dict:
+    """Full roofline record for one compiled cell.
+
+    FLOPs/bytes/collective payloads come from the trip-count-aware HLO walk
+    (``hlo_analysis``) — XLA's ``cost_analysis`` counts while bodies once, so
+    a 61-layer scan and its in-loop FSDP all-gathers would be 61x under-
+    counted.  The raw XLA numbers are kept in the record as ``xla_*``.
+    """
+    from repro.launch.hlo_analysis import analyze_hlo
+
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):  # older jax returns [dict]
+        cost = cost[0]
+    xla_flops = float(cost.get("flops", 0.0))
+    xla_bytes = float(cost.get("bytes accessed", 0.0))
+    hlo = compiled.as_text()
+    costs = analyze_hlo(hlo)
+    flops = costs.flops
+    byts = costs.bytes
+    coll = {k: int(v) for k, v in costs.coll.items()}
+    coll_total = costs.coll_bytes
+    terms = roofline_terms(flops, byts, coll_total)
+    dom = max(terms, key=terms.get)
+
+    mem = compiled.memory_analysis()
+    mem_rec = {}
+    for attr in (
+        "argument_size_in_bytes",
+        "output_size_in_bytes",
+        "temp_size_in_bytes",
+        "alias_size_in_bytes",
+        "generated_code_size_in_bytes",
+    ):
+        v = getattr(mem, attr, None)
+        if v is not None:
+            mem_rec[attr] = int(v)
+    live = (
+        mem_rec.get("argument_size_in_bytes", 0)
+        + mem_rec.get("output_size_in_bytes", 0)
+        + mem_rec.get("temp_size_in_bytes", 0)
+        - mem_rec.get("alias_size_in_bytes", 0)
+    )
+
+    # MODEL_FLOPS = 6*N*D (dense) / 6*N_active*D (MoE); D = trained tokens
+    # for train cells, else fwd-only 2*N*D.
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        model_flops = 6 * n_active * tokens
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        model_flops = 2 * n_active * tokens
+    else:
+        tokens = shape.global_batch  # one token per sequence
+        model_flops = 2 * n_active * tokens
+    flops_global = flops * chips
+    useful = model_flops / flops_global if flops_global else float("nan")
+
+    return {
+        "arch": cfg.name,
+        "shape": shape.name,
+        "kind": shape.kind,
+        "chips": chips,
+        "flops_per_device": flops,
+        "bytes_per_device": byts,
+        "collective_bytes_per_device": coll_total,
+        "collectives": coll,
+        "xla_flops_per_device": xla_flops,
+        "xla_bytes_per_device": xla_bytes,
+        **{k: v for k, v in terms.items()},
+        "dominant": dom,
+        "model_flops": float(model_flops),
+        "useful_flops_ratio": useful,
+        "memory": mem_rec,
+        "live_bytes_per_device": int(live),
+        "fits_hbm16g": bool(live <= 16 * 1024**3),
+    }

@@ -1,0 +1,299 @@
+"""Trip-count-aware cost analysis of compiled (post-SPMD) HLO text.
+
+``compiled.cost_analysis()`` visits every computation ONCE — a 61-layer scan
+body is counted as one layer, and the FSDP all-gathers inside it vanish from
+the totals.  This module re-derives the three roofline inputs by walking the
+call graph and scaling while-loop bodies by their trip count (XLA records
+``known_trip_count`` in ``backend_config`` for scan-derived loops):
+
+  flops  — 2 * prod(result dims) * prod(lhs contracting dims) per ``dot``
+  bytes  — per instruction: result + operand bytes.  Post-fusion, every
+           top-level instruction is one kernel, so its operands/results are
+           HBM traffic (fusion-internal ops are skipped; free ops — tuple,
+           gte, parameter, constant, bitcast — are skipped).
+  coll   — collective payloads by kind (result-shape accounting, per-device;
+           all-reduce counted 2x for its reduce-scatter + all-gather phases).
+
+Shapes are per-shard in the partitioned module, so everything is per-device.
+"""
+
+from __future__ import annotations
+
+import math
+import re
+from dataclasses import dataclass, field
+from functools import lru_cache
+
+__all__ = ["analyze_hlo", "HloCosts"]
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"([a-z]+[0-9a-z]*)\[([\d,]*)\]")
+# %name = <type> opcode(operands...), attrs
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*((?:\([^)]*\))|(?:[a-z][\w\[\],{}\/* ]*?))\s+"
+    r"([a-z][\w\-]*)\((.*)$"
+)
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALL_RE = re.compile(r"(?:calls|to_apply|body)=%([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%([\w.\-]+)")
+_DOT_LHS_C = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+_FREE_OPS = {
+    "tuple", "get-tuple-element", "parameter", "constant", "bitcast",
+    "after-all", "opt-barrier", "partition-id", "replica-id",
+}
+_COLLECTIVES = {
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+}
+
+
+def _dims(shape_str: str) -> list[tuple[str, list[int]]]:
+    out = []
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt = m.group(1)
+        if dt not in _DTYPE_BYTES:
+            continue
+        dims = [int(d) for d in m.group(2).split(",") if d]
+        out.append((dt, dims))
+    return out
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _dims(shape_str):
+        total += math.prod(dims) * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class _Instr:
+    name: str
+    rtype: str
+    opcode: str
+    rest: str  # operands + attrs (raw tail of the line)
+
+
+@dataclass
+class HloCosts:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll: dict = field(default_factory=dict)
+
+    def scaled(self, k: float) -> "HloCosts":
+        return HloCosts(
+            self.flops * k,
+            self.bytes * k,
+            {kk: v * k for kk, v in self.coll.items()},
+        )
+
+    def add(self, other: "HloCosts") -> None:
+        self.flops += other.flops
+        self.bytes += other.bytes
+        for k, v in other.coll.items():
+            self.coll[k] = self.coll.get(k, 0.0) + v
+
+    @property
+    def coll_bytes(self) -> float:
+        return float(sum(self.coll.values()))
+
+
+def _is_convert_only(instrs: list["_Instr"]) -> bool:
+    """True for computations of shape (parameter* , convert ROOT)."""
+    ops = [i.opcode for i in instrs]
+    return (
+        len(ops) >= 2
+        and ops.count("convert") == 1
+        and all(o in ("parameter", "convert") for o in ops)
+    )
+
+
+def _parse_computations(text: str) -> dict[str, list[_Instr]]:
+    comps: dict[str, list[_Instr]] = {}
+    cur: list[_Instr] | None = None
+    cur_name = None
+    for line in text.splitlines():
+        ls = line.rstrip()
+        if cur is None:
+            m = re.match(r"^(?:ENTRY\s+)?%([\w.\-]+)\s*(?:\(|\{)", ls)
+            if m and ls.endswith("{"):
+                cur_name = m.group(1)
+                cur = []
+            continue
+        if ls == "}" or ls.startswith("} "):
+            comps[cur_name] = cur
+            cur = None
+            continue
+        m = _INSTR_RE.match(ls)
+        if m:
+            cur.append(_Instr(m.group(1), m.group(2), m.group(3), m.group(4)))
+    if cur is not None and cur_name is not None:
+        comps[cur_name] = cur
+    return comps
+
+
+def analyze_hlo(text: str, entry_hint: str | None = None) -> HloCosts:
+    comps = _parse_computations(text)
+    entry = None
+    m = re.search(r"^ENTRY\s+%([\w.\-]+)", text, re.M)
+    if m:
+        entry = m.group(1)
+    if entry is None:
+        entry = entry_hint or max(comps, key=lambda k: len(comps[k]))
+
+    shape_of: dict[str, dict[str, str]] = {
+        cname: {i.name: i.rtype for i in instrs}
+        for cname, instrs in comps.items()
+    }
+
+    memo: dict[str, HloCosts] = {}
+
+    def _sliced_bytes(ins: _Instr, shapes: dict, kind: str) -> float:
+        """Traffic of slice-like ops: only the touched window moves.
+
+        dynamic-slice / gather read+write the RESULT window (+indices);
+        dynamic-update-slice / scatter read+write the UPDATE operand — the
+        big aliased buffer itself is not streamed (in-place on hardware).
+        """
+        rbytes = _shape_bytes(ins.rtype)
+        op_bytes = [
+            _shape_bytes(shapes[on])
+            for on in _OPERAND_RE.findall(ins.rest.split(", calls=")[0])
+            if on in shapes
+        ]
+        if kind in ("dynamic-slice", "gather"):
+            return 2.0 * rbytes
+        # dus/scatter: everything except the aliased big buffer, twice
+        small = sum(op_bytes) - (max(op_bytes) if op_bytes else 0)
+        return 2.0 * small
+
+    _SLICE_ROOTS = {"dynamic-slice", "gather", "dynamic-update-slice",
+                    "scatter"}
+
+    def comp_cost(cname: str) -> HloCosts:
+        if cname in memo:
+            return memo[cname]
+        memo[cname] = HloCosts()  # cycle guard
+        total = HloCosts()
+        shapes = shape_of.get(cname, {})
+        for ins in comps.get(cname, []):
+            op = ins.opcode
+            if op in _FREE_OPS:
+                continue
+            base = op[:-6] if op.endswith("-start") else op
+            if op.endswith("-done"):
+                continue
+            if base in _COLLECTIVES:
+                nb = _shape_bytes(ins.rtype)
+                f = 2 if base == "all-reduce" else 1
+                total.coll[base] = total.coll.get(base, 0.0) + nb * f
+                total.bytes += _shape_bytes(ins.rtype) * 2  # read + write
+                continue
+            if op == "while":
+                trip = 1
+                tm = _TRIP_RE.search(ins.rest)
+                if tm:
+                    trip = int(tm.group(1))
+                bm = _CALL_RE.search(ins.rest)
+                if bm:
+                    total.add(comp_cost(bm.group(1)).scaled(trip))
+                cm = _COND_RE.search(ins.rest)
+                if cm:
+                    total.add(comp_cost(cm.group(1)).scaled(trip))
+                continue
+            if op in ("fusion", "call", "conditional", "map", "custom-call"):
+                # Skip convert-only kernels: the CPU backend materialises
+                # bf16->f32 copies of dot inputs (no native bf16 matmul);
+                # the TPU MXU reads bf16 directly, so these are not traffic
+                # on the target hardware.
+                inner_names = _CALL_RE.findall(ins.rest)
+                inner = comps.get(inner_names[0], []) if inner_names else []
+                if inner and _is_convert_only(inner):
+                    continue
+                root = inner[-1].opcode if inner else None
+                if root in _SLICE_ROOTS:
+                    total.bytes += _sliced_bytes(ins, shapes, root)
+                    continue
+                # memory at the kernel boundary; a fusion operand consumed
+                # ONLY through dynamic-slice inside the kernel streams the
+                # slice, not the full (e.g. layer-stacked) buffer
+                total.bytes += _shape_bytes(ins.rtype)
+                params = {}
+                for i2 in inner:
+                    if i2.opcode == "parameter":
+                        m2 = re.match(r"\s*(\d+)", i2.rest)
+                        if m2:
+                            params[int(m2.group(1))] = i2.name
+                operand_names = _OPERAND_RE.findall(
+                    ins.rest.split(", calls=")[0]
+                )
+                for oi, on in enumerate(operand_names):
+                    if on not in shapes:
+                        continue
+                    full = _shape_bytes(shapes[on])
+                    pname = params.get(oi)
+                    eff = full
+                    if pname is not None and inner:
+                        pat = re.compile(r"%" + re.escape(pname) + r"\b")
+                        consumers = [
+                            j for j in inner
+                            if j.opcode != "parameter" and pat.search(j.rest)
+                        ]
+                        if consumers and all(
+                            c.opcode == "dynamic-slice" for c in consumers
+                        ):
+                            eff = min(
+                                full,
+                                sum(_shape_bytes(c.rtype) for c in consumers),
+                            )
+                    total.bytes += eff
+                # inner dots/collectives still counted (bytes of inner ops
+                # are skipped below because inner comps are reached only via
+                # this call edge — mark by scaling bytes to 0?  Simpler: the
+                # CPU backend keeps dots un-fused, so inner comps here are
+                # elementwise; count their flops (0) and skip their bytes.
+                for cn in _CALL_RE.findall(ins.rest):
+                    inner = comp_cost(cn)
+                    total.flops += inner.flops
+                    for k, v in inner.coll.items():
+                        total.coll[k] = total.coll.get(k, 0.0) + v
+                continue
+            if op == "dot":
+                rbytes = _shape_bytes(ins.rtype)
+                total.bytes += rbytes
+                for on in _OPERAND_RE.findall(ins.rest):
+                    if on in shapes:
+                        total.bytes += _shape_bytes(shapes[on])
+                rd = _dims(ins.rtype)
+                out_elems = math.prod(rd[0][1]) if rd else 0
+                k_elems = 1
+                cm = _DOT_LHS_C.search(ins.rest)
+                ops = _OPERAND_RE.findall(ins.rest)
+                if cm and ops:
+                    lhs_shape = shapes.get(ops[0])
+                    if lhs_shape:
+                        ld = _dims(lhs_shape)
+                        if ld:
+                            for ci in (int(c) for c in cm.group(1).split(",") if c):
+                                if ci < len(ld[0][1]):
+                                    k_elems *= ld[0][1][ci]
+                total.flops += 2.0 * out_elems * k_elems
+                continue
+            if op in _SLICE_ROOTS:
+                total.bytes += _sliced_bytes(ins, shapes, op)
+                continue
+            # default: one kernel — result + operands are HBM traffic
+            total.bytes += _shape_bytes(ins.rtype)
+            for on in _OPERAND_RE.findall(ins.rest):
+                if on in shapes:
+                    total.bytes += _shape_bytes(shapes[on])
+        memo[cname] = total
+        return total
+
+    return comp_cost(entry)

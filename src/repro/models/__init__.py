@@ -1,0 +1,7 @@
+from . import attention, blocks, layers, lm, moe, rglru, ssm
+from .config import MLAConfig, ModelConfig, MoEConfig, RGLRUConfig, SSMConfig
+
+__all__ = [
+    "attention", "blocks", "layers", "lm", "moe", "rglru", "ssm",
+    "MLAConfig", "ModelConfig", "MoEConfig", "RGLRUConfig", "SSMConfig",
+]

@@ -1,0 +1,166 @@
+"""Shared building blocks: params-with-logical-axes, norms, MLPs, RoPE.
+
+Parameters are plain nested dicts of jax.Arrays.  Every leaf is created via
+``param(key, shape, axes, ...)`` which returns a ``Leaf`` carrying the array
+together with its *logical axis names*; ``split(tree)`` separates the arrays
+from the logical specs.  ``repro.parallel.sharding`` maps logical axes to mesh
+axes (TP on 'model', FSDP on 'data', replication across 'pod').
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "Leaf",
+    "param",
+    "ksplit",
+    "split",
+    "rms_norm",
+    "dense",
+    "swiglu",
+    "geglu_mlp",
+    "rope",
+    "mrope",
+    "softcap",
+]
+
+
+@dataclasses.dataclass
+class Leaf:
+    value: Any  # jax.Array | ShapeDtypeStruct
+    axes: tuple[str | None, ...]
+
+
+def ksplit(key, n: int):
+    """random.split that tolerates abstract (None) keys."""
+    if key is None:
+        return [None] * n
+    return jax.random.split(key, n)
+
+
+def param(
+    key: jax.Array | None,
+    shape: tuple[int, ...],
+    axes: tuple[str | None, ...],
+    dtype=jnp.bfloat16,
+    scale: float | str = "fan_in",
+    init: str = "normal",
+) -> Leaf:
+    """Create one parameter Leaf.  ``axes`` names each dim logically.
+
+    ``key=None`` produces an abstract Leaf (ShapeDtypeStruct) — used by the
+    dry-run to build full-size parameter trees without allocating anything.
+    """
+    assert len(shape) == len(axes), (shape, axes)
+    if key is None:
+        return Leaf(jax.ShapeDtypeStruct(shape, jnp.dtype(dtype)), axes)
+    if init == "zeros":
+        return Leaf(jnp.zeros(shape, dtype), axes)
+    if init == "ones":
+        return Leaf(jnp.ones(shape, dtype), axes)
+    if scale == "fan_in":
+        std = 1.0 / math.sqrt(shape[0] if len(shape) > 1 else 1.0)
+    elif scale == "embed":
+        std = 1.0
+    else:
+        std = float(scale)
+    v = jax.random.truncated_normal(key, -3.0, 3.0, shape, jnp.float32) * std
+    return Leaf(v.astype(dtype), axes)
+
+
+def split(tree) -> tuple[Any, Any]:
+    """Split a Leaf-tree into (arrays, logical-axes) trees."""
+    leaves_is = lambda x: isinstance(x, Leaf)  # noqa: E731
+    params = jax.tree.map(lambda l: l.value, tree, is_leaf=leaves_is)
+    specs = jax.tree.map(lambda l: l.axes, tree, is_leaf=leaves_is)
+    return params, specs
+
+
+# ----------------------------------------------------------------- functional
+def rms_norm(x: jax.Array, gamma: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps) * (1.0 + gamma.astype(jnp.float32))
+    return out.astype(dt)
+
+
+def dense(x: jax.Array, w: jax.Array, b: jax.Array | None = None) -> jax.Array:
+    y = jnp.einsum("...d,df->...f", x, w)
+    if b is not None:
+        y = y + b
+    return y
+
+
+def _act(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}[name]
+
+
+def swiglu(x, w_gate, w_up, w_down, act: str = "silu"):
+    """Gated MLP: down( act(gate(x)) * up(x) )."""
+    return dense(_act(act)(dense(x, w_gate)) * dense(x, w_up), w_down)
+
+
+def geglu_mlp(x, w_in, w_down, act: str = "gelu"):
+    """Fused-in gated MLP where w_in packs [gate; up] (seamless/simple MLP
+    uses plain two-matrix form when gate dim == 0)."""
+    h = dense(x, w_in)
+    g, u = jnp.split(h, 2, axis=-1)
+    return dense(_act(act)(g) * u, w_down)
+
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    if not cap:
+        return x
+    return jnp.tanh(x / cap) * cap
+
+
+# ----------------------------------------------------------------------- RoPE
+def _rope_angles(positions: jax.Array, dim: int, theta: float) -> jax.Array:
+    """positions [...,] -> angles [..., dim/2]."""
+    freqs = theta ** (-jnp.arange(0, dim, 2, dtype=jnp.float32) / dim)
+    return positions[..., None].astype(jnp.float32) * freqs
+
+
+def _apply_angles(x: jax.Array, ang: jax.Array) -> jax.Array:
+    """x [..., dim] rotated by angles [..., dim/2] (interleaved halves)."""
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    c, s = jnp.cos(ang), jnp.sin(ang)
+    dt = x.dtype
+    x1, x2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], -1).astype(dt)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Standard RoPE.  x [B, S, H, D]; positions [B, S]."""
+    ang = _rope_angles(positions, x.shape[-1], theta)  # [B, S, D/2]
+    return _apply_angles(x, ang[:, :, None, :])
+
+
+def mrope(
+    x: jax.Array,
+    positions: jax.Array,  # [3, B, S] (t, h, w) position ids
+    theta: float,
+    sections: tuple[int, int, int],
+) -> jax.Array:
+    """Qwen2-VL multimodal RoPE: frequency bands split across t/h/w ids.
+
+    ``sections`` partitions the HALF-dim (D/2) frequency channels; text tokens
+    have t==h==w so M-RoPE degenerates to standard RoPE for them.
+    """
+    d = x.shape[-1]
+    assert sum(sections) == d // 2, (sections, d)
+    freqs = theta ** (-jnp.arange(0, d, 2, dtype=jnp.float32) / d)  # [D/2]
+    sec_id = jnp.repeat(
+        jnp.arange(3), jnp.array(sections), total_repeat_length=d // 2
+    )  # [D/2] which of t/h/w drives this channel
+    pos = positions.astype(jnp.float32)  # [3, B, S]
+    pos_per_channel = pos[sec_id]  # [D/2, B, S]
+    ang = jnp.moveaxis(pos_per_channel, 0, -1) * freqs  # [B, S, D/2]
+    return _apply_angles(x, ang[:, :, None, :])

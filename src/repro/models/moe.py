@@ -1,0 +1,250 @@
+"""Mixture-of-Experts layer with expert parallelism over the 'model' axis.
+
+Design (baseline, recorded as such in EXPERIMENTS.md §Perf):
+
+* Routing (softmax top-k, optional normalisation) happens in the auto-sharded
+  (pjit) world — logits are tiny.
+* Expert compute runs inside ``shard_map``: activations are **replicated
+  across the TP/EP ('model') axis** (exactly what Megatron-style TP leaves
+  between blocks), so each EP rank simply *selects* the tokens routed to its
+  local experts into a fixed-capacity buffer ``[E_loc, C, d]``, runs the gated
+  MLP as one batched einsum, scatter-adds weighted outputs into a local
+  [tokens, d] partial, and a single ``psum`` over 'model' combines partials —
+  the same collective volume as one TP all-reduce.  (The all-to-all dispatch
+  variant is the §Perf hillclimb.)
+* Tokens beyond an expert's capacity ``C = ceil(tokens*top_k/E * cf)`` are
+  dropped (standard GShard semantics); tests use cf large enough for zero
+  drops when checking numerics against the dense oracle.
+* The shared expert (DeepSeek) is a TP-sharded dense MLP folded into the SAME
+  psum, costing no extra collective.
+
+``moe_dense_ref`` is the all-experts-dense oracle used by unit tests.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from .config import ModelConfig, MoEConfig
+from .layers import ksplit, Leaf, dense, param
+
+__all__ = [
+    "moe_params",
+    "route",
+    "moe_apply",
+    "moe_dense_ref",
+    "aux_load_balance_loss",
+]
+
+
+def moe_params(key, cfg: ModelConfig) -> dict:
+    m: MoEConfig = cfg.moe
+    d = cfg.d_model
+    f = m.d_expert
+    ks = ksplit(key, 6)
+    p = {
+        "router": param(ks[0], (d, m.num_experts), ("embed", None), dtype=jnp.float32),
+        "w1": param(ks[1], (m.num_experts, d, f), ("experts", "embed", "ffn")),
+        "w3": param(ks[2], (m.num_experts, d, f), ("experts", "embed", "ffn")),
+        "w2": param(ks[3], (m.num_experts, f, d), ("experts", "ffn", "embed")),
+    }
+    if m.num_shared:
+        fs = (m.d_shared or f) * m.num_shared
+        p["ws1"] = param(ks[4], (d, fs), ("embed", "ffn"))
+        p["ws3"] = param(ks[5], (d, fs), ("embed", "ffn"))
+        p["ws2"] = param(ks[4], (fs, d), ("ffn", "embed"))
+    return p
+
+
+def route(router_w: jax.Array, x: jax.Array, m: MoEConfig):
+    """Top-k routing.  Returns (top_idx [B,S,k], top_w [B,S,k], probs)."""
+    logits = jnp.einsum(
+        "bsd,de->bse", x.astype(jnp.float32), router_w.astype(jnp.float32)
+    )
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_i = lax.top_k(probs, m.top_k)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+    return top_i, top_w.astype(x.dtype), probs
+
+
+def aux_load_balance_loss(probs: jax.Array, top_i: jax.Array, m: MoEConfig):
+    """Switch-style load-balance auxiliary loss."""
+    e = m.num_experts
+    counts = jnp.zeros((e,), jnp.float32).at[top_i.reshape(-1)].add(1.0)
+    frac_tokens = counts / jnp.maximum(counts.sum(), 1.0)
+    frac_probs = probs.mean(axis=(0, 1))
+    return e * jnp.sum(frac_tokens * frac_probs) * m.aux_loss_coef
+
+
+def _expert_compute(xbuf, w1, w3, w2, act):
+    h = jnp.einsum("ecd,edf->ecf", xbuf, w1)
+    u = jnp.einsum("ecd,edf->ecf", xbuf, w3)
+    h = act(h) * u
+    return jnp.einsum("ecf,efd->ecd", h, w2)
+
+
+def _dispatch_local(
+    x2d: jax.Array,  # [T, d] local tokens (flattened b*s)
+    top_i: jax.Array,  # [T, k]
+    top_w: jax.Array,  # [T, k]
+    w1, w3, w2,  # [E_loc, ...] local expert weights
+    *,
+    m: MoEConfig,
+    rank: jax.Array,
+    act,
+) -> jax.Array:
+    """Select->compute->scatter-add for this rank's experts.  [T, d] partial."""
+    t, d_model = x2d.shape
+    e_loc = w1.shape[0]
+    cap = int(math.ceil(t * m.top_k / m.num_experts * m.capacity_factor))
+    lo = rank * e_loc
+
+    eid = top_i.reshape(-1)  # [T*k]
+    wgt = top_w.reshape(-1)
+    tok = jnp.repeat(jnp.arange(t, dtype=jnp.int32), m.top_k)
+    local_e = eid - lo
+    mine = (local_e >= 0) & (local_e < e_loc)
+    sort_key = jnp.where(mine, local_e, e_loc)  # strangers sort last
+    order = jnp.argsort(sort_key, stable=True)
+    key_sorted = sort_key[order]
+    starts = jnp.searchsorted(key_sorted, jnp.arange(e_loc + 1))
+    slot_sorted = jnp.arange(key_sorted.shape[0], dtype=jnp.int32) - starts[
+        jnp.clip(key_sorted, 0, e_loc)
+    ].astype(jnp.int32)
+    ok = (key_sorted < e_loc) & (slot_sorted < cap)
+    le_s = jnp.clip(key_sorted, 0, e_loc - 1)
+    tok_s = tok[order]
+    wgt_s = wgt[order]
+    # gather tokens into the capacity buffer
+    buf = jnp.zeros((e_loc, cap, d_model), x2d.dtype)
+    buf = buf.at[
+        jnp.where(ok, le_s, e_loc - 1),
+        jnp.where(ok, slot_sorted, cap),  # cap -> dropped
+    ].set(x2d[tok_s], mode="drop")
+    ybuf = _expert_compute(buf, w1, w3, w2, act)
+    # scatter-add weighted outputs back to token order
+    out = jnp.zeros((t, d_model), x2d.dtype)
+    vals = ybuf[le_s, jnp.clip(slot_sorted, 0, cap - 1)] * wgt_s[:, None]
+    out = out.at[jnp.where(ok, tok_s, t)].add(vals, mode="drop")
+    return out
+
+
+def moe_apply(
+    params: dict,
+    x: jax.Array,  # [B, S, d]
+    top_i: jax.Array,
+    top_w: jax.Array,
+    cfg: ModelConfig,
+    ctx=None,  # ParallelContext | None
+    act=jax.nn.silu,
+) -> jax.Array:
+    """Expert-parallel MoE forward (+ shared expert).
+
+    Two device layouts, selected by ``ctx.ep_axes``:
+
+    * ``("model",)`` (training): experts sharded over TP, activations
+      replicated across 'model'; each rank selects its experts' tokens,
+      computes, and one psum over 'model' combines — collective volume of a
+      single TP all-reduce.  FSDP over 'data' happens OUTSIDE (weight specs).
+    * full mesh (serving, ``serve_context``): every device owns E/P whole
+      experts.  Decode batches are tiny, so the TOKENS are gathered across
+      'data' (MBs) instead of gathering the WEIGHTS (GBs/layer, what the
+      training layout would do at decode), and one global psum combines.
+    """
+    m = cfg.moe
+    b, s, d = x.shape
+    ep_axes = getattr(ctx, "ep_axes", ("model",)) if ctx is not None else ("model",)
+    dp = ctx.dp_axes if ctx is not None else ("data",)
+    tp = ctx.tp_axis if ctx is not None else None
+    full_ep = ctx is not None and len(ep_axes) > 1
+
+    def body(x_loc, ti_loc, tw_loc, w1, w3, w2, *shared):
+        x2d = x_loc.reshape(-1, d)
+        ti2 = ti_loc.reshape(-1, m.top_k)
+        tw2 = tw_loc.reshape(-1, m.top_k)
+        if ctx is None or ctx.mesh is None:
+            rank = jnp.int32(0)
+        elif full_ep:
+            rank = jnp.int32(0)
+            for ax in ep_axes:
+                rank = rank * ctx.mesh.shape[ax] + lax.axis_index(ax)
+        else:
+            rank = lax.axis_index(tp)
+        if full_ep:
+            t_loc = x2d.shape[0]
+            x2d = lax.all_gather(x2d, dp, axis=0, tiled=True)
+            ti2 = lax.all_gather(ti2, dp, axis=0, tiled=True)
+            tw2 = lax.all_gather(tw2, dp, axis=0, tiled=True)
+        out = _dispatch_local(
+            x2d, ti2, tw2, w1, w3, w2, m=m, rank=rank, act=act,
+        )
+        if shared:
+            ws1, ws3, ws2 = shared
+            h = act(x2d @ ws1) * (x2d @ ws3)
+            sh = h @ ws2
+            if full_ep:
+                # shared weights are sharded over 'model' only, so every
+                # 'data' rank computes the same partial: pre-scale so the
+                # global psum does not multiply it by |data|.
+                dp_n = 1
+                for ax in dp:
+                    dp_n *= ctx.mesh.shape[ax]
+                sh = sh / dp_n
+            out = out + sh
+        if ctx is not None and ctx.mesh is not None:
+            out = lax.psum(out, ep_axes if full_ep else tp)
+            if full_ep:
+                start = (lax.axis_index(dp[-1]) if len(dp) == 1 else (
+                    lax.axis_index(dp[0]) * ctx.mesh.shape[dp[1]]
+                    + lax.axis_index(dp[1])
+                )) * t_loc
+                out = lax.dynamic_slice_in_dim(out, start, t_loc, 0)
+        return out.reshape(x_loc.shape)
+
+    args = [x, top_i, top_w, params["w1"], params["w3"], params["w2"]]
+    if m.num_shared:
+        args += [params["ws1"], params["ws3"], params["ws2"]]
+
+    if ctx is None or ctx.mesh is None:
+        return body(*args)
+
+    ep_spec = tuple(ep_axes) if full_ep else tp
+    in_specs = [
+        P(dp, None, None),  # x: replicated over model
+        P(dp, None, None),  # top_i
+        P(dp, None, None),  # top_w
+        P(ep_spec, None, None),  # w1
+        P(ep_spec, None, None),  # w3
+        P(ep_spec, None, None),  # w2
+    ]
+    if m.num_shared:
+        in_specs += [P(None, tp), P(None, tp), P(tp, None)]  # shared: TP
+    return jax.shard_map(
+        body,
+        mesh=ctx.mesh,
+        in_specs=tuple(in_specs),
+        out_specs=P(dp, None, None),
+        check_vma=False,
+    )(*args)
+
+
+def moe_dense_ref(params, x, cfg: ModelConfig, act=jax.nn.silu):
+    """Oracle: every expert computes every token; combine with top-k weights."""
+    m = cfg.moe
+    top_i, top_w, probs = route(params["router"], x, m)
+    h = jnp.einsum("bsd,edf->bsef", x, params["w1"])
+    u = jnp.einsum("bsd,edf->bsef", x, params["w3"])
+    y_all = jnp.einsum("bsef,efd->bsed", act(h) * u, params["w2"])
+    mask = jax.nn.one_hot(top_i, m.num_experts, dtype=x.dtype)  # [B,S,k,E]
+    w_full = (mask * top_w[..., None]).sum(-2)  # [B,S,E]
+    out = jnp.einsum("bsed,bse->bsd", y_all, w_full)
+    if m.num_shared:
+        h = act(x @ params["ws1"]) * (x @ params["ws3"])
+        out = out + h @ params["ws2"]
+    return out

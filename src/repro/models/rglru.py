@@ -1,0 +1,122 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin).
+
+Temporal-mixing block: two branches from the (normed) input —
+  gate branch:  linear -> GELU
+  x branch:     linear -> causal conv1d(K=4) -> RG-LRU
+merged multiplicatively, then projected back to d_model.
+
+RG-LRU recurrence (per channel):
+  r_t = sigmoid(W_a x_t + b_a)            recurrence gate
+  i_t = sigmoid(W_x x_t + b_x)            input gate
+  log a_t = -c * softplus(Lambda) * r_t   (so a_t in (0,1))
+  h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Train/prefill uses ``lax.associative_scan`` (log-depth — the reason this
+family handles the 500k-token shapes); decode is the O(1) single step.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig, RGLRUConfig
+from .layers import ksplit, Leaf, dense, param
+
+__all__ = [
+    "rglru_params",
+    "rglru_apply",
+    "rglru_decode",
+    "rglru_init_cache",
+    "rglru_naive",
+]
+
+
+def rglru_params(key, cfg: ModelConfig) -> dict:
+    r: RGLRUConfig = cfg.rglru
+    d, w = cfg.d_model, r.lru_width
+    ks = ksplit(key, 8)
+    return {
+        "in_x": param(ks[0], (d, w), ("embed", "ffn")),
+        "in_gate": param(ks[1], (d, w), ("embed", "ffn")),
+        "conv_w": param(ks[2], (r.d_conv, w), (None, "ffn"), scale=0.5),
+        "conv_b": param(ks[3], (w,), ("ffn",), init="zeros"),
+        "w_a": param(ks[4], (w, w), ("ffn", "ffn")),
+        "b_a": param(ks[4], (w,), ("ffn",), init="zeros"),
+        "w_i": param(ks[5], (w, w), ("ffn", "ffn")),
+        "b_i": param(ks[5], (w,), ("ffn",), init="zeros"),
+        "lam": Leaf(jnp.full((w,), 1.0, jnp.float32), ("ffn",)),
+        "out": param(ks[6], (w, d), ("ffn", "embed")),
+    }
+
+
+def _conv1d(u, w, b):
+    k = w.shape[0]
+    up = jnp.pad(u, ((0, 0), (k - 1, 0), (0, 0)))
+    return sum(up[:, i : i + u.shape[1], :] * w[i] for i in range(k)) + b
+
+
+def _gates(p, x, c_exp):
+    """log_a [B,S,W] and gated input, both f32."""
+    xf = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(xf @ p["w_a"].astype(jnp.float32) + p["b_a"].astype(jnp.float32))
+    i = jax.nn.sigmoid(xf @ p["w_i"].astype(jnp.float32) + p["b_i"].astype(jnp.float32))
+    log_a = -c_exp * jax.nn.softplus(p["lam"]) * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i * xf)
+    return a, b
+
+
+def rglru_apply(p: dict, xin: jax.Array, cfg: ModelConfig, return_cache=False):
+    """Full-sequence RG-LRU block.  xin [B,S,d] (already normed)."""
+    r: RGLRUConfig = cfg.rglru
+    gate = jax.nn.gelu(dense(xin, p["in_gate"]))
+    x = dense(xin, p["in_x"])
+    x = _conv1d(x, p["conv_w"], p["conv_b"])
+    a, b = _gates(p, x, r.c_exponent)
+
+    def combine(lhs, rhs):
+        a1, b1 = lhs
+        a2, b2 = rhs
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    h = h.astype(xin.dtype)
+    y = dense(h * gate, p["out"])
+    if return_cache:
+        conv_tail = dense(xin, p["in_x"])[:, -(r.d_conv - 1) :, :]
+        return y, (h[:, -1].astype(jnp.float32), conv_tail)
+    return y
+
+
+def rglru_naive(p: dict, xin: jax.Array, cfg: ModelConfig):
+    """Step-by-step oracle for tests."""
+    bsz = xin.shape[0]
+    cache = rglru_init_cache(cfg, bsz, dtype=xin.dtype)
+    outs = []
+    for t in range(xin.shape[1]):
+        y, cache = rglru_decode(p, xin[:, t : t + 1], cfg, cache)
+        outs.append(y)
+    return jnp.concatenate(outs, 1)
+
+
+def rglru_init_cache(cfg: ModelConfig, bsz: int, dtype=jnp.bfloat16):
+    r: RGLRUConfig = cfg.rglru
+    return (
+        jnp.zeros((bsz, r.lru_width), jnp.float32),
+        jnp.zeros((bsz, r.d_conv - 1, r.lru_width), dtype),
+    )
+
+
+def rglru_decode(p: dict, xin: jax.Array, cfg: ModelConfig, cache):
+    """One-token step.  xin [B,1,d]; cache = (h, conv_tail)."""
+    r: RGLRUConfig = cfg.rglru
+    hprev, conv_tail = cache
+    gate = jax.nn.gelu(dense(xin, p["in_gate"]))  # [B,1,W]
+    xproj = dense(xin, p["in_x"])
+    window = jnp.concatenate([conv_tail, xproj], 1)  # [B,K,W]
+    x = (window * p["conv_w"][None]).sum(1, keepdims=True) + p["conv_b"]
+    a, b = _gates(p, x, r.c_exponent)
+    h = a[:, 0] * hprev + b[:, 0]
+    y = dense((h[:, None, :]).astype(xin.dtype) * gate, p["out"])
+    return y, (h, window[:, 1:, :])

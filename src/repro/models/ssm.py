@@ -1,0 +1,220 @@
+"""Mamba-2 (SSD — state-space duality) mixing layer.
+
+Chunked SSD algorithm (train/prefill): sequence is split into chunks of Q
+tokens; within a chunk the quadratic "attention-like" form runs on the fly,
+across chunks a linear recurrence carries the [H, P, N] state.  Equivalent to
+the full recurrence (tested against ``ssd_naive``), cost O(S·Q + S·N·P).
+
+Decode keeps the state explicitly — O(1) per token, which is what makes the
+``long_500k`` shape feasible for this family.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig, SSMConfig
+from .layers import ksplit, Leaf, param
+
+__all__ = [
+    "ssm_params",
+    "ssm_apply",
+    "ssm_decode",
+    "ssd_naive",
+    "ssm_init_cache",
+]
+
+
+def ssm_params(key, cfg: ModelConfig) -> dict:
+    s: SSMConfig = cfg.ssm
+    d = cfg.d_model
+    d_in = s.expand * d
+    h = d_in // s.head_dim
+    g = s.n_groups
+    conv_ch = d_in + 2 * g * s.d_state
+    ks = ksplit(key, 6)
+    import numpy as np
+
+    dt = np.exp(
+        np.random.RandomState(0).uniform(
+            np.log(s.dt_min), np.log(s.dt_max), size=(h,)
+        )
+    )
+    dt_bias = dt + np.log(-np.expm1(-dt))  # inverse softplus
+    return {
+        # packed: [z (d_in), x (d_in), B (g*n), C (g*n), dt (h)]
+        "in_proj": param(
+            ks[0], (d, 2 * d_in + 2 * g * s.d_state + h), ("embed", "ffn")
+        ),
+        "conv_w": param(ks[1], (s.d_conv, conv_ch), (None, "ffn"), scale=0.5),
+        "conv_b": param(ks[2], (conv_ch,), ("ffn",), init="zeros"),
+        "a_log": Leaf(
+            jnp.log(jnp.arange(1, h + 1, dtype=jnp.float32)), ("heads",)
+        ),
+        "dt_bias": Leaf(jnp.asarray(dt_bias, jnp.float32), ("heads",)),
+        "d_skip": param(ks[3], (h,), ("heads",), init="ones"),
+        "norm": param(ks[4], (d_in,), ("ffn",), init="zeros"),
+        "out_proj": param(ks[5], (d_in, d), ("ffn", "embed")),
+    }
+
+
+def _conv1d(u: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Causal depthwise conv along S.  u [B,S,C], w [K,C]."""
+    k = w.shape[0]
+    up = jnp.pad(u, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(up[:, i : i + u.shape[1], :] * w[i] for i in range(k))
+    return out + b
+
+
+def _split_proj(zxbcdt, d_in, g, n, h):
+    z = zxbcdt[..., :d_in]
+    x = zxbcdt[..., d_in : 2 * d_in]
+    b = zxbcdt[..., 2 * d_in : 2 * d_in + g * n]
+    c = zxbcdt[..., 2 * d_in + g * n : 2 * d_in + 2 * g * n]
+    dt = zxbcdt[..., 2 * d_in + 2 * g * n :]
+    return z, x, b, c, dt
+
+
+def _gated_norm(y, z, gamma, eps):
+    dt = y.dtype
+    y = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(y * y, axis=-1, keepdims=True)
+    return (y * jax.lax.rsqrt(var + eps) * (1 + gamma.astype(jnp.float32))).astype(dt)
+
+
+def ssm_apply(p: dict, xin: jax.Array, cfg: ModelConfig, return_cache=False):
+    """Chunked SSD over the full sequence.  xin [B, S, d]."""
+    s: SSMConfig = cfg.ssm
+    bsz, slen, d = xin.shape
+    d_in = s.expand * d
+    h = d_in // s.head_dim
+    g, n, pdim, q = s.n_groups, s.d_state, s.head_dim, s.chunk
+    assert slen % q == 0, (slen, q)
+    nc = slen // q
+
+    zxbcdt = xin @ p["in_proj"]
+    z, x, bmat, cmat, dt = _split_proj(zxbcdt, d_in, g, n, h)
+    xbc_pre = jnp.concatenate([x, bmat, cmat], -1)  # pre-conv (cache tail)
+    xbc = jax.nn.silu(_conv1d(xbc_pre, p["conv_w"], p["conv_b"]))
+    x, bmat, cmat = (
+        xbc[..., :d_in],
+        xbc[..., d_in : d_in + g * n],
+        xbc[..., d_in + g * n :],
+    )
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # [B,S,H]
+    a = -jnp.exp(p["a_log"])  # [H]
+
+    xh = x.reshape(bsz, nc, q, h, pdim).astype(jnp.float32)
+    bh = bmat.reshape(bsz, nc, q, g, n).astype(jnp.float32)
+    ch = cmat.reshape(bsz, nc, q, g, n).astype(jnp.float32)
+    dtc = dt.reshape(bsz, nc, q, h)
+    hpg = h // g
+
+    da = dtc * a  # [B,NC,Q,H]
+    cum = jnp.cumsum(da, axis=2)
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # [B,NC,Q(t),Q(s),H]
+    tri = jnp.tril(jnp.ones((q, q), bool))
+    ldecay = jnp.where(tri[None, None, :, :, None], jnp.exp(seg), 0.0)
+
+    cb = jnp.einsum("bcqgn,bcsgn->bcqsg", ch, bh)  # [B,NC,Q,Q,G]
+    cb = jnp.repeat(cb, hpg, axis=-1)  # -> heads
+    m = cb * ldecay * dtc[:, :, None, :, :]  # weight on x_s
+    y_intra = jnp.einsum("bcqsh,bcshp->bcqhp", m, xh)
+
+    # chunk summary state: sum_s exp(cum_end - cum_s) dt_s B_s x_s^T
+    dec_end = jnp.exp(cum[:, :, -1:, :] - cum)  # [B,NC,Q,H]
+    bh_h = jnp.repeat(bh, hpg, axis=3)  # [B,NC,Q,H,N] (group -> heads)
+    bx = jnp.einsum("bcshn,bcshp,bcsh->bchpn", bh_h, xh, dec_end * dtc)
+
+    chunk_decay = jnp.exp(cum[:, :, -1, :])  # [B,NC,H]
+
+    def scan_fn(hstate, inp):
+        bx_c, dec_c = inp  # [B,H,P,N], [B,H]
+        h_out = hstate
+        hstate = hstate * dec_c[:, :, None, None] + bx_c
+        return hstate, h_out  # h_out = state BEFORE this chunk
+
+    h0 = jnp.zeros((bsz, h, pdim, n), jnp.float32)
+    hstate, h_prev = jax.lax.scan(
+        scan_fn,
+        h0,
+        (jnp.moveaxis(bx, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)),
+    )
+    h_prev = jnp.moveaxis(h_prev, 0, 1)  # [B,NC,H,P,N]
+
+    ch_h = jnp.repeat(ch, hpg, axis=3)  # [B,NC,Q,H,N]
+    y_inter = jnp.einsum("bcqhn,bchpn->bcqhp", ch_h, h_prev) * jnp.exp(cum)[
+        ..., None
+    ]
+    y = (y_intra + y_inter).reshape(bsz, slen, h, pdim)
+    y = y + xh.reshape(bsz, slen, h, pdim) * p["d_skip"][None, None, :, None]
+    y = y.reshape(bsz, slen, d_in).astype(xin.dtype)
+    y = _gated_norm(y, z, p["norm"], cfg.norm_eps)
+    out = y @ p["out_proj"]
+    if return_cache:
+        conv_tail = xbc_pre[:, -(s.d_conv - 1) :, :]
+        return out, (hstate, conv_tail.astype(xin.dtype))
+    return out
+
+
+def ssd_naive(p: dict, xin: jax.Array, cfg: ModelConfig):
+    """Token-by-token recurrence oracle (slow; tests only)."""
+    s: SSMConfig = cfg.ssm
+    bsz, slen, d = xin.shape
+    cache = ssm_init_cache(cfg, bsz, dtype=xin.dtype)
+    outs = []
+    for t in range(slen):
+        y, cache = ssm_decode(p, xin[:, t : t + 1], cfg, cache)
+        outs.append(y)
+    return jnp.concatenate(outs, axis=1)
+
+
+def ssm_init_cache(cfg: ModelConfig, bsz: int, dtype=jnp.bfloat16):
+    s: SSMConfig = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    h = d_in // s.head_dim
+    conv_ch = d_in + 2 * s.n_groups * s.d_state
+    return (
+        jnp.zeros((bsz, h, s.head_dim, s.d_state), jnp.float32),
+        jnp.zeros((bsz, s.d_conv - 1, conv_ch), dtype),
+    )
+
+
+def ssm_decode(p: dict, xin: jax.Array, cfg: ModelConfig, cache):
+    """One-token step.  xin [B, 1, d]; cache = (state, conv_tail)."""
+    s: SSMConfig = cfg.ssm
+    bsz, _, d = xin.shape
+    d_in = s.expand * d
+    h = d_in // s.head_dim
+    g, n, pdim = s.n_groups, s.d_state, s.head_dim
+    hpg = h // g
+    state, conv_tail = cache
+
+    zxbcdt = xin @ p["in_proj"]
+    z, x, bmat, cmat, dt = _split_proj(zxbcdt, d_in, g, n, h)
+    xbc = jnp.concatenate([x, bmat, cmat], -1)  # [B,1,C]
+    window = jnp.concatenate([conv_tail, xbc], axis=1)  # [B,K,C]
+    conv_out = (window * p["conv_w"][None]).sum(1, keepdims=True) + p["conv_b"]
+    xbc = jax.nn.silu(conv_out)
+    x, bmat, cmat = (
+        xbc[..., :d_in],
+        xbc[..., d_in : d_in + g * n],
+        xbc[..., d_in + g * n :],
+    )
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])[:, 0]  # [B,H]
+    a = -jnp.exp(p["a_log"])
+    dec = jnp.exp(dt * a)  # [B,H]
+    xh = x.reshape(bsz, h, pdim).astype(jnp.float32)
+    bh = jnp.repeat(bmat.reshape(bsz, g, n), hpg, axis=1)  # [B,H,N]
+    ch = jnp.repeat(cmat.reshape(bsz, g, n), hpg, axis=1)
+    state = state * dec[:, :, None, None] + jnp.einsum(
+        "bhp,bhn,bh->bhpn", xh, bh, dt
+    )
+    y = jnp.einsum("bhpn,bhn->bhp", state, ch)
+    y = y + xh * p["d_skip"][None, :, None]
+    y = y.reshape(bsz, 1, d_in).astype(xin.dtype)
+    y = _gated_norm(y, z, p["norm"], cfg.norm_eps)
+    out = y @ p["out_proj"]
+    new_tail = window[:, 1:, :]
+    return out, (state, new_tail)

@@ -1,0 +1,3 @@
+from .sharding import ParallelContext, make_context, shardings_for, spec_for
+
+__all__ = ["ParallelContext", "make_context", "shardings_for", "spec_for"]

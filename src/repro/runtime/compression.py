@@ -1,0 +1,78 @@
+"""Gradient compression for cross-group (slow-link) reduction.
+
+int8 per-tensor quantisation with **error feedback**: the residual of each
+compression round is added back before the next one, so the bias vanishes and
+SGD-style convergence is preserved (Karimireddy et al., 2019).  Used by the
+heterogeneous-DP runtime when combining gradients across worker groups whose
+interconnect is slow (cross-pod DCI), cutting gradient bytes 4x vs f32.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["quantize", "dequantize", "ErrorFeedback", "compressed_bytes"]
+
+
+def quantize(x: jax.Array) -> tuple[np.ndarray, float]:
+    xf = np.asarray(x, dtype=np.float32)
+    scale = float(np.max(np.abs(xf))) / 127.0 if xf.size else 0.0
+    if scale == 0.0:
+        return np.zeros(xf.shape, np.int8), 0.0
+    q = np.clip(np.rint(xf / scale), -127, 127).astype(np.int8)
+    return q, scale
+
+
+def dequantize(q: np.ndarray, scale: float) -> np.ndarray:
+    return q.astype(np.float32) * scale
+
+
+def compressed_bytes(tree) -> int:
+    return sum(int(np.prod(x.shape)) + 4 for x in jax.tree.leaves(tree))
+
+
+class ErrorFeedback:
+    """Per-link error-feedback compressor over a gradient pytree."""
+
+    def __init__(self) -> None:
+        self._residual = None
+
+    def compress(self, grads):
+        """Returns (quantised tree of (q, scale)), updating the residual."""
+        if self._residual is None:
+            self._residual = jax.tree.map(
+                lambda g: np.zeros(g.shape, np.float32), grads
+            )
+        corrected = jax.tree.map(
+            lambda g, r: np.asarray(g, np.float32) + r, grads, self._residual
+        )
+        packed = jax.tree.map(quantize, corrected)
+        self._residual = _residual_update(corrected, packed)
+        return packed
+
+    @staticmethod
+    def decompress(packed):
+        return _tree_map_packed(lambda p: dequantize(*p), packed)
+
+
+def _is_packed(x) -> bool:
+    return (
+        isinstance(x, tuple)
+        and len(x) == 2
+        and isinstance(x[0], np.ndarray)
+        and x[0].dtype == np.int8
+    )
+
+
+def _tree_map_packed(fn, packed):
+    return jax.tree.map(fn, packed, is_leaf=_is_packed)
+
+
+def _residual_update(corrected, packed):
+    flat_c, treedef = jax.tree_util.tree_flatten(corrected)
+    flat_p = treedef.flatten_up_to(packed)
+    return treedef.unflatten(
+        [c - dequantize(*p) for c, p in zip(flat_c, flat_p)]
+    )

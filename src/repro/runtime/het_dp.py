@@ -1,0 +1,154 @@
+"""Heterogeneous data parallelism scheduled by A2WS — the paper's technique
+as a first-class training feature.
+
+The global batch of one optimizer step is split into T microbatch *tasks*.
+Worker groups (device slices / pods; here threads driving jitted compute,
+with configurable slowdown factors standing in for heterogeneous hardware or
+stragglers) own A2WS deques of those tasks.  Fast groups finish their
+microbatches and *steal* from slow ones — Algorithm 1 verbatim, payload =
+microbatch index.  Because every microbatch is the same token count, the
+combined gradient is the exact full-batch gradient regardless of who computed
+what (asserted by tests), so A2WS changes step *latency*, never semantics.
+
+Cross-group gradient combination optionally goes through int8+error-feedback
+compression (``repro.runtime.compression``) — the slow-link trick for
+cross-pod reduction.
+
+Straggler mitigation and elasticity fall out of the scheduler: a slowed
+worker's queue is drained by thieves (per-step), and workers can be added or
+removed between steps (the task partition is rebuilt each step).
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.a2ws import A2WSRuntime, RunStats
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+from .compression import ErrorFeedback
+
+__all__ = ["WorkerSpec", "HetDPTrainer", "WorkerFailed"]
+
+
+@dataclass
+class WorkerSpec:
+    name: str
+    slow_factor: float = 1.0  # simulated heterogeneity (1.0 = full speed)
+    fail_at_step: int | None = None  # fault-injection hook
+
+
+class WorkerFailed(RuntimeError):
+    def __init__(self, worker: int):
+        super().__init__(f"worker {worker} failed")
+        self.worker = worker
+
+
+class HetDPTrainer:
+    """A2WS-scheduled gradient-accumulation trainer over worker groups."""
+
+    def __init__(
+        self,
+        loss_fn,  # loss_fn(params, microbatch) -> (loss, metrics)
+        params,
+        workers: list[WorkerSpec],
+        opt_cfg: AdamWConfig = AdamWConfig(),
+        *,
+        radius: int | None = None,
+        compress: bool = False,
+        base_task_time: float = 0.0,  # extra per-task sleep (demo pacing)
+    ) -> None:
+        self.params = params
+        self.opt_cfg = opt_cfg
+        self.opt_state = adamw_init(params, opt_cfg)
+        self.workers = list(workers)
+        self.radius = radius
+        self.compress = compress
+        self.base_task_time = base_task_time
+        self._grad_fn = jax.jit(jax.value_and_grad(loss_fn, has_aux=True))
+        self._ef = [ErrorFeedback() for _ in workers]
+        self.step_count = 0
+        self.history: list[RunStats] = []
+
+    # ------------------------------------------------------------------ step
+    def step(self, microbatches: list[dict], lr_scale: float = 1.0):
+        """One optimizer step over T microbatch tasks."""
+        nw = len(self.workers)
+        grads = [None] * nw
+        losses = [0.0] * nw
+        counts = [0] * nw
+        locks = [threading.Lock() for _ in range(nw)]
+        params = self.params
+        step_idx = self.step_count
+
+        def task_fn(wid: int, task_idx):
+            spec = self.workers[wid]
+            if spec.fail_at_step is not None and step_idx >= spec.fail_at_step:
+                raise WorkerFailed(wid)
+            (loss, _), g = self._grad_fn(params, microbatches[int(task_idx)])
+            jax.block_until_ready(loss)
+            if spec.slow_factor > 1.0 or self.base_task_time:
+                time.sleep(self.base_task_time * max(spec.slow_factor, 1.0))
+            with locks[wid]:
+                losses[wid] += float(loss)
+                counts[wid] += 1
+                if grads[wid] is None:
+                    grads[wid] = jax.tree.map(np.asarray, g)
+                else:
+                    grads[wid] = jax.tree.map(
+                        lambda a, b: a + np.asarray(b), grads[wid], g
+                    )
+
+        rt = A2WSRuntime(
+            list(range(len(microbatches))),
+            nw,
+            task_fn,
+            radius=self.radius,
+            seed=self.step_count,
+        )
+        stats = rt.run()
+        self.history.append(stats)
+
+        # ----------------------------------------------- combine + update
+        total = sum(counts)
+        failed = sorted({wid for wid, _, _ in rt.errors})
+        if total < len(microbatches):
+            # Only possible if every worker died: surviving workers steal the
+            # re-queued tasks of dead ones, so partial failure still finishes.
+            raise WorkerFailed(failed[0] if failed else -1)
+        combined = None
+        for wid in range(nw):
+            if grads[wid] is None:
+                continue
+            g = grads[wid]
+            if self.compress:
+                packed = self._ef[wid].compress(g)
+                g = ErrorFeedback.decompress(packed)
+            combined = g if combined is None else jax.tree.map(np.add, combined, g)
+        combined = jax.tree.map(lambda x: jnp.asarray(x / total), combined)
+        self.params, self.opt_state, om = adamw_update(
+            combined, self.opt_state, self.params, self.opt_cfg, lr_scale
+        )
+        self.step_count += 1
+        return {
+            "loss": sum(losses) / max(total, 1),
+            "tasks_per_worker": counts,
+            "steals": len(stats.steals),
+            "makespan": stats.makespan,
+            "grad_norm": float(om["grad_norm"]),
+            "failed_workers": failed,
+        }
+
+    # ------------------------------------------------------------- elasticity
+    def remove_worker(self, wid: int) -> None:
+        del self.workers[wid]
+        del self._ef[wid]
+
+    def add_worker(self, spec: WorkerSpec) -> None:
+        self.workers.append(spec)
+        self._ef.append(ErrorFeedback())

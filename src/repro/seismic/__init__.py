@@ -1,0 +1,17 @@
+from .model import (
+    SeismicModel,
+    Shot,
+    make_demo_model,
+    make_shot_grid,
+    ricker,
+    run_shot,
+)
+
+__all__ = [
+    "SeismicModel",
+    "Shot",
+    "make_demo_model",
+    "make_shot_grid",
+    "ricker",
+    "run_shot",
+]

@@ -1,0 +1,268 @@
+"""Serving: jitted prefill/decode steps with cache sharding + host-side pool.
+
+Device plane
+------------
+``jit_prefill_step``/``jit_decode_step`` wrap ``lm.prefill``/``lm.decode_step``
+with explicit shardings.  KV-cache layout policy (per leaf):
+
+  * batch dim        -> DP axes when divisible (decode_32k: 128 over 16/32)
+  * KV heads         -> 'model' when divisible (TP-style head sharding)
+  * else sequence    -> 'model' (flash-decode style: each rank holds a cache
+    slice; XLA inserts the tiny cross-rank softmax reductions — this is what
+    spreads the 32k-cache HBM traffic over the pod, the decode bottleneck)
+  * SSM state heads / RG-LRU width / conv channels -> 'model'
+
+Host plane
+----------
+``ServePool`` runs batched requests across heterogeneous model replicas with
+the paper's scheduler: requests are A2WS tasks, replicas are workers, so fast
+replicas steal queued requests from slow ones (preemptively, per §2.2.1).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.a2ws import A2WSRuntime
+from repro.models import lm
+from repro.models.config import ModelConfig
+from repro.parallel.sharding import (
+    ParallelContext,
+    serve_context,
+    shardings_for,
+)
+from repro.train.step import batch_shardings
+
+__all__ = [
+    "abstract_caches",
+    "cache_pspecs",
+    "cache_shardings",
+    "jit_prefill_step",
+    "jit_decode_step",
+    "Replica",
+    "ServePool",
+]
+
+
+# ----------------------------------------------------------------- structure
+def _group_kinds(kind: str) -> list[str]:
+    if kind.startswith("cycle:"):
+        return kind[len("cycle:") :].split("|")
+    return [kind]
+
+
+def _decoder_groups(cfg: ModelConfig):
+    if cfg.enc_layers:
+        return (("xdec", cfg.n_layers),)
+    return cfg.scan_groups()
+
+
+def abstract_caches(
+    cfg: ModelConfig, bsz: int, cache_len: int, enc_len: int | None = None
+):
+    """ShapeDtypeStruct tree matching what ``lm.prefill`` returns as caches."""
+    sds = jax.eval_shape(lambda: lm.init_caches(cfg, bsz, cache_len))
+    if not cfg.enc_layers:
+        return sds
+    # enc-dec: fill the memory-KV slot (None in init_caches) with the
+    # encoder-memory K/V the decode step cross-attends to.
+    enc_len = enc_len or cache_len
+    hkv, hd = cfg.n_kv_heads, cfg.head_dim_
+    mem = jax.ShapeDtypeStruct(
+        (cfg.n_layers, bsz, enc_len, hkv, hd), jnp.dtype(cfg.dtype)
+    )
+    (group0,) = sds  # single xdec group
+    (pair,) = group0  # kinds == ["xdec"]
+    sa = pair[0] if isinstance(pair, tuple) and len(pair) == 2 else pair
+    return [(((sa[0], sa[1]), (mem, mem)),)]
+
+
+def _dp_or_none(ctx: ParallelContext, bsz: int):
+    if ctx.mesh is None:
+        return None
+    size = 1
+    for a in ctx.dp_axes:
+        size *= ctx.mesh.shape[a]
+    if bsz % size != 0:
+        return None
+    return ctx.dp_axes if len(ctx.dp_axes) > 1 else ctx.dp_axes[0]
+
+
+def _kv_spec(cfg, ctx, dp, seq: int):
+    """[L, B, S, Hkv, hd] — heads over 'model' if divisible, else sequence."""
+    tp = ctx.tp_axis
+    tpn = ctx.mesh.shape[tp]
+    if cfg.n_kv_heads % tpn == 0:
+        return P(None, dp, None, tp, None)
+    if seq % tpn == 0:
+        return P(None, dp, tp, None, None)
+    return P(None, dp, None, None, None)
+
+
+def cache_pspecs(cfg: ModelConfig, ctx: ParallelContext, bsz: int, cache_len: int):
+    """PartitionSpec tree matching the prefill/decode cache structure."""
+    assert ctx.mesh is not None
+    tp = ctx.tp_axis
+    tpn = ctx.mesh.shape[tp]
+    dp = _dp_or_none(ctx, bsz)
+
+    def div(n):  # 'model' only when divisible
+        return tp if n % tpn == 0 else None
+
+    def kind_spec(kind: str):
+        if kind in ("attn", "attn_dense", "attn_moe"):
+            if cfg.mla is not None:
+                s = div(cache_len)
+                return (P(None, dp, s, None), P(None, dp, s, None))
+            kv = _kv_spec(cfg, ctx, dp, cache_len)
+            return (kv, kv)
+        if kind == "local":
+            w = cfg.window or cache_len
+            kv = _kv_spec(cfg, ctx, dp, w)
+            return (kv, kv)
+        if kind == "ssm":
+            s = cfg.ssm
+            d_in = s.expand * cfg.d_model
+            h = d_in // s.head_dim
+            conv_ch = d_in + 2 * s.n_groups * s.d_state
+            return (
+                P(None, dp, div(h), None, None),
+                P(None, dp, None, div(conv_ch)),
+            )
+        if kind == "rglru":
+            w = cfg.rglru.lru_width
+            return (P(None, dp, div(w)), P(None, dp, None, div(w)))
+        if kind == "xdec":
+            kv = _kv_spec(cfg, ctx, dp, cache_len)
+            return ((kv, kv), (kv, kv))
+        raise ValueError(kind)
+
+    out = []
+    for kind, _count in _decoder_groups(cfg):
+        out.append(tuple(kind_spec(k) for k in _group_kinds(kind)))
+    return out
+
+
+def cache_shardings(cfg, ctx, bsz, cache_len):
+    specs = cache_pspecs(cfg, ctx, bsz, cache_len)
+    return jax.tree.map(
+        lambda p: NamedSharding(ctx.mesh, p),
+        specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+# ------------------------------------------------------------------ jit steps
+def jit_prefill_step(cfg: ModelConfig, ctx: ParallelContext, batch_sds: dict):
+    """jit(prefill) with explicit shardings; returns (logits, caches)."""
+
+    def prefill_step(params, batch):
+        return lm.prefill(params, batch, cfg, ctx)
+
+    if ctx.mesh is None:
+        return jax.jit(prefill_step)
+    params_sds, specs = lm.init_shapes(cfg)
+    param_sh = shardings_for(specs, ctx, params_sds)
+    b_sh = batch_shardings(batch_sds, ctx)
+    ref = (
+        batch_sds["tokens"]
+        if "tokens" in batch_sds
+        else batch_sds.get("embeds", batch_sds.get("enc_embeds"))
+    )
+    bsz, seq = ref.shape[0], ref.shape[1]
+    cache_sh = cache_shardings(cfg, ctx, bsz, seq)
+    return jax.jit(
+        prefill_step,
+        in_shardings=(param_sh, b_sh),
+        out_shardings=(None, cache_sh),
+    )
+
+
+def jit_decode_step(
+    cfg: ModelConfig,
+    ctx: ParallelContext,
+    bsz: int,
+    cache_len: int,
+    *,
+    donate: bool = True,
+    serve_layout: bool = True,
+):
+    """jit(decode_step) with explicit shardings; caches donated in-place.
+
+    ``serve_layout``: use the inference parameter layout (``serve_context``)
+    — dense weights TP-only (no per-step FSDP gathers), experts full-EP.
+    Pass False to keep the training layout (the paper-faithful baseline in
+    EXPERIMENTS.md §Perf).
+    """
+    if ctx.mesh is not None and serve_layout:
+        ctx = serve_context(ctx.mesh, cfg.moe.num_experts if cfg.moe else 0)
+
+    def decode(params, tokens, caches, pos):
+        return lm.decode_step(params, tokens, caches, pos, cfg, ctx)
+
+    if ctx.mesh is None:
+        return jax.jit(decode, donate_argnums=(2,) if donate else ())
+    params_sds, specs = lm.init_shapes(cfg)
+    param_sh = shardings_for(specs, ctx, params_sds)
+    cache_sh = cache_shardings(cfg, ctx, bsz, cache_len)
+    dp = _dp_or_none(ctx, bsz)
+    tok_sh = NamedSharding(ctx.mesh, P(dp, None))
+    pos_sh = NamedSharding(ctx.mesh, P())
+    return jax.jit(
+        decode,
+        in_shardings=(param_sh, tok_sh, cache_sh, pos_sh),
+        out_shardings=(None, cache_sh),
+        donate_argnums=(2,) if donate else (),
+    )
+
+
+# -------------------------------------------------------------- host serving
+@dataclass
+class Replica:
+    """One model replica (device slice / pod) with a relative speed."""
+
+    name: str
+    generate: Callable[[dict], dict]  # request -> response
+    slow_factor: float = 1.0
+
+
+class ServePool:
+    """A2WS-scheduled request pool over heterogeneous replicas.
+
+    Requests are the paper's tasks; each replica is a worker whose deque the
+    others can steal from.  ``submit_all`` runs one batch of requests to
+    completion and returns (responses, RunStats).
+    """
+
+    def __init__(self, replicas: list[Replica], *, radius: int | None = None):
+        self.replicas = replicas
+        self.radius = radius
+
+    def submit_all(self, requests: list[dict], seed: int = 0):
+        import time as _time
+
+        responses: dict[int, dict] = {}
+
+        def task_fn(wid: int, idx):
+            rep = self.replicas[wid]
+            t0 = _time.perf_counter()
+            out = rep.generate(requests[int(idx)])
+            if rep.slow_factor > 1.0:
+                _time.sleep((_time.perf_counter() - t0) * (rep.slow_factor - 1.0))
+            responses[int(idx)] = out
+
+        rt = A2WSRuntime(
+            list(range(len(requests))),
+            len(self.replicas),
+            task_fn,
+            radius=self.radius,
+            seed=seed,
+        )
+        stats = rt.run()
+        return [responses[i] for i in range(len(requests))], stats

@@ -1,0 +1,147 @@
+"""The pjit training step: loss -> grads -> AdamW, with explicit shardings.
+
+``make_train_step(cfg, ctx, opt_cfg)`` builds the pure step function;
+``train_shardings``/``abstract_train_state`` build the matching NamedSharding
+and ShapeDtypeStruct trees so the SAME code path serves (a) real training on
+whatever mesh exists and (b) the multi-pod dry-run (lower + compile against
+abstract inputs, no allocation).
+
+Sharding layout (see ``repro.parallel.sharding``):
+  params/opt : TP over 'model', FSDP over 'data', replicated over 'pod'
+               (m/v moments inherit the param sharding -> ZeRO with no
+               replicated optimizer state)
+  batch      : leading batch dim over ('pod', 'data')
+  metrics    : replicated scalars
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models import lm
+from repro.models.config import ModelConfig
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update, cosine_lr
+from repro.parallel.sharding import ParallelContext, shardings_for
+
+__all__ = [
+    "abstract_train_state",
+    "batch_pspecs",
+    "make_train_step",
+    "train_shardings",
+]
+
+
+def abstract_train_state(cfg: ModelConfig, opt_cfg: AdamWConfig):
+    """(params_sds, opt_sds, logical_specs) — nothing allocated."""
+    params_sds, specs = lm.init_shapes(cfg)
+    opt_sds = jax.eval_shape(lambda p: adamw_init(p, opt_cfg), params_sds)
+    return params_sds, opt_sds, specs
+
+
+def train_shardings(cfg: ModelConfig, ctx: ParallelContext, opt_cfg: AdamWConfig):
+    """(param_shardings, opt_shardings) NamedSharding trees."""
+    params_sds, opt_sds, specs = abstract_train_state(cfg, opt_cfg)
+    param_sh = shardings_for(specs, ctx, params_sds)
+    if ctx.mesh is None:
+        return None, None
+    # moments share the param layout; count is a replicated scalar
+    opt_sh = {
+        "m": param_sh,
+        "v": param_sh,
+        "count": NamedSharding(ctx.mesh, P()),
+    }
+    return param_sh, opt_sh
+
+
+def batch_pspecs(batch: dict, ctx: ParallelContext) -> dict:
+    """PartitionSpec per batch entry: batch dim over the DP axes.
+
+    Handles [B,S] token/label arrays, [B,S,d] embeddings, [3,B,S] M-RoPE
+    position ids, and scalar entries (e.g. decode ``pos``).
+    """
+    dp = ctx.dp_axes if len(ctx.dp_axes) > 1 else ctx.dp_axes[0]
+    dp_size = 1
+    if ctx.mesh is not None:
+        for a in ctx.dp_axes:
+            dp_size *= ctx.mesh.shape[a]
+
+    def one(name: str, leaf) -> P:
+        shape = leaf.shape
+        if len(shape) == 0:
+            return P()
+        if name == "positions" and len(shape) == 3 and shape[0] == 3:
+            return P(None, dp if shape[1] % dp_size == 0 else None)
+        bdim = dp if shape[0] % dp_size == 0 else None
+        return P(bdim, *([None] * (len(shape) - 1)))
+
+    return {k: one(k, v) for k, v in batch.items()}
+
+
+def batch_shardings(batch: dict, ctx: ParallelContext):
+    if ctx.mesh is None:
+        return {k: None for k in batch}
+    specs = batch_pspecs(batch, ctx)
+    return {k: NamedSharding(ctx.mesh, s) for k, s in specs.items()}
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    ctx: ParallelContext,
+    opt_cfg: AdamWConfig,
+    *,
+    schedule: dict | None = None,
+):
+    """Pure (params, opt_state, batch) -> (params', opt_state', metrics).
+
+    ``schedule``: optional {"warmup": int, "total": int} enabling the cosine
+    LR schedule keyed off opt_state['count'].
+    """
+
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lm.loss_fn, has_aux=True
+        )(params, batch, cfg, ctx)
+        lr_scale = (
+            cosine_lr(opt_state["count"], **schedule) if schedule else 1.0
+        )
+        new_params, new_opt, om = adamw_update(
+            grads, opt_state, params, opt_cfg, lr_scale
+        )
+        out_metrics = {
+            "loss": loss.astype(jnp.float32),
+            "ce": metrics["ce"],
+            "grad_norm": om["grad_norm"],
+        }
+        return new_params, new_opt, out_metrics
+
+    return train_step
+
+
+def jit_train_step(
+    cfg: ModelConfig,
+    ctx: ParallelContext,
+    opt_cfg: AdamWConfig,
+    batch_sds: dict,
+    *,
+    schedule: dict | None = None,
+    donate: bool = True,
+):
+    """jit-wrapped train step with explicit in/out shardings (dry-run entry)."""
+    step = make_train_step(cfg, ctx, opt_cfg, schedule=schedule)
+    if ctx.mesh is None:
+        return jax.jit(step, donate_argnums=(0, 1) if donate else ())
+    param_sh, opt_sh = train_shardings(cfg, ctx, opt_cfg)
+    b_sh = batch_shardings(batch_sds, ctx)
+    metric_sh = {
+        k: NamedSharding(ctx.mesh, P()) for k in ("loss", "ce", "grad_norm")
+    }
+    return jax.jit(
+        step,
+        in_shardings=(param_sh, opt_sh, b_sh),
+        out_shardings=(param_sh, opt_sh, metric_sh),
+        donate_argnums=(0, 1) if donate else (),
+    )

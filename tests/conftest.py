@@ -1,0 +1,7 @@
+import os
+import sys
+
+# Make src/ importable without installation.  NOTE: no XLA_FLAGS here — smoke
+# tests and benches must see the single real CPU device; only the dry-run
+# subprocesses force 512 host devices.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,105 @@
+"""Flash attention vs naive softmax oracle; RoPE / M-RoPE properties."""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.attention import flash_attention
+from repro.models.layers import mrope, rope
+
+
+def naive_attention(q, k, v, *, causal, window=0, q_offset=0):
+    b, sq, h, d = q.shape
+    _, sk, hkv, dv = v.shape
+    g = h // hkv
+    qf = q.astype(jnp.float32).reshape(b, sq, hkv, g, d)
+    s = jnp.einsum("bqkgd,bckd->bqkgc", qf, k.astype(jnp.float32))
+    s = s / math.sqrt(d)
+    qpos = jnp.arange(sq) + q_offset
+    kpos = jnp.arange(sk)
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    s = jnp.where(mask[None, :, None, None, :], s, -jnp.inf)
+    a = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bqkgc,bckv->bqkgv", a, v.astype(jnp.float32))
+    return o.reshape(b, sq, h, dv).astype(q.dtype)
+
+
+@pytest.mark.parametrize("sq,sk,h,hkv,d,causal,window,chunk", [
+    (8, 8, 4, 4, 16, True, 0, 4),       # MHA causal
+    (8, 8, 4, 1, 16, True, 0, 8),       # MQA
+    (16, 16, 8, 2, 8, True, 0, 4),      # GQA, several chunks
+    (8, 8, 4, 2, 16, False, 0, 4),      # bidirectional (encoder)
+    (16, 16, 4, 2, 8, True, 6, 4),      # sliding window
+    (12, 12, 2, 2, 8, True, 0, 5),      # chunk doesn't divide seq
+    (1, 16, 4, 2, 8, True, 0, 16),      # single query vs long keys
+])
+def test_flash_matches_naive(sq, sk, h, hkv, d, causal, window, chunk):
+    key = jax.random.key(0)
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (2, sq, h, d), jnp.float32)
+    k = jax.random.normal(kk, (2, sk, hkv, d), jnp.float32)
+    v = jax.random.normal(kv, (2, sk, hkv, d), jnp.float32)
+    got = flash_attention(q, k, v, causal=causal, window=window, chunk=chunk)
+    want = naive_attention(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
+def test_flash_q_offset_matches_suffix():
+    """Cached prefill: q covers positions [off, off+sq) of the key range."""
+    key = jax.random.key(1)
+    kq, kk, kv = jax.random.split(key, 3)
+    sk, off, sq = 12, 8, 4
+    qfull = jax.random.normal(kq, (1, sk, 2, 8), jnp.float32)
+    k = jax.random.normal(kk, (1, sk, 2, 8), jnp.float32)
+    v = jax.random.normal(kv, (1, sk, 2, 8), jnp.float32)
+    full = flash_attention(qfull, k, v, causal=True, chunk=4)
+    part = flash_attention(qfull[:, off:], k, v, causal=True, chunk=4,
+                           q_offset=off)
+    np.testing.assert_allclose(
+        np.asarray(full[:, off:]), np.asarray(part), atol=2e-5
+    )
+
+
+def test_rope_relative_property():
+    """RoPE: <q_m, k_n> depends only on m-n (shift positions together)."""
+    key = jax.random.key(2)
+    q = jax.random.normal(key, (1, 4, 1, 16), jnp.float32)
+    k = jax.random.normal(jax.random.key(3), (1, 4, 1, 16), jnp.float32)
+    p0 = jnp.arange(4)[None, :]
+    p1 = p0 + 7
+    s0 = jnp.einsum(
+        "bshd,bthd->bst", rope(q, p0, 1e4), rope(k, p0, 1e4)
+    )
+    s1 = jnp.einsum(
+        "bshd,bthd->bst", rope(q, p1, 1e4), rope(k, p1, 1e4)
+    )
+    np.testing.assert_allclose(np.asarray(s0), np.asarray(s1), atol=1e-4)
+
+
+def test_mrope_degenerates_to_rope_for_text():
+    """Qwen2-VL M-RoPE with t==h==w position ids == standard RoPE."""
+    key = jax.random.key(4)
+    x = jax.random.normal(key, (2, 6, 3, 16), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(6)[None], (2, 6))
+    pos3 = jnp.broadcast_to(pos[None], (3, 2, 6))
+    a = rope(x, pos, 1e4)
+    b = mrope(x, pos3, 1e4, (2, 3, 3))
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+def test_mrope_distinguishes_spatial_ids():
+    key = jax.random.key(5)
+    x = jax.random.normal(key, (1, 4, 1, 16), jnp.float32)
+    pos_t = jnp.zeros((1, 4), jnp.int32)
+    same = jnp.stack([pos_t, pos_t, pos_t])
+    spatial = jnp.stack([pos_t, pos_t + 3, pos_t + 5])
+    a = mrope(x, same, 1e4, (2, 3, 3))
+    b = mrope(x, spatial, 1e4, (2, 3, 3))
+    assert not np.allclose(np.asarray(a), np.asarray(b))

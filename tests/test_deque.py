@@ -1,0 +1,144 @@
+"""Asynchronous-theft deque (paper §2.3): packed word, Fig. 3b protocol,
+no-loss/no-duplication under concurrency."""
+
+import threading
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.deque import AtomicInt64, TaskDeque, pack, unpack
+
+
+@given(st.integers(-1000, 10_000), st.integers(-1000, 10_000))
+@settings(max_examples=200, deadline=None)
+def test_pack_unpack_roundtrip(h, t):
+    assert unpack(pack(h, t)) == (h, t)
+
+
+def test_get_accumulate_semantics():
+    a = AtomicInt64(pack(0, 10))
+    old = a.get_accumulate(-3)  # claim 3 tail slots in ONE atomic op
+    assert unpack(old) == (0, 10)
+    assert unpack(a.load()) == (0, 7)
+
+
+def test_owner_pops_head_in_order():
+    d = TaskDeque(["a", "b", "c"])
+    assert [d.get_task(), d.get_task(), d.get_task()] == ["a", "b", "c"]
+    assert d.get_task() is None
+
+
+def test_steal_takes_tail():
+    d = TaskDeque([0, 1, 2, 3, 4])
+    res = d.steal(2)
+    assert res.tasks == [3, 4]  # tail end
+    assert res.adjusted == 2 and not res.corrected
+    assert len(d) == 3
+    assert d.get_task() == 0
+
+
+def test_steal_overdraft_occasional_correction():
+    # Fig. 3b dashed arrow: thief asked for more than available.
+    d = TaskDeque([0, 1, 2])
+    res = d.steal(5)
+    assert res.tasks == [0, 1, 2]
+    assert res.corrected and res.adjusted == 3
+    assert len(d) == 0
+    assert d.get_task() is None  # victim sees empty (tail<head fixed up)
+
+
+def test_steal_empty_full_correction():
+    d = TaskDeque([])
+    res = d.steal(4)
+    assert not res and res.corrected
+    assert len(d) == 0
+
+
+def test_push_head_side():
+    d = TaskDeque([1, 2])
+    d.push([10, 11])
+    assert d.get_task() == 10  # new tasks come off the head first
+    assert d.get_task() == 11
+    assert d.get_task() == 1
+
+
+def test_snapshot_telemetry():
+    d = TaskDeque([0, 1, 2, 3])
+    res = d.steal(1)
+    assert (res.observed_head, res.observed_tail) == (0, 4)
+
+
+@pytest.mark.parametrize("thieves", [1, 2, 4])
+def test_concurrent_no_loss_no_dup(thieves):
+    """Owner pops while thieves steal: every task runs exactly once."""
+    n = 400
+    d = TaskDeque(range(n))
+    got: list[list] = [[] for _ in range(thieves + 1)]
+    stop = threading.Event()
+
+    def owner():
+        while True:
+            t = d.get_task()
+            if t is None:
+                if stop.is_set():
+                    return
+                continue
+            got[0].append(t)
+
+    def thief(k):
+        while not stop.is_set():
+            res = d.steal(3)
+            got[k].append(res.tasks)
+
+    th = [threading.Thread(target=owner)]
+    th += [threading.Thread(target=thief, args=(k,)) for k in range(1, thieves + 1)]
+    for t in th:
+        t.start()
+    while len(d):
+        pass
+    stop.set()
+    for t in th:
+        t.join()
+    all_tasks = list(got[0])
+    for k in range(1, thieves + 1):
+        for chunk in got[k]:
+            all_tasks.extend(chunk)
+    assert sorted(all_tasks) == list(range(n))  # no loss, no duplication
+
+
+@given(
+    ops=st.lists(
+        st.one_of(
+            st.tuples(st.just("get")),
+            st.tuples(st.just("steal"), st.integers(1, 5)),
+            st.tuples(st.just("push"), st.integers(1, 3)),
+        ),
+        max_size=60,
+    )
+)
+@settings(max_examples=60, deadline=None)
+def test_sequential_op_sequences_conserve(ops):
+    """Any interleaving of get/steal/push keeps the task multiset intact."""
+    d = TaskDeque(range(10))
+    seen = []
+    nxt = 100
+    expected = set(range(10))
+    for op in ops:
+        if op[0] == "get":
+            t = d.get_task()
+            if t is not None:
+                seen.append(t)
+        elif op[0] == "steal":
+            seen.extend(d.steal(op[1]).tasks)
+        else:
+            new = list(range(nxt, nxt + op[1]))
+            nxt += op[1]
+            expected.update(new)
+            d.push(new)
+    while True:
+        t = d.get_task()
+        if t is None:
+            break
+        seen.append(t)
+    assert sorted(seen) == sorted(expected)
+    assert len(d) == 0

@@ -1,0 +1,133 @@
+"""A2WS-scheduled heterogeneous data parallelism: gradient exactness under
+stealing, straggler mitigation, fault tolerance, elasticity."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim.adamw import AdamWConfig
+from repro.runtime.fault_tolerance import ResilientDriver
+from repro.runtime.het_dp import HetDPTrainer, WorkerSpec
+
+
+def _toy():
+    """Tiny least-squares problem; loss_fn(params, batch) -> (loss, aux)."""
+    w_true = jnp.asarray([1.0, -2.0, 0.5])
+
+    def loss_fn(params, batch):
+        pred = batch["x"] @ params["w"]
+        err = pred - batch["y"]
+        return jnp.mean(err**2), {"n": err.shape[0]}
+
+    def make_microbatches(step, t=8, n=4):
+        rng = np.random.default_rng(step)
+        out = []
+        for _ in range(t):
+            x = rng.normal(size=(n, 3)).astype(np.float32)
+            y = x @ np.asarray(w_true)
+            out.append({"x": jnp.asarray(x), "y": jnp.asarray(y)})
+        return out
+
+    params = {"w": jnp.zeros(3)}
+    return loss_fn, params, make_microbatches
+
+
+def _full_batch_grad(loss_fn, params, mbs):
+    g_total = None
+    for mb in mbs:
+        _, g = jax.value_and_grad(loss_fn, has_aux=True)(params, mb)
+        g_total = g if g_total is None else jax.tree.map(jnp.add, g_total, g)
+    return jax.tree.map(lambda x: x / len(mbs), g_total)
+
+
+def test_gradient_exact_regardless_of_stealing():
+    """The combined A2WS gradient == the single-worker full-batch gradient,
+    no matter who computed which microbatch."""
+    loss_fn, params, make_mbs = _toy()
+    mbs = make_mbs(0)
+    want = _full_batch_grad(loss_fn, params, mbs)
+
+    # reference update on one worker
+    ref = HetDPTrainer(loss_fn, params, [WorkerSpec("solo")],
+                       AdamWConfig(lr=0.1, weight_decay=0.0))
+    ref.step(mbs)
+
+    # heterogeneous pair with forced stealing
+    het = HetDPTrainer(
+        loss_fn, {"w": jnp.zeros(3)},
+        [WorkerSpec("fast"), WorkerSpec("slow", slow_factor=6.0)],
+        AdamWConfig(lr=0.1, weight_decay=0.0), base_task_time=0.003,
+    )
+    het.step(make_mbs(0))
+    np.testing.assert_allclose(
+        np.asarray(ref.params["w"]), np.asarray(het.params["w"]), atol=1e-5
+    )
+    del want
+
+
+def test_straggler_mitigation_fast_does_more():
+    loss_fn, params, make_mbs = _toy()
+    tr = HetDPTrainer(
+        loss_fn, params,
+        [WorkerSpec("fast"), WorkerSpec("slow", slow_factor=8.0)],
+        base_task_time=0.004,
+    )
+    m = tr.step(make_mbs(0, t=12))
+    assert sum(m["tasks_per_worker"]) == 12
+    assert m["tasks_per_worker"][0] > m["tasks_per_worker"][1]
+
+
+def test_worker_failure_step_still_completes():
+    loss_fn, params, make_mbs = _toy()
+    tr = HetDPTrainer(
+        loss_fn, params,
+        [WorkerSpec("ok"), WorkerSpec("dies", fail_at_step=0)],
+    )
+    m = tr.step(make_mbs(0))
+    assert m["failed_workers"] == [1]
+    assert sum(m["tasks_per_worker"]) == 8  # survivors finished everything
+
+
+def test_elastic_add_remove():
+    loss_fn, params, make_mbs = _toy()
+    tr = HetDPTrainer(loss_fn, params, [WorkerSpec("a"), WorkerSpec("b")])
+    tr.step(make_mbs(0))
+    tr.remove_worker(1)
+    m = tr.step(make_mbs(1))
+    assert len(m["tasks_per_worker"]) == 1
+    tr.add_worker(WorkerSpec("c"))
+    m = tr.step(make_mbs(2))
+    assert len(m["tasks_per_worker"]) == 2
+    assert sum(m["tasks_per_worker"]) == 8
+
+
+def test_compression_path_still_converges():
+    """int8+EF compression adds quantisation noise but must keep converging
+    (error feedback prevents bias accumulation)."""
+    loss_fn, params, make_mbs = _toy()
+    tr = HetDPTrainer(
+        loss_fn, params, [WorkerSpec("a"), WorkerSpec("b")],
+        AdamWConfig(lr=0.05, weight_decay=0.0), compress=True,
+    )
+    first = None
+    for step in range(60):
+        m = tr.step(make_mbs(step))
+        if first is None:
+            first = m["loss"]
+    assert m["loss"] < min(1.0, first / 4), (first, m["loss"])
+
+
+def test_resilient_driver_restart(tmp_path):
+    loss_fn, params, make_mbs = _toy()
+    tr = HetDPTrainer(
+        loss_fn, params,
+        [WorkerSpec("a"), WorkerSpec("dies", fail_at_step=3)],
+        AdamWConfig(lr=0.05, weight_decay=0.0),
+    )
+    drv = ResilientDriver(tr, make_mbs, str(tmp_path), ckpt_every=2)
+    report = drv.run(8)
+    assert report.steps_run == 8
+    assert "dies" in report.removed_workers
+    assert len(tr.workers) == 1
+    assert np.isfinite(report.final_loss)

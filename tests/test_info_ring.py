@@ -1,0 +1,91 @@
+"""Information ring (paper §2.1): write partition, hop-by-hop propagation,
+dirty-flag suppression (Table 1)."""
+
+import numpy as np
+
+from repro.core.info_ring import RingInfo
+
+
+def test_local_update_and_view():
+    r = RingInfo(4, 1)
+    r.update_local(0, 10.0, 2.0)
+    n, t = r.view(0)
+    assert n[0] == 10.0 and t[0] == 2.0
+
+
+def test_propagation_one_hop_per_round():
+    """Process 0's info reaches distance d after d communicate() rounds."""
+    p, rad = 8, 3
+    r = RingInfo(p, rad)
+    r.update_local(0, 42.0, 1.5)
+    for d in range(1, rad + 1):
+        # a full round: everyone communicates once
+        for i in range(p):
+            r.communicate(i)
+        assert r.n[d % p, 0] == 42.0, f"right neighbour at distance {d}"
+        assert r.n[(-d) % p, 0] == 42.0, f"left neighbour at distance {d}"
+    # beyond the radius: never arrives
+    for i in range(p):
+        r.communicate(i)
+    assert r.n[rad + 1, 0] == 0.0
+    assert r.n[p - rad - 1, 0] == 0.0
+
+
+def test_dirty_flag_suppression():
+    """Unchanged cells are not re-sent (Table 1: only new information)."""
+    r = RingInfo(6, 2)
+    r.update_local(0, 5.0, 1.0)
+    for i in range(6):
+        r.communicate(i)
+    puts_after_first = r.puts
+    for i in range(6):
+        r.communicate(i)
+    second_round = r.puts - puts_after_first
+    for i in range(6):
+        r.communicate(i)
+    third_round = r.puts - puts_after_first - second_round
+    assert third_round == 0  # everything stale by round 3 -> silence
+
+
+def test_write_partition_no_overlap():
+    """For each destination vector cell there is exactly ONE writer —
+    the §2.1 partition that makes lock-free Puts safe."""
+    p, rad = 8, 2
+    writers: dict[tuple[int, int], set[int]] = {}
+    r = RingInfo(p, rad)
+
+    orig_put = r._put
+
+    def tracking_put(src, dst, j, direction):
+        writers.setdefault((dst, j), set()).add(src)
+        return orig_put(src, dst, j, direction)
+
+    r._put = tracking_put
+    rng = np.random.default_rng(0)
+    for step in range(60):
+        i = int(rng.integers(0, p))
+        r.update_local(i, float(rng.integers(0, 20)), float(rng.random() + 0.1))
+        r.communicate(i)
+    for (dst, j), srcs in writers.items():
+        assert len(srcs) == 1, f"cell ({dst},{j}) written by {srcs}"
+        assert dst != j  # own cell is written locally, never remotely
+
+
+def test_record_remote_propagates_thief_news():
+    """Table 1 rows 2-3: a thief's first-hand knowledge of the victim
+    propagates outward from the THIEF."""
+    r = RingInfo(6, 2)
+    for i in range(6):
+        r.update_local(i, 10.0, 1.0)
+        r.communicate(i)
+    # thief 0 stole 4 tasks from victim 1
+    r.record_remote(0, 1, 6.0, 1.0)
+    r.communicate(0)
+    assert r.n[5, 1] == 6.0  # left neighbour of 0 heard the news from 0
+
+
+def test_radius_zero_or_single_process_noop():
+    r = RingInfo(1, 2)
+    assert r.communicate(0) == 0
+    r2 = RingInfo(4, 0)
+    assert r2.communicate(1) == 0

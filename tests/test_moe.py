@@ -1,0 +1,82 @@
+"""MoE layer: expert-parallel dispatch vs the all-experts-dense oracle."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.models import moe as moe_mod
+from repro.models.layers import split
+
+
+def _setup(cf=8.0, dtype=jnp.float32):
+    cfg = get_smoke("moonshot-v1-16b-a3b")
+    cfg = cfg.with_(moe=dataclasses.replace(cfg.moe, capacity_factor=cf))
+    leafs = moe_mod.moe_params(jax.random.key(0), cfg)
+    params, _ = split(leafs)
+    params = jax.tree.map(lambda x: x.astype(dtype) if x.dtype == jnp.bfloat16 else x, params)
+    x = jax.random.normal(jax.random.key(1), (2, 16, cfg.d_model), dtype) * 0.5
+    return cfg, params, x
+
+
+def test_dispatch_matches_dense_oracle():
+    cfg, params, x = _setup()
+    top_i, top_w, _ = moe_mod.route(params["router"], x, cfg.moe)
+    got = moe_mod.moe_apply(params, x, top_i, top_w, cfg, ctx=None)
+    want = moe_mod.moe_dense_ref(params, x, cfg)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
+def test_route_topk_properties():
+    cfg, params, x = _setup()
+    top_i, top_w, probs = moe_mod.route(params["router"], x, cfg.moe)
+    assert top_i.shape == (2, 16, cfg.moe.top_k)
+    np.testing.assert_allclose(np.asarray(top_w.sum(-1)), 1.0, atol=1e-3)
+    # indices are the true argmax set of the probs
+    best = np.argsort(-np.asarray(probs), axis=-1)[..., : cfg.moe.top_k]
+    assert set(np.asarray(top_i)[0, 0]) == set(best[0, 0])
+
+
+def test_capacity_drops_under_tight_factor():
+    """With a tiny capacity factor (cap -> 1 slot/expert) most tokens are
+    dropped: the output departs from the dense oracle but stays finite, and
+    some token rows are exactly zero (fully dropped)."""
+    cfg, params, x = _setup(cf=1e-6)
+    top_i, top_w, _ = moe_mod.route(params["router"], x, cfg.moe)
+    got = np.asarray(moe_mod.moe_apply(params, x, top_i, top_w, cfg, ctx=None))
+    want = np.asarray(moe_mod.moe_dense_ref(params, x, cfg))
+    assert np.isfinite(got).all()
+    assert not np.allclose(got, want, atol=1e-5)  # drops happened
+    row_norms = np.abs(got).reshape(-1, got.shape[-1]).max(-1)
+    assert (row_norms < 1e-7).sum() > 0  # some tokens fully dropped
+
+
+def test_shared_expert_added():
+    cfg = get_smoke("deepseek-v3-671b")
+    cfg = cfg.with_(moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+    leafs = moe_mod.moe_params(jax.random.key(0), cfg)
+    params, _ = split(leafs)
+    params = jax.tree.map(lambda x: x.astype(jnp.float32), params)
+    assert "ws1" in params  # deepseek smoke has 1 shared expert
+    x = jax.random.normal(jax.random.key(1), (1, 8, cfg.d_model)) * 0.5
+    top_i, top_w, _ = moe_mod.route(params["router"], x, cfg.moe)
+    got = moe_mod.moe_apply(params, x, top_i, top_w, cfg, ctx=None)
+    want = moe_mod.moe_dense_ref(params, x, cfg)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
+def test_aux_loss_balanced_vs_collapsed():
+    cfg, params, x = _setup()
+    e = cfg.moe.num_experts
+    # perfectly uniform router
+    probs = jnp.ones((2, 16, e)) / e
+    top_i = jnp.tile(jnp.arange(cfg.moe.top_k)[None, None], (2, 16, 1))
+    balanced = moe_mod.aux_load_balance_loss(probs, top_i, cfg.moe)
+    # collapsed: everything to expert 0
+    probs_c = jnp.zeros((2, 16, e)).at[..., 0].set(1.0)
+    top_c = jnp.zeros_like(top_i)
+    collapsed = moe_mod.aux_load_balance_loss(probs_c, top_c, cfg.moe)
+    assert float(collapsed) > float(balanced)

@@ -1,0 +1,125 @@
+"""Threaded A2WS runtime (Algorithm 1) + LW/CTWS baselines: correctness of
+the distributed execution, stealing behaviour, fault tolerance."""
+
+import threading
+import time
+
+import pytest
+
+from repro.core.a2ws import A2WSRuntime, partition_tasks
+from repro.core.baselines import CTWSRuntime, LWRuntime
+
+
+def _busy(seconds: float) -> None:
+    end = time.perf_counter() + seconds
+    while time.perf_counter() < end:
+        pass
+
+
+def test_partition_tasks_block():
+    parts = partition_tasks(list(range(10)), 3)
+    assert parts == [[0, 1, 2, 3], [4, 5, 6], [7, 8, 9]]
+    assert partition_tasks([], 2) == [[], []]
+
+
+@pytest.mark.parametrize("runtime_cls", [A2WSRuntime, CTWSRuntime])
+def test_every_task_exactly_once(runtime_cls):
+    n = 60
+    done = []
+    lock = threading.Lock()
+
+    def task_fn(wid, task):
+        _busy(0.0005)
+        with lock:
+            done.append(task)
+
+    rt = runtime_cls(list(range(n)), 4, task_fn)
+    stats = rt.run()
+    assert sorted(done) == list(range(n))
+    assert sum(stats.per_worker_tasks) == n
+
+
+def test_lw_every_task_exactly_once():
+    n = 40
+    done = []
+    lock = threading.Lock()
+
+    def task_fn(wid, task):
+        with lock:
+            done.append(task)
+
+    stats = LWRuntime(list(range(n)), 3, task_fn).run()
+    assert sorted(done) == list(range(n))
+    assert sum(stats.per_worker_tasks) == n
+
+
+def test_a2ws_fast_worker_executes_more():
+    """2 workers, one 8x slower: the fast one must end up with more tasks
+    (stealing happened) and the slow one with fewer than the static half."""
+    n = 30
+    slow = {1}
+
+    def task_fn(wid, task):
+        _busy(0.016 if wid in slow else 0.002)
+
+    rt = A2WSRuntime(list(range(n)), 2, task_fn, seed=3)
+    stats = rt.run()
+    assert sum(stats.per_worker_tasks) == n
+    assert len(stats.steals) > 0, "no steals happened"
+    assert stats.per_worker_tasks[0] > stats.per_worker_tasks[1]
+    assert stats.per_worker_tasks[1] < n // 2
+
+
+def test_a2ws_worker_failure_tasks_survive():
+    """A dying worker re-queues its task; survivors finish everything."""
+    n = 24
+    done = []
+    lock = threading.Lock()
+
+    def task_fn(wid, task):
+        if wid == 2:
+            raise RuntimeError("injected node failure")
+        _busy(0.001)
+        with lock:
+            done.append(task)
+
+    rt = A2WSRuntime(list(range(n)), 3, task_fn, seed=0)
+    stats = rt.run()
+    assert sorted(done) == list(range(n))
+    assert len(rt.errors) >= 1
+    assert stats.per_worker_tasks[2] == 0
+
+
+def test_a2ws_single_worker_degenerates():
+    done = []
+    rt = A2WSRuntime(list(range(5)), 1, lambda w, t: done.append(t))
+    stats = rt.run()
+    assert sorted(done) == list(range(5))
+    assert stats.steals == []
+
+
+def test_ctws_token_steals_only_when_empty():
+    n = 40
+    slow = {1}
+
+    def task_fn(wid, task):
+        _busy(0.008 if wid in slow else 0.001)
+
+    rt = CTWSRuntime(list(range(n)), 2, task_fn)
+    stats = rt.run()
+    assert sum(stats.per_worker_tasks) == n
+    # fast worker should have taken over some of the slow one's tasks
+    assert stats.per_worker_tasks[0] > stats.per_worker_tasks[1]
+
+
+def test_lw_leader_overhead_slows_worker0():
+    n = 30
+
+    def task_fn(wid, task):
+        _busy(0.002)
+
+    stats = LWRuntime(
+        list(range(n)), 3, task_fn, leader_overhead=1.0
+    ).run()
+    # worker 0 runs each task 2x as long -> it executes the fewest
+    assert stats.per_worker_tasks[0] <= min(stats.per_worker_tasks[1:])

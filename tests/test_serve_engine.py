@@ -1,0 +1,102 @@
+"""Serve engine structure: abstract caches match prefill's real cache tree,
+partition specs mirror the cache structure, pad_caches grows the right dims,
+serve_context layout rules."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import ARCH_IDS, get_smoke
+from repro.core.steal import tail_steal_amount
+from repro.models import lm
+from repro.parallel.sharding import DEFAULT_RULES, ParallelContext
+from repro.serve.engine import abstract_caches
+
+
+@pytest.mark.parametrize("arch", [
+    "mistral-nemo-12b", "deepseek-v3-671b", "recurrentgemma-2b",
+    "mamba2-2.7b", "seamless-m4t-medium", "moonshot-v1-16b-a3b",
+])
+def test_abstract_caches_match_prefill(arch):
+    """The dry-run's ShapeDtypeStruct caches must agree exactly (structure,
+    shapes, dtypes) with what lm.prefill actually returns — otherwise
+    decode_32k cells lower against the wrong tree."""
+    cfg = get_smoke(arch)
+    b, s = 2, 16
+    batch = {"tokens": jnp.zeros((b, s), jnp.int32)}
+    if cfg.enc_layers:
+        batch["enc_embeds"] = jnp.zeros((b, s, cfg.d_model), jnp.bfloat16)
+
+    real = jax.eval_shape(
+        lambda p, bt: lm.prefill(p, bt, cfg)[1],
+        lm.init_shapes(cfg)[0], batch,
+    )
+    sds = abstract_caches(cfg, b, s, enc_len=s)
+    real_flat = jax.tree.leaves(real)
+    sds_flat = jax.tree.leaves(sds)
+    assert len(real_flat) == len(sds_flat), arch
+    for r, a in zip(real_flat, sds_flat):
+        assert r.shape == a.shape, (arch, r.shape, a.shape)
+        assert r.dtype == a.dtype, (arch, r.dtype, a.dtype)
+
+
+def test_pad_caches_grows_attention_only():
+    cfg = get_smoke("recurrentgemma-2b")  # rglru + local mix
+    caches = jax.eval_shape(lambda: lm.init_caches(cfg, 2, 16))
+    padded = jax.eval_shape(lambda c: lm.pad_caches(c, cfg, 64),
+                            caches)
+    for before, after in zip(jax.tree.leaves(caches), jax.tree.leaves(padded)):
+        # ring-buffer (window 32 > 16 -> cache built at 16) / state caches
+        # keep their shape; nothing shrinks
+        assert after.shape >= before.shape
+
+    cfg2 = get_smoke("mistral-nemo-12b")
+    c2 = jax.eval_shape(lambda: lm.init_caches(cfg2, 2, 16))
+    p2 = jax.eval_shape(lambda c: lm.pad_caches(c, cfg2, 64), c2)
+    for before, after in zip(jax.tree.leaves(c2), jax.tree.leaves(p2)):
+        assert after.shape[2] == 64 and before.shape[2] == 16
+
+
+def test_pad_caches_decode_still_correct():
+    """Padding mid-generation must not change logits (padded keys are
+    position-masked)."""
+    cfg = get_smoke("mistral-nemo-12b").with_(dtype="float32")
+    params, _ = lm.init(cfg, jax.random.key(0))
+    params = jax.tree.map(
+        lambda x: x.astype(jnp.float32) if x.dtype == jnp.bfloat16 else x,
+        params)
+    toks = jax.random.randint(jax.random.key(1), (1, 8), 0, cfg.vocab)
+    _, caches = lm.prefill(params, {"tokens": toks}, cfg)
+    small = lm.pad_caches(caches, cfg, 9)
+    big = lm.pad_caches(caches, cfg, 32)
+    nxt = jnp.ones((1, 1), jnp.int32)
+    l_small, _ = lm.decode_step(params, nxt, small, jnp.int32(8), cfg)
+    l_big, _ = lm.decode_step(params, nxt, big, jnp.int32(8), cfg)
+    np.testing.assert_allclose(np.asarray(l_small), np.asarray(l_big),
+                               atol=1e-5)
+
+
+# ---------------------------------------------------------------- tail rule
+@given(
+    q_t=st.integers(0, 50), q_v=st.integers(0, 50),
+    t_t=st.floats(0.1, 60.0), t_v=st.floats(0.1, 60.0),
+)
+@settings(max_examples=150, deadline=None)
+def test_tail_steal_never_worsens_pair_makespan(q_t, q_v, t_t, t_v):
+    k = tail_steal_amount(q_t, t_t, q_v, t_v)
+    before = max(q_v * t_v, q_t * t_t)
+    after = max((q_v - k) * t_v, (q_t + k) * t_t)
+    assert 0 <= k <= q_v
+    assert after <= before + 1e-9
+    if k > 0:
+        assert after < before - 1e-12  # strictly improving or it stays home
+
+
+def test_tail_steal_slow_thief_declines_single_task():
+    # victim holds exactly 1 task and is faster or equal: tie -> no steal
+    assert tail_steal_amount(0, 60.0, 1, 60.0) == 0
+    assert tail_steal_amount(0, 60.0, 1, 2.5) == 0
+    # fast idle thief takes the slow victim's last task
+    assert tail_steal_amount(0, 2.5, 1, 60.0) == 1

@@ -1,0 +1,82 @@
+"""Discrete-event simulator: reproduces the paper's §4 qualitative claims."""
+
+import numpy as np
+import pytest
+
+from repro.core.simulator import CORE_STEPS, SimConfig, simulate, table2_speeds
+
+
+def test_table2_configurations():
+    assert len(table2_speeds("C1")) == 8
+    assert len(table2_speeds("C2")) == 16
+    assert len(table2_speeds("C3")) == 32
+    assert len(table2_speeds("C4")) == 64
+    assert len(table2_speeds("C5")) == 128
+    # fastest first (Fig. 5 ordering), speeds = core counts
+    s = table2_speeds("C1")
+    assert s[0] == 24.0 and s[-1] == 1.0
+
+
+@pytest.mark.parametrize("policy", ["a2ws", "ctws", "lw"])
+def test_all_tasks_complete(policy):
+    cfg = SimConfig(speeds=table2_speeds("C1"), num_tasks=480, seed=0)
+    res = simulate(policy, cfg)
+    assert sum(res.per_node_tasks) == 480
+    assert res.makespan > 0
+
+
+def test_a2ws_fast_nodes_run_more_tasks():
+    """Fig. 5a: task counts ~ proportional to node speed."""
+    cfg = SimConfig(speeds=table2_speeds("C1"), num_tasks=480, seed=0)
+    res = simulate("a2ws", cfg)
+    counts = np.asarray(res.per_node_tasks, dtype=float)
+    speeds = table2_speeds("C1")
+    # 24-core nodes should execute >10x the tasks of 1-core nodes
+    fast = counts[speeds == 24.0].mean()
+    slow = counts[speeds == 1.0].mean()
+    assert fast / max(slow, 1) > 8
+
+
+def test_a2ws_beats_static_partition():
+    """Work-stealing must beat no-stealing on a heterogeneous cluster."""
+    speeds = table2_speeds("C1")
+    cfg = SimConfig(speeds=speeds, num_tasks=480, seed=0)
+    res = simulate("a2ws", cfg)
+    # static partition: slowest node runs its block at its own speed
+    per = 480 / len(speeds)
+    static_makespan = per * cfg.task_cost / speeds.min()
+    assert res.makespan < 0.35 * static_makespan
+
+
+def test_a2ws_beats_lw_and_ctws_at_scale():
+    """Tables 3-4 headline: positive gain at C4/3840 (the paper's sweet
+    spot; exact percentages are calibration-dependent, signs are not)."""
+    cfg = SimConfig(speeds=table2_speeds("C4"), num_tasks=3840, seed=0)
+    a = simulate("a2ws", cfg).makespan
+    lw = simulate("lw", cfg).makespan
+    ct = simulate("ctws", cfg).makespan
+    assert a < lw, f"a2ws {a:.1f} vs lw {lw:.1f}"
+    assert a < ct, f"a2ws {a:.1f} vs ctws {ct:.1f}"
+
+
+def test_radius_tradeoff_shape():
+    """Fig. 4: tiny radius hurts; intermediate radius ~ as good as global."""
+    speeds = table2_speeds("C2")
+    mks = {}
+    for r in (1, 3, 8):
+        cfg = SimConfig(speeds=speeds, num_tasks=960, seed=1, radius=r)
+        mks[r] = simulate("a2ws", cfg).makespan
+    assert mks[3] <= mks[1] * 1.02  # growing the radius should not hurt much
+    assert min(mks[3], mks[8]) < mks[1]  # and should help vs R=1
+
+
+def test_task_conservation_with_noise():
+    cfg = SimConfig(speeds=table2_speeds("C2"), num_tasks=961, noise=0.15, seed=7)
+    res = simulate("a2ws", cfg)
+    assert sum(res.per_node_tasks) == 961
+
+
+def test_records_cover_all_tasks():
+    cfg = SimConfig(speeds=table2_speeds("C1"), num_tasks=100, seed=2)
+    res = simulate("a2ws", cfg)
+    assert len(res.records) >= 100  # includes queued starts

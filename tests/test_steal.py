@@ -1,0 +1,159 @@
+"""Unit + property tests for the smart-stealing math (paper §2.2, Eqs. 2-10)."""
+
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import steal
+
+pos_floats = st.floats(min_value=0.05, max_value=50.0, allow_nan=False)
+
+
+def test_ideal_runtime_homogeneous():
+    # Eq. 2: t_ideal = N/T; 20 tasks, system speed 2*(1/2)=1 -> 20 s
+    # (each of the 2 workers runs 10 tasks x 2 s).
+    assert steal.ideal_runtime([10, 10], [2.0, 2.0]) == pytest.approx(20.0)
+
+
+def test_steal_rate_balanced_system_is_zero():
+    # Equal speeds, equal loads: nobody needs to steal (Eq. 4).
+    n = [5, 5, 5, 5]
+    t = [1.0, 1.0, 1.0, 1.0]
+    for i in range(4):
+        assert steal.steal_rate(i, n, t) == pytest.approx(0.0)
+
+
+def test_steal_rate_fast_process_steals():
+    # 2x faster process with the same load must have S_i > 0 (Eq. 4).
+    n = [6, 6]
+    t = [0.5, 1.0]
+    assert steal.steal_rate(0, n, t) > 0
+    assert steal.steal_rate(1, n, t) < 0
+
+
+def test_steal_rate_matches_closed_form():
+    # Worked example: S_i = N/(t_i T) - n_i.
+    n = [4.0, 8.0, 2.0]
+    t = [1.0, 2.0, 4.0]
+    big_t = 1 / 1.0 + 1 / 2.0 + 1 / 4.0
+    expected = 14.0 / (1.0 * big_t) - 4.0
+    assert steal.steal_rate(0, n, t) == pytest.approx(expected)
+
+
+@given(
+    n=st.lists(st.integers(0, 40).map(float), min_size=2, max_size=9),
+    t=st.lists(pos_floats, min_size=9, max_size=9),
+)
+@settings(max_examples=80, deadline=None)
+def test_full_radius_equals_global(n, t):
+    # Eq. 5 with R covering the ring == Eq. 4.
+    p = len(n)
+    t = t[:p]
+    for i in range(p):
+        assert steal.steal_rate_radius(i, n, t, radius=p) == pytest.approx(
+            steal.steal_rate(i, n, t), rel=1e-9, abs=1e-9
+        )
+
+
+@given(
+    n=st.lists(st.integers(0, 40).map(float), min_size=2, max_size=8),
+    t=st.lists(pos_floats, min_size=8, max_size=8),
+)
+@settings(max_examples=80, deadline=None)
+def test_weighted_steal_rates_conserve(n, t):
+    # Σ_i S_i / t_i-weighted identity: Σ (S_i + n_i) = N when every process
+    # uses global info (task conservation under the ideal redistribution).
+    p = len(n)
+    t = t[:p]
+    tot = sum(steal.steal_rate(i, n, t) + n[i] for i in range(p))
+    assert tot == pytest.approx(sum(n), rel=1e-6, abs=1e-6)
+
+
+def test_pair_rate_simplification():
+    # Eq. 9 == Eq. 10 after simplification.
+    n_i, t_i, n_j, t_j = 3.0, 0.5, 9.0, 1.5
+    eq9 = (n_i + n_j) / (t_i * (1 / t_i + 1 / t_j)) - n_i
+    assert steal.pair_steal_rate(n_i, t_i, n_j, t_j) == pytest.approx(eq9)
+
+
+def test_pair_rate_balanced_pair_zero():
+    # i twice as fast with twice the tasks: already balanced.
+    assert steal.pair_steal_rate(8.0, 0.5, 4.0, 1.0) == pytest.approx(0.0)
+
+
+@given(
+    s=st.floats(min_value=0.0, max_value=20.0),
+    n_i=st.floats(min_value=0, max_value=50),
+    t_i=pos_floats,
+    n_j=st.floats(min_value=0, max_value=50),
+    t_j=pos_floats,
+)
+@settings(max_examples=120, deadline=None)
+def test_gamma_rounding_optimal(s, n_i, t_i, n_j, t_j):
+    # Eq. 7: the chosen integer minimises γ over {floor, ceil}.
+    d = steal.round_steal_rate(s, n_i, t_i, n_j, t_j)
+    g_d = steal.gamma(d, n_i, t_i, n_j, t_j)
+    for cand in (math.floor(s), math.ceil(s)):
+        assert g_d <= steal.gamma(cand, n_i, t_i, n_j, t_j) + 1e-9
+
+
+def test_gamma_is_pair_makespan():
+    # γ(S) = max of victim/thief runtimes after moving S tasks (Eq. 8, with
+    # the dimensionally-consistent product form of Eq. 6 — see steal.py).
+    g = steal.gamma(2.0, n_thief=4, t_thief=1.0, n_victim=10, t_victim=2.0)
+    assert g == pytest.approx(max((10 - 2) * 2.0, (4 + 2) * 1.0))
+
+
+def test_neighborhood_ring_wraps():
+    assert steal.neighborhood(0, 8, 2) == [6, 7, 0, 1, 2]
+    assert steal.neighborhood(7, 8, 1) == [6, 7, 0]
+    # radius covering everything -> every process once
+    assert steal.neighborhood(3, 5, 4) == [0, 1, 2, 3, 4]
+
+
+def test_victim_selection_prefers_surplus():
+    rng = np.random.default_rng(0)
+    # worker 0 fast & starving, worker 2 slow & loaded
+    n = [2.0, 4.0, 12.0]
+    t = [0.5, 1.0, 2.0]
+    queued = [0.0, 2.0, 10.0]
+    cand, w, crit = steal.victim_weights(0, n, t, queued, radius=1)
+    assert crit == "closest-rate"
+    assert 2 in list(cand)
+    picks = [steal.select_victim(rng, 0, n, t, queued, 1)[0] for _ in range(50)]
+    assert picks.count(2) > picks.count(1)
+
+
+def test_victim_selection_empty_queues_gives_none():
+    rng = np.random.default_rng(0)
+    v, _ = steal.select_victim(rng, 0, [5, 5], [1.0, 1.0], [0.0, 0.0], 1)
+    assert v is None
+
+
+def test_in_pair_fallback_when_balanced():
+    # All S_j >= 0 (system looks balanced) but queues non-empty -> criterion 2.
+    n = [1.0, 1.0]
+    t = [0.5, 1.0]  # process 0 faster; in-pair says steal from 1
+    queued = [0.0, 1.0]
+    cand, w, crit = steal.victim_weights(0, n, t, queued, radius=1)
+    assert crit in ("closest-rate", "in-pair")
+    if crit == "in-pair":
+        assert list(cand) == [1]
+
+
+def test_plan_steal_clamps_to_queue():
+    rng = np.random.default_rng(1)
+    n = [0.0, 100.0]
+    t = [0.1, 1.0]
+    queued = [0.0, 3.0]  # victim only has 3 left
+    d = steal.plan_steal(rng, 0, n, t, queued, radius=1)
+    assert d is not None and d.amount <= 3
+
+
+def test_plan_steal_surplus_process_declines():
+    rng = np.random.default_rng(1)
+    n = [100.0, 1.0]
+    t = [1.0, 1.0]
+    assert steal.plan_steal(rng, 0, n, t, [99.0, 1.0], radius=1) is None
