@@ -26,6 +26,7 @@ def main() -> None:
         fig4_radius,
         fig5_tasks,
         kernel_fd3d,
+        open_arrival,
         placement_ablation,
         roofline,
         sched_micro,
@@ -41,6 +42,7 @@ def main() -> None:
         "placement": lambda: placement_ablation.run(seeds=seeds),
         "kernel_fd3d": lambda: kernel_fd3d.run(n=32 if args.fast else 64),
         "sched_micro": lambda: sched_micro.run(),
+        "open_arrival": lambda: open_arrival.run(seeds=seeds),
         "roofline": lambda: roofline.run(),
     }
     only = set(args.only.split(",")) if args.only else None

@@ -1,6 +1,8 @@
-"""Batched serving with A2WS request scheduling across heterogeneous model
-replicas: requests are tasks, replicas are workers, fast replicas steal
-queued requests from slow ones (preemptively, §2.2.1).
+"""Continuous-batching serving with A2WS request scheduling across
+heterogeneous model replicas: requests stream into a LIVE pool (open-arrival
+mode, DESIGN.md §Open-arrival), replicas are workers, and fast replicas steal
+queued requests from slow ones mid-flight — including requests submitted
+after the pool started, across wave boundaries, with no teardown in between.
 
     PYTHONPATH=src python examples/serve_demo.py
 """
@@ -63,14 +65,29 @@ def main() -> None:
         Replica("fast-replica", gen),
         Replica("slow-replica", gen, slow_factor=4.0),
     ])
+    pool.start()  # boots once; lives across both waves below
     t0 = time.perf_counter()
     responses, stats = pool.submit_all(requests)
     dt = time.perf_counter() - t0
-    print(f"served {len(responses)} requests x {NEW_TOKENS} tokens "
+    print(f"wave 1: served {len(responses)} requests x {NEW_TOKENS} tokens "
           f"in {dt:.2f}s ({len(responses)*NEW_TOKENS/dt:.1f} tok/s)")
-    print(f"requests/replica: {stats.per_worker_tasks} "
+    print(f"  requests/replica: {stats.per_worker_tasks} "
           f"(steals: {len(stats.steals)}) — fast replica served more")
-    print(f"sample completion: {responses[0]['completion']}")
+    print(f"  sample completion: {responses[0]['completion']}")
+
+    # wave 2 streams into the SAME live pool — every request is pinned to the
+    # slow replica at submit time, so each one served by the fast replica was
+    # stolen mid-flight after injection.
+    futs = [pool.submit(r, replica=1) for r in requests]
+    for f in futs:
+        f.result(timeout=300)
+    stolen = sum(1 for f in futs if f.worker == 0)
+    final = pool.shutdown()
+    pct = final.latency_percentiles()
+    print(f"wave 2 (streamed, all pinned to slow replica): "
+          f"{stolen}/{len(futs)} rescued by the fast replica via steals")
+    print("  pool-lifetime latency p50/p95/p99 = "
+          + "/".join(f"{pct[q]*1e3:.0f}ms" for q in (50.0, 95.0, 99.0)))
 
 
 if __name__ == "__main__":

@@ -13,6 +13,16 @@ The runtime is generic over the task payload: the seismic driver feeds shots,
 the training runtime (``repro.runtime.het_dp``) feeds microbatches, the server
 feeds request batches.
 
+Two workload modes (DESIGN.md §Open-arrival):
+
+* **closed** (the paper's Algorithm 1): every task is known up front,
+  statically partitioned (§2.2.1), and the run ends when the fixed task count
+  has executed.
+* **open-arrival** (``open_arrival=True``): tasks are injected with
+  ``submit()`` while the run loop is live; ``drain()`` announces that no
+  further tasks will arrive and termination is detected by quiescence —
+  "my deque is empty" no longer means "the workload is finished".
+
 Algorithm 1 mapping (line numbers from the paper):
 
     1  while the process has task do            -> _worker_loop
@@ -36,9 +46,26 @@ import numpy as np
 
 from .deque import AtomicInt64, TaskDeque
 from .info_ring import RingInfo
-from .steal import plan_steal
+from .steal import StealDecision, plan_steal
 
-__all__ = ["A2WSRuntime", "RunStats", "TaskRecord", "partition_tasks"]
+__all__ = [
+    "A2WSRuntime",
+    "RunStats",
+    "TaskRecord",
+    "latency_percentiles",
+    "partition_tasks",
+]
+
+
+def latency_percentiles(
+    latencies: Sequence[float], qs: Sequence[float] = (50.0, 95.0, 99.0)
+) -> dict[float, float]:
+    """Per-task latency percentiles ({} when there are no samples) — shared
+    by the threaded runtime's RunStats and the simulator's SimResult."""
+    if not latencies:
+        return {}
+    vals = np.percentile(np.asarray(latencies, dtype=np.float64), list(qs))
+    return {float(q): float(v) for q, v in zip(qs, vals)}
 
 
 @dataclass
@@ -47,6 +74,12 @@ class TaskRecord:
     worker: int
     start: float
     end: float
+    arrival: float = float("nan")  # submit time (open-arrival); NaN = at boot
+
+    @property
+    def latency(self) -> float:
+        """Arrival-to-completion sojourn time (open-arrival telemetry)."""
+        return self.end - self.arrival
 
 
 @dataclass
@@ -60,13 +93,31 @@ class RunStats:
     per_worker_tasks: list[int] = field(default_factory=list)
     per_worker_mean_t: list[float] = field(default_factory=list)
 
+    @property
+    def latencies(self) -> list[float]:
+        """Per-task sojourn times for records with a known arrival time."""
+        return [r.latency for r in self.records if r.arrival == r.arrival]
+
+    def latency_percentiles(
+        self, qs: Sequence[float] = (50.0, 95.0, 99.0)
+    ) -> dict[float, float]:
+        """Latency percentiles of the open-arrival run (empty dict if the run
+        was closed — no arrival stamps to measure against)."""
+        return latency_percentiles(self.latencies, qs)
+
     def summary(self) -> str:
         counts = ",".join(str(c) for c in self.per_worker_tasks)
-        return (
+        out = (
             f"makespan={self.makespan:.4f}s steals={len(self.steals)} "
             f"failed={self.failed_steals} cells={self.info_cells_sent} "
             f"tasks/worker=[{counts}]"
         )
+        pct = self.latency_percentiles()
+        if pct:
+            out += " lat[p50/p95/p99]=" + "/".join(
+                f"{pct[q]*1e3:.1f}ms" for q in (50.0, 95.0, 99.0)
+            )
+        return out
 
 
 def partition_tasks(tasks: Sequence, num_workers: int) -> list[list]:
@@ -108,26 +159,47 @@ class A2WSRuntime:
         radius: int | None = None,
         seed: int = 0,
         idle_backoff: float = 1e-4,
+        idle_backoff_max: float | None = None,
         clock: Callable[[], float] = time.perf_counter,
+        open_arrival: bool = False,
     ) -> None:
         """``task_fn(worker_id, task) -> result`` runs the task on a worker.
 
         ``radius`` defaults to the paper's operating point: 20% of the number
         of workers (Fig. 4 discussion), at least 1.
+
+        ``open_arrival``: accept ``submit()`` while running and terminate by
+        quiescence (DESIGN.md §Open-arrival) instead of the closed-workload
+        fixed task count.  ``tasks`` may then be empty — it seeds the deques
+        exactly like the closed static partition would.
+
+        ``idle_backoff`` / ``idle_backoff_max``: an idle worker that failed
+        to steal sleeps ``idle_backoff`` seconds, doubling per consecutive
+        miss up to the cap (default 50× the base) — long-lived open-arrival
+        pools must not spin at full speed between request waves.  A
+        ``submit()`` wakes sleepers immediately.
         """
         self.num_workers = num_workers
         self.task_fn = task_fn
         self.radius = radius if radius is not None else max(1, round(0.2 * num_workers))
         self.idle_backoff = idle_backoff
+        self.idle_backoff_max = (
+            idle_backoff_max if idle_backoff_max is not None else idle_backoff * 50
+        )
         self.clock = clock
+        self.open_arrival = open_arrival
         parts = partition_tasks(tasks, num_workers)
-        self.total_tasks = len(tasks)
         self.workers = [
             _WorkerState(TaskDeque(parts[w]), seed * 1009 + w)
             for w in range(num_workers)
         ]
         self.info = RingInfo(num_workers, self.radius)
         self.done_counter = AtomicInt64(0)
+        # Tasks ever made visible to the runtime (seed partition + submits).
+        # Quiescence: submitted is bumped BEFORE the task is pushed, so
+        # ``done >= submitted`` can only hold when no task is seeded, queued,
+        # in flight, or mid-injection — see _finished.
+        self.submitted = AtomicInt64(len(tasks))
         self.alive = AtomicInt64(num_workers)
         # Failure tombstones (the heartbeat/failure-detector channel of a
         # real deployment): a dead worker's info-vector cells go stale, so
@@ -138,33 +210,156 @@ class A2WSRuntime:
         self._failed_steals = 0
         self._records: list[TaskRecord] = []
         self._log_lock = threading.Lock()
+        self._arrivals: dict[int, float] = {}  # id(task) -> submit time
+        self._drained = threading.Event()
+        if not open_arrival:
+            self._drained.set()  # closed workload: nothing will ever arrive
+        # Serialises the drained-check against drain() so a concurrent
+        # submit can never slip a task past an exiting run loop.
+        self._submit_lock = threading.Lock()
+        self._wake = threading.Event()  # submit() -> idle sleepers
+        self._rr = AtomicInt64(0)  # round-robin router for submit()
+        self._threads: list[threading.Thread] = []
+        self._t0: float | None = None
+        # Total-collapse hook: called exactly once, by the last dying
+        # worker, with every task left stranded in the deques — so a caller
+        # (ServePool) can fail the corresponding waiters instead of hanging.
+        self.on_collapse: Callable[[list], None] | None = None
+
+    # --------------------------------------------------------- open arrivals
+    def submit(self, task, worker: int | None = None) -> int:
+        """Thread-safe task injection while the run loop is live.
+
+        Routes to ``worker`` when given, else round-robins across non-dead
+        workers (the front-end sprays; adaptive stealing balances, §2.2).
+        Returns the worker the task landed on.  Valid in open-arrival mode
+        only, any time before ``drain()``.
+        """
+        if not self.open_arrival:
+            raise RuntimeError("submit() requires open_arrival=True")
+        if worker is None:
+            for _ in range(self.num_workers):
+                worker = self._rr.get_accumulate(1) % self.num_workers
+                if not self.dead[worker]:
+                    break
+        elif not 0 <= worker < self.num_workers:
+            # Validate BEFORE touching the quiescence counter: a failed push
+            # after the accumulate would leave `submitted` permanently ahead
+            # of `done` and hang every later join().
+            raise ValueError(f"worker {worker} out of range 0..{self.num_workers - 1}")
+        now = self.clock()
+        with self._log_lock:
+            # A stamp STACK per id: the same (or interned) payload object may
+            # be submitted several times; pairing completions with the oldest
+            # stamp keeps counts conserved and latencies non-negative.
+            self._arrivals.setdefault(id(task), []).append(now)
+        # Order matters for quiescence: count it, then make it stealable —
+        # and the drained-check must be atomic with the count (a drain()
+        # racing in between could let every worker exit while this task is
+        # still on its way into a deque).
+        with self._submit_lock:
+            if self._drained.is_set():
+                with self._log_lock:
+                    stamps = self._arrivals.get(id(task))
+                    if stamps:
+                        stamps.pop()
+                        if not stamps:
+                            del self._arrivals[id(task)]
+                raise RuntimeError("submit() after drain()")
+            self.submitted.accumulate(1)
+        self.workers[worker].deque.push([task])
+        self._wake.set()
+        return worker
+
+    def submit_many(self, tasks: Sequence, worker: int | None = None) -> list[int]:
+        return [self.submit(t, worker) for t in tasks]
+
+    def drain(self) -> None:
+        """Announce end-of-workload: no further ``submit()`` is coming.  The
+        run loop then exits as soon as quiescence is reached."""
+        with self._submit_lock:
+            self._drained.set()
+        self._wake.set()
+
+    def drain_leftover_tasks(self) -> list:
+        """Pop every task still sitting in any deque.  Only meaningful once
+        no worker will serve them again (after ``join()``, or from the
+        collapse hook) — used to fail the waiters of stranded tasks."""
+        leftover: list = []
+        for w in self.workers:
+            while True:
+                task = w.deque.get_task()
+                if task is None:
+                    break
+                leftover.append(task)
+        return leftover
+
+    def pending(self) -> int:
+        """Tasks submitted but not yet executed (queued + in flight)."""
+        return self.submitted.load() - self.done_counter.load()
+
+    def _finished(self) -> bool:
+        """Quiescence termination (DESIGN.md §Open-arrival).
+
+        ``done == submitted`` means every task ever injected has finished
+        executing; tasks never vanish (steals move them, worker failure
+        re-queues them), so all deques are provably empty at that point.
+        An empty deque alone proves nothing — the task may be in another
+        worker's deque, in a thief's hands mid-transfer, or not arrived yet —
+        hence the additional ``drain()`` gate before the loop may exit.
+        """
+        return self._drained.is_set() and (
+            self.done_counter.load() >= self.submitted.load()
+        )
 
     # ------------------------------------------------------------- Algorithm 1
-    def run(self) -> RunStats:
+    def start(self) -> None:
+        """Boot the worker threads and return immediately (open-arrival
+        servers feed ``submit()`` from here on; closed runs just ``join``)."""
+        if self._threads:
+            raise RuntimeError("runtime already started")
         t0 = self.clock()
+        self._t0 = t0
         for w in self.workers:
             w.start_time = t0
         for i in range(self.num_workers):
             self._update_info(i)
-        threads = [
+        self._threads = [
             threading.Thread(target=self._worker_loop, args=(i,), daemon=True)
             for i in range(self.num_workers)
         ]
-        for th in threads:
+        for th in self._threads:
             th.start()
-        for th in threads:
+
+    def join(self) -> RunStats:
+        """Wait for termination and return the final stats.  Open-arrival
+        callers must ``drain()`` first or the workers wait forever for more
+        work (by design — that is what keeps the pool alive between waves)."""
+        for th in self._threads:
             th.join()
+        return self.stats_snapshot()
+
+    def run(self) -> RunStats:
+        self.start()
+        return self.join()
+
+    def stats_snapshot(self) -> RunStats:
+        """Consistent stats up to now — callable while the pool is live."""
         t1 = self.clock()
         per_tasks = [w.executed for w in self.workers]
         per_t = [
             (w.runtime_sum / w.executed) if w.executed else float("nan")
             for w in self.workers
         ]
+        with self._log_lock:
+            records = sorted(self._records, key=lambda r: r.start)
+            steals = list(self._steal_log)
+            failed = self._failed_steals
         return RunStats(
-            makespan=t1 - t0,
-            records=sorted(self._records, key=lambda r: r.start),
-            steals=list(self._steal_log),
-            failed_steals=self._failed_steals,
+            makespan=t1 - (self._t0 if self._t0 is not None else t1),
+            records=records,
+            steals=steals,
+            failed_steals=failed,
             info_cells_sent=self.info.puts,
             corrections=sum(w.deque.corrections for w in self.workers),
             per_worker_tasks=per_tasks,
@@ -174,20 +369,29 @@ class A2WSRuntime:
     def _worker_loop(self, i: int) -> None:
         w = self.workers[i]
         ran_a_task = False
-        while self.done_counter.load() < self.total_tasks:
+        idle_misses = 0
+        while not self._finished():
             self._update_info(i)  # line 2
             if ran_a_task or w.ran_any:  # lines 3-9 (preemptive: any finished)
                 self._try_steal(i)
+            self._wake.clear()  # before the deque check: no lost submit wakeup
             task = w.deque.get_task()  # line 10
             if task is None:
-                # Empty deque: keep thieving until global completion.
+                # Empty deque: keep thieving until quiescence.
                 if self.alive.load() == 0:
                     return  # every worker died; nothing left to wait for
                 ran_a_task = False
                 self.info.communicate(i)
                 if not self._try_steal(i):
-                    time.sleep(self.idle_backoff)
+                    idle_misses += 1
+                    self._wake.wait(
+                        min(
+                            self.idle_backoff * (2.0 ** min(idle_misses, 30)),
+                            self.idle_backoff_max,
+                        )
+                    )
                 continue
+            idle_misses = 0
             self._update_info(i)  # line 11
             start = self.clock()
             try:
@@ -202,6 +406,12 @@ class A2WSRuntime:
                 self._update_info(i)
                 self.info.communicate(i)
                 self.alive.accumulate(-1)
+                self._wake.set()  # idle sleepers must re-check alive state
+                if self.alive.load() == 0 and self.on_collapse is not None:
+                    # Last worker standing just died: nobody will ever pop
+                    # the remaining tasks — hand them to the caller so the
+                    # corresponding waiters fail instead of hanging.
+                    self.on_collapse(self.drain_leftover_tasks())
                 return
             end = self.clock()
             w.executed += 1
@@ -209,17 +419,29 @@ class A2WSRuntime:
             w.ran_any = True
             ran_a_task = True
             with self._log_lock:
-                self._records.append(TaskRecord(task, i, start, end))
+                stamps = self._arrivals.get(id(task))
+                arrival = stamps.pop(0) if stamps else float("nan")
+                if stamps is not None and not stamps:
+                    del self._arrivals[id(task)]
+                self._records.append(TaskRecord(task, i, start, end, arrival))
             self.done_counter.accumulate(1)
+            if self._finished():
+                self._wake.set()  # completion wakes idle sleepers to exit
             self._update_info(i)
             self.info.communicate(i)  # line 13
 
     # ----------------------------------------------------------------- helpers
     def _update_info(self, i: int) -> None:
-        """n_i = executed + queued; t_i = mean runtime, or elapsed wall time
+        """Closed: n_i = executed + queued (paper §2.2).  Open-arrival:
+        n_i = instantaneous queue depth — cumulative totals are meaningless
+        as a balance target while tasks keep arriving (DESIGN.md
+        §Open-arrival).  Either way t_i = mean runtime, or elapsed wall time
         before the first task finishes (preemptive stealing, §2.2.1)."""
         w = self.workers[i]
-        n_i = w.executed + len(w.deque)
+        if self.open_arrival:
+            n_i = len(w.deque)
+        else:
+            n_i = w.executed + len(w.deque)
         if w.executed > 0:
             t_i = w.runtime_sum / w.executed
         else:
@@ -243,6 +465,8 @@ class A2WSRuntime:
         for j in window:
             if j == i:
                 queued[j] = len(w.deque)
+                if self.open_arrival:
+                    n_view[j] = queued[j]
                 continue
             if self.dead[j]:
                 # Tombstoned worker: its info cells are frozen garbage.  Its
@@ -251,34 +475,77 @@ class A2WSRuntime:
                 # assigns it anything.
                 queued[j] = len(self.workers[j].deque)
                 t_view[j] = 1e12
-                n_view[j] = self.workers[j].executed + queued[j]
+                n_view[j] = (
+                    queued[j]
+                    if self.open_arrival
+                    else self.workers[j].executed + queued[j]
+                )
                 continue
             if np.isnan(self.info.t[i, j]):
                 # No report from j yet: preemptive wall-time estimate — j
                 # looks like it has finished 0 tasks in `elapsed` seconds.
                 t_view[j] = elapsed
-            # Estimated executed count from speed; remaining = n_j - executed.
-            done_est = min(elapsed / max(t_view[j], 1e-9), n_view[j])
-            queued[j] = max(n_view[j] - done_est, 0.0)
+            if self.open_arrival:
+                # n_j IS the reported depth; no elapsed-time extrapolation —
+                # depth both drains (execution) and refills (arrivals), so
+                # decaying it would systematically under-count busy victims.
+                queued[j] = max(n_view[j], 0.0)
+            else:
+                # Estimated executed count from speed; remaining = n_j - done.
+                done_est = min(elapsed / max(t_view[j], 1e-9), n_view[j])
+                queued[j] = max(n_view[j] - done_est, 0.0)
         decision = plan_steal(
             w.rng, i, n_view, t_view, queued, self.radius,
             idle=len(w.deque) == 0,
+            open_arrival=self.open_arrival,
         )
         if decision is None:
-            return False
+            if not (self.open_arrival and len(w.deque) == 0):
+                return False
+            if self.pending() == 0:
+                # Nothing is queued or in flight anywhere — probing would
+                # only churn atomics and inflate failed_steals while the
+                # pool sits quiescent between request waves.
+                return False
+            # Probe steal (DESIGN.md §Open-arrival): a victim stuck inside a
+            # long task cannot publish the arrivals landing on its deque, so
+            # an idle thief's info vector can go PERMANENTLY stale — under
+            # closed workloads the preemptive wall-time estimate covers this,
+            # under open arrivals nothing does.  One speculative single-task
+            # get-accumulate doubles as a ground-truth depth read: the
+            # Fig. 3b correction path restores the deque when it was empty,
+            # and record_remote below folds the observed depth into the info
+            # vector either way.  Probe frequency is bounded by the idle
+            # backoff, so between waves this stays one cheap atomic per tick.
+            candidates = [j for j in window if j != i and not self.dead[j]]
+            if not candidates:
+                return False
+            decision = StealDecision(
+                victim=int(w.rng.choice(candidates)), amount=1,
+                criterion="probe",
+            )
         victim = self.workers[decision.victim]
         result = victim.deque.steal(decision.amount)  # Fig. 3b protocol
         # The get-accumulate snapshot tells the thief the victim's exact
         # remaining queue; fold it into the information vector (Table 1).
         observed_left = max(result.observed_tail - result.observed_head, 0)
-        victim_n_new = n_view[decision.victim] - len(result.tasks)
+        if self.open_arrival:
+            # Depth semantics: the snapshot IS the depth at steal time.
+            victim_n_new = float(max(observed_left - len(result.tasks), 0))
+        else:
+            victim_n_new = n_view[decision.victim] - len(result.tasks)
         if not result:
             self._failed_steals += 1
             # Table 1 row 3: thief marks the victim position dirty anyway —
             # with n_j corrected down to what the snapshot implies.
-            exec_est = n_view[decision.victim] - observed_left
+            if self.open_arrival:
+                corrected_n = float(observed_left)
+            else:
+                corrected_n = max(
+                    n_view[decision.victim] - observed_left, 0.0
+                )
             self.info.record_remote(
-                i, decision.victim, float(max(exec_est, 0.0)),
+                i, decision.victim, float(corrected_n),
                 self.info.t[i, decision.victim],
             )
             return False

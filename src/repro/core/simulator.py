@@ -34,11 +34,13 @@ from __future__ import annotations
 
 import heapq
 from bisect import bisect_right
+from collections import deque as _deque
 from dataclasses import dataclass, field, replace
 from typing import Literal
 
 import numpy as np
 
+from .a2ws import latency_percentiles
 from .steal import plan_steal
 
 __all__ = [
@@ -111,6 +113,15 @@ class SimConfig:
     steal_latency: float = 2e-2
     steal_per_task: float = 2e-3
     retry_interval: float = 5e-2
+    # --- open arrivals (DESIGN.md §Open-arrival; A2WS policy only) ---
+    # "closed": the paper's workload — all tasks present at t=0 (§2.2.1).
+    # "poisson": num_tasks tasks arrive with Exp(1/arrival_rate) gaps and are
+    #            round-robined across nodes (the front-end sprays; adaptive
+    #            stealing balances).
+    # "trace":   arrival_trace gives the absolute arrival times verbatim.
+    arrival: Literal["closed", "poisson", "trace"] = "closed"
+    arrival_rate: float = 0.0  # tasks/second entering the system (poisson)
+    arrival_trace: tuple[float, ...] = ()  # absolute times (trace mode)
     # --- CTWS ---
     token_base: float = 2e-3
     token_per_node: float = 2.5e-4
@@ -137,12 +148,26 @@ class SimResult:
     moved_tasks: int
     records: list[tuple[int, float, float]] = field(default_factory=list)
     # records: (node, start, end) per task, for Fig. 5 style plots
+    latencies: list[float] = field(default_factory=list)
+    # per-task arrival-to-completion sojourn times (open-arrival modes only)
+
+    def latency_percentiles(
+        self, qs: tuple[float, ...] = (50.0, 95.0, 99.0)
+    ) -> dict[float, float]:
+        """Per-task latency percentiles (open-arrival serving metric)."""
+        return latency_percentiles(self.latencies, qs)
 
     def summary(self) -> str:
-        return (
+        out = (
             f"makespan={self.makespan:.2f}s steals={self.steals} "
             f"failed={self.failed_steals} moved={self.moved_tasks}"
         )
+        pct = self.latency_percentiles()
+        if pct:
+            out += " lat[p50/p95/p99]=" + "/".join(
+                f"{pct[q]:.2f}s" for q in (50.0, 95.0, 99.0)
+            )
+        return out
 
 
 # --------------------------------------------------------------------------- #
@@ -175,44 +200,83 @@ def _ring_dist(i: int, j: int, p: int) -> int:
     return min(d, p - d)
 
 
+def _arrival_times(cfg: SimConfig, rng: np.random.Generator) -> np.ndarray:
+    """Absolute arrival times for the open-arrival modes."""
+    if cfg.arrival == "poisson":
+        if cfg.arrival_rate <= 0.0:
+            raise ValueError("poisson arrivals need arrival_rate > 0")
+        gaps = rng.exponential(1.0 / cfg.arrival_rate, cfg.num_tasks)
+        return np.cumsum(gaps)
+    if cfg.arrival == "trace":
+        if not cfg.arrival_trace:
+            raise ValueError("trace arrivals need a non-empty arrival_trace")
+        return np.asarray(sorted(cfg.arrival_trace), dtype=np.float64)
+    raise ValueError(f"not an open-arrival mode: {cfg.arrival!r}")
+
+
 def _simulate_a2ws(cfg: SimConfig) -> SimResult:
     p = cfg.P
     rng = np.random.default_rng(cfg.seed)
     radius = cfg.radius if cfg.radius is not None else max(1, round(0.2 * p))
     radius = min(radius, p // 2)
+    open_mode = cfg.arrival != "closed"
 
-    # Static block partition (paper §2.2.1).
-    base, rem = divmod(cfg.num_tasks, p)
-    queue = np.array([base + (1 if i < rem else 0) for i in range(p)], np.int64)
+    # Per-node queues hold ARRIVAL STAMPS (the simulator's task identity —
+    # enough for latency accounting).  Head = left (owner pops, new arrivals
+    # land), tail = right (thieves claim the oldest waiters), matching the
+    # TaskDeque discipline of the threaded runtime.
+    queues: list[_deque] = [_deque() for _ in range(p)]
+    if open_mode:
+        arrivals = _arrival_times(cfg, rng)
+        total_tasks = len(arrivals)
+    else:
+        # Static block partition (paper §2.2.1): everything arrives at t=0.
+        base, rem = divmod(cfg.num_tasks, p)
+        for i in range(p):
+            queues[i].extend([0.0] * (base + (1 if i < rem else 0)))
+        arrivals = np.empty(0)
+        total_tasks = cfg.num_tasks
+
+    def depth(i: int) -> int:
+        return len(queues[i])
+
     executed = np.zeros(p, np.int64)
     runtime_sum = np.zeros(p, np.float64)
     busy = np.zeros(p, np.float64)
     hist = [_History() for _ in range(p)]
     for i in range(p):
-        hist[i].append(0.0, float(queue[i]), float("nan"))
+        hist[i].append(0.0, float(depth(i)), float("nan"))
     cur_t = np.full(p, np.nan)  # latest own estimate (for relay pacing)
     pending_dur = np.zeros(p, np.float64)  # duration of the task in flight
+    pending_arr = np.zeros(p, np.float64)  # arrival stamp of that task
     idle_since = np.full(p, -1.0)
     records: list[tuple[int, float, float]] = []
+    latencies: list[float] = []
     steals = failed = moved = 0
-    remaining_global = cfg.num_tasks
 
     # Event heap: (time, seq, kind, node, payload)
-    heap: list[tuple[float, int, str, int, int]] = []
+    heap: list[tuple[float, int, str, int, object]] = []
     seq = 0
 
-    def push_event(time: float, kind: str, node: int, payload: int = 0) -> None:
+    def push_event(time: float, kind: str, node: int, payload: object = 0) -> None:
         nonlocal seq
         heapq.heappush(heap, (time, seq, kind, node, payload))
         seq += 1
 
+    def reported_n(i: int) -> float:
+        """What node i publishes as n_i: cumulative total in the paper's
+        closed workload, instantaneous depth under open arrivals (DESIGN.md
+        §Open-arrival — totals are meaningless while tasks keep arriving)."""
+        if open_mode:
+            return float(depth(i))
+        return float(executed[i] + depth(i))
+
     def start_task(i: int, now: float) -> None:
-        nonlocal remaining_global
-        if queue[i] <= 0:
+        if not queues[i]:
             idle_since[i] = now
             push_event(now + cfg.retry_interval, "retry", i, 0)
             return
-        queue[i] -= 1
+        pending_arr[i] = queues[i].popleft()
         dur = cfg.task_cost / cfg.speeds[i]
         if cfg.noise:
             dur *= float(rng.lognormal(0.0, cfg.noise))
@@ -223,9 +287,6 @@ def _simulate_a2ws(cfg: SimConfig) -> SimResult:
         push_event(now + overhead + dur, "finish", i)
         busy[i] += dur
         records.append((i, now + overhead, now + overhead + dur))
-
-    def total_tasks_of(i: int) -> float:
-        return float(executed[i] + queue[i])
 
     def view_for(i: int, now: float) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
         """Delayed (n, t, queued-estimate) views of the window around i."""
@@ -239,9 +300,9 @@ def _simulate_a2ws(cfg: SimConfig) -> SimResult:
         for off in range(-radius, radius + 1):
             j = (i + off) % p
             if j == i:
-                n_view[j] = total_tasks_of(i)
+                n_view[j] = reported_n(i)
                 t_view[j] = _own_t(i, now)
-                queued[j] = queue[i]
+                queued[j] = depth(i)
                 continue
             d = _ring_dist(i, j, p)
             step = 1 if off > 0 else -1
@@ -256,8 +317,14 @@ def _simulate_a2ws(cfg: SimConfig) -> SimResult:
                 t_j = max(now, 1e-9)
             n_view[j] = n_j
             t_view[j] = t_j
-            done_est = min(now / max(t_j, 1e-9), n_j)
-            queued[j] = max(n_j - done_est, 0.0)
+            if open_mode:
+                # n_j IS the reported depth; no elapsed-time extrapolation —
+                # depth drains AND refills under arrivals, so decaying it
+                # would systematically under-count busy victims.
+                queued[j] = max(n_j, 0.0)
+            else:
+                done_est = min(now / max(t_j, 1e-9), n_j)
+                queued[j] = max(n_j - done_est, 0.0)
         return n_view, t_view, queued
 
     def _own_t(i: int, now: float) -> float:
@@ -269,53 +336,66 @@ def _simulate_a2ws(cfg: SimConfig) -> SimResult:
         nonlocal steals, failed, moved
         n_view, t_view, queued = view_for(i, now)
         decision = plan_steal(
-            rng, i, n_view, t_view, queued, radius, idle=queue[i] <= 1
+            rng, i, n_view, t_view, queued, radius,
+            idle=depth(i) <= 1, open_arrival=open_mode,
         )
         if decision is None:
             return False
         v = decision.victim
-        avail = int(queue[v])  # get-accumulate ground truth at the victim
+        avail = depth(v)  # get-accumulate ground truth at the victim
         take = min(decision.amount, avail)
         if take <= 0:
             failed += 1
             return False
-        queue[v] -= take  # claimed now (tail shifted)
-        hist[v].append(now, total_tasks_of(v), _own_t(v, now))
+        stamps = [queues[v].pop() for _ in range(take)]  # tail: oldest waiters
+        hist[v].append(now, reported_n(v), _own_t(v, now))
         arrive = now + cfg.steal_latency + cfg.steal_per_task * take
-        push_event(arrive, "receive", i, take)
+        push_event(arrive, "receive", i, stamps)
         steals += 1
         moved += take
         return True
 
-    # Boot: all nodes start their first task at t=0.
+    # Boot: all nodes start their first task at t=0; open-arrival tasks
+    # enter through "arrive" events (round-robin routed — the front-end
+    # sprays, adaptive stealing balances).
+    for k, t_arr in enumerate(arrivals):
+        push_event(float(t_arr), "arrive", k % p, float(t_arr))
     for i in range(p):
         start_task(i, 0.0)
 
     makespan = 0.0
     total_done = 0
-    while heap and total_done < cfg.num_tasks:
+    while heap and total_done < total_tasks:
         now, _, kind, i, payload = heapq.heappop(heap)
         if kind == "finish":
             executed[i] += 1
             total_done += 1
             runtime_sum[i] += pending_dur[i]
+            if open_mode:
+                latencies.append(now - pending_arr[i])
             makespan = max(makespan, now)
             # Update own info + history (Alg. 1 line 11 + communicate).
             cur_t[i] = runtime_sum[i] / executed[i]
-            hist[i].append(now, total_tasks_of(i), cur_t[i])
+            hist[i].append(now, reported_n(i), cur_t[i])
             # Smart stealing right after finishing a task (preemptive).
             try_steal(i, now)
             start_task(i, now)
+        elif kind == "arrive":
+            queues[i].appendleft(float(payload))  # head side, like submit()
+            hist[i].append(now, reported_n(i), _own_t(i, now))
+            if idle_since[i] >= 0.0:
+                idle_since[i] = -1.0
+                start_task(i, now)
         elif kind == "receive":
-            hist[i].append(now, total_tasks_of(i) + payload, _own_t(i, now))
-            queue[i] += payload
+            queues[i].extendleft(payload)  # stolen goods land head-side
+            hist[i].append(now, reported_n(i), _own_t(i, now))
             if idle_since[i] >= 0.0:
                 idle_since[i] = -1.0
                 start_task(i, now)
         elif kind == "retry":
-            if queue[i] > 0 or idle_since[i] < 0.0:
+            if queues[i] or idle_since[i] < 0.0:
                 continue  # no longer idle
-            if total_done >= cfg.num_tasks:
+            if total_done >= total_tasks:
                 continue
             if not try_steal(i, now):
                 # mild exponential backoff so long idle tails stay cheap
@@ -331,6 +411,7 @@ def _simulate_a2ws(cfg: SimConfig) -> SimResult:
         failed_steals=failed,
         moved_tasks=moved,
         records=records,
+        latencies=latencies,
     )
 
 
@@ -486,6 +567,11 @@ def _simulate_lw(cfg: SimConfig) -> SimResult:
 def simulate(policy: Literal["a2ws", "ctws", "lw"], cfg: SimConfig) -> SimResult:
     if policy == "a2ws":
         return _simulate_a2ws(cfg)
+    if cfg.arrival != "closed":
+        raise NotImplementedError(
+            f"open-arrival simulation is A2WS-only for now (got {policy!r}); "
+            "compare against no-stealing by setting radius=0 instead"
+        )
     if policy == "ctws":
         return _simulate_ctws(cfg)
     if policy == "lw":

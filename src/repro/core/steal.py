@@ -205,7 +205,12 @@ class StealDecision:
 
 
 def tail_steal_amount(
-    q_thief: float, t_thief: float, q_victim: float, t_victim: float
+    q_thief: float,
+    t_thief: float,
+    q_victim: float,
+    t_victim: float,
+    *,
+    open_arrival: bool = False,
 ) -> int:
     """γ-optimal steal count on REMAINING work (the §2.2 'final stages' rule).
 
@@ -214,6 +219,16 @@ def tail_steal_amount(
     Used when the thief is (nearly) idle: it prevents a fast process from
     idling while a slow one still holds queued tasks, and conversely returns
     0 when a slow thief would only stretch the pair makespan.
+
+    ``open_arrival``: under open arrivals (tasks injected while the system
+    runs) the closed-workload tie-break inverts for an EMPTY thief.  In a
+    closed run a tie steal is pointless churn ("slow processes cannot steal
+    at the end"); in an open run the victim's queue depth q_v excludes the
+    task it is currently executing, so a tied γ still leaves the stolen task
+    waiting behind the victim's in-flight work while the thief idles — a pure
+    per-task latency loss.  An idle (q_i = 0) thief therefore accepts ties
+    (k ≥ 1 whenever γ(k) ≤ γ(0)), which is what keeps freshly injected tasks
+    from being stranded on a busy worker's deque.
     """
     if q_victim < 1.0:
         return 0
@@ -226,6 +241,13 @@ def tail_steal_amount(
         g = max((q_victim - k) * t_victim, (q_thief + k) * t_thief)
         if g < best_g - 1e-12 or (g == best_g and k < best_k):
             best_k, best_g = k, g
+    if open_arrival and best_k == 0 and q_thief < 1.0:
+        # Accept a tie: one task moves to the idle thief if that does not
+        # strictly worsen the pair bound (it starts immediately instead of
+        # queueing behind the victim's in-flight task).
+        g1 = max((q_victim - 1.0) * t_victim, (q_thief + 1.0) * t_thief)
+        if g1 <= best_g + 1e-12:
+            return 1
     return best_k
 
 
@@ -237,6 +259,7 @@ def plan_steal(
     queued: Sequence[float],
     radius: int,
     idle: bool = False,
+    open_arrival: bool = False,
 ) -> StealDecision | None:
     """End-to-end smart-stealing decision for thief ``i`` (Alg. 1 lines 4-6).
 
@@ -251,10 +274,25 @@ def plan_steal(
     the §2.1 relay works — an intermediary with S_i <= 0 still pulls tasks
     across the ring when that strictly reduces the pair makespan, letting a
     distant fast process re-steal them.
+
+    ``open_arrival``: the workload is open (tasks keep arriving while the
+    scheduler runs, DESIGN.md §Open-arrival).  The paper's cumulative totals
+    ``n_j`` (executed + available, §2.2) are meaningless as a balance target
+    when the ground keeps shifting, so Eq. 5 is evaluated on the
+    INSTANTANEOUS queue depths instead: ``S_i = Q_sub/(t_i·T_sub) − q_i`` is
+    the fair share of the *remaining* work in the radius-R window.  Callers
+    must then pass reported depths via ``queued`` (no elapsed-time
+    extrapolation — depth both drains and refills under arrivals) and the
+    tail rule runs in its latency-oriented tie-accepting form.
     """
     n = np.asarray(n, dtype=np.float64)
     t = np.asarray(t, dtype=np.float64)
     queued = np.asarray(queued, dtype=np.float64)
+    if open_arrival:
+        # Fair-share balance on remaining work: depths replace totals in
+        # Eqs. 4-8; the γ-rounding already operates on "work after the
+        # steal", which is exactly the depth semantics.
+        n = queued
     s_i = steal_rate_radius(i, n, t, radius)
     if s_i > 0.0:
         victim, crit = select_victim(rng, i, n, t, queued, radius)
@@ -297,6 +335,7 @@ def plan_steal(
     amount = tail_steal_amount(
         float(queued[i]), float(t[i]),
         float(math.floor(queued[victim])), float(t[victim]),
+        open_arrival=open_arrival,
     )
     if amount < 1:
         return None

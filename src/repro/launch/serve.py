@@ -1,7 +1,18 @@
 """Serving driver: batched greedy generation on a reduced config.
 
+Closed batch (the original smoke driver):
+
     PYTHONPATH=src python -m repro.launch.serve --arch phi4-mini-3.8b \
         --requests 8 --prompt-len 32 --new-tokens 16
+
+Open-arrival continuous batching (DESIGN.md §Open-arrival): requests arrive
+as a Poisson stream into a live ``ServePool`` over heterogeneous replicas —
+fast replicas steal queued requests from slow ones mid-flight, and the
+driver reports per-request latency percentiles:
+
+    PYTHONPATH=src python -m repro.launch.serve --arch phi4-mini-3.8b \
+        --requests 24 --prompt-len 16 --new-tokens 8 \
+        --open-arrival --rate 8 --replicas 2 --slow-factor 4
 """
 
 from __future__ import annotations
@@ -15,20 +26,27 @@ import numpy as np
 
 from repro.configs.base import ARCH_IDS, get_smoke
 from repro.models import lm
-from repro.parallel.sharding import make_context
+from repro.serve.engine import Replica, ServePool
 
 
-def generate(cfg, params, tokens: jnp.ndarray, new_tokens: int):
+def make_decode(cfg):
+    """One jitted decode step, reusable across requests/replicas (a fresh
+    ``jax.jit`` per call would recompile every time)."""
+    return jax.jit(
+        lambda p, t, c, pos: lm.decode_step(p, t, c, pos, cfg),
+        donate_argnums=(2,),
+    )
+
+
+def generate(cfg, params, tokens: jnp.ndarray, new_tokens: int, decode=None):
     """Greedy generation for a [B, S] prompt batch (mesh-free path)."""
     b, s = tokens.shape
     cache_len = s + new_tokens
     caches = lm.init_caches(cfg, b, cache_len)
     # prefill re-runs through decode_step to keep the cache length fixed
     # (simple path for the smoke driver; the engine prefill is jitted).
-    decode = jax.jit(
-        lambda p, t, c, pos: lm.decode_step(p, t, c, pos, cfg),
-        donate_argnums=(2,),
-    )
+    if decode is None:
+        decode = make_decode(cfg)
     out = []
     tok = tokens[:, :1]
     logits = None
@@ -42,19 +60,7 @@ def generate(cfg, params, tokens: jnp.ndarray, new_tokens: int):
     return jnp.concatenate(out, axis=1)
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", choices=ARCH_IDS, required=True)
-    ap.add_argument("--requests", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=16)
-    ap.add_argument("--new-tokens", type=int, default=8)
-    ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args()
-
-    cfg = get_smoke(args.arch)
-    if cfg.frontend != "none" or cfg.enc_layers:
-        raise SystemExit("serve driver handles token-in archs")
-    params, _ = lm.init(cfg, jax.random.key(args.seed))
+def _closed_main(cfg, params, args) -> None:
     rng = np.random.default_rng(args.seed)
     prompts = jnp.asarray(
         rng.integers(0, cfg.vocab, (args.requests, args.prompt_len)), jnp.int32
@@ -65,6 +71,75 @@ def main() -> None:
     total = args.requests * args.new_tokens
     print(f"generated {total} tokens in {dt:.2f}s "
           f"({total/dt:.1f} tok/s); sample: {np.asarray(out[0])[:8]}")
+
+
+def _open_main(cfg, params, args) -> None:
+    """Continuous batching: Poisson arrivals into a live heterogeneous pool."""
+    rng = np.random.default_rng(args.seed)
+
+    # one shared jitted step: each request's caches are private (donation is
+    # per-call, so concurrent replica threads don't interfere)
+    decode = make_decode(cfg)
+
+    def gen(request: dict) -> dict:
+        out = generate(cfg, params, request["tokens"][None, :],
+                       args.new_tokens, decode=decode)
+        return {"completion": np.asarray(out[0]).tolist()}
+    # one jit warm-up so compile time doesn't poison the latency stats
+    gen({"tokens": jnp.zeros((args.prompt_len,), jnp.int32)})
+
+    replicas = [Replica("replica0", gen)]
+    for r in range(1, args.replicas):
+        # replicas share the weights/compiled fn; heterogeneity is emulated
+        # by slow_factor (on real hardware: different device slices)
+        replicas.append(Replica(f"replica{r}", gen,
+                                slow_factor=args.slow_factor))
+    pool = ServePool(replicas, seed=args.seed)
+    pool.start()
+
+    futs = []
+    for _ in range(args.requests):
+        time.sleep(float(rng.exponential(1.0 / args.rate)))
+        req = {"tokens": jnp.asarray(
+            rng.integers(0, cfg.vocab, (args.prompt_len,)), jnp.int32)}
+        futs.append(pool.submit(req))
+    for f in futs:
+        f.result(timeout=600)
+    stats = pool.shutdown()
+    pct = stats.latency_percentiles()
+    per_rep = stats.per_worker_tasks
+    print(f"served {len(futs)} streamed requests; requests/replica={per_rep} "
+          f"steals={len(stats.steals)}")
+    print("latency p50/p95/p99 = "
+          + "/".join(f"{pct[q]*1e3:.0f}ms" for q in (50.0, 95.0, 99.0)))
+    print(f"sample completion: {futs[0].result()['completion'][:8]}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, required=True)
+    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--new-tokens", type=int, default=8)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--open-arrival", action="store_true",
+                    help="stream requests into a live ServePool")
+    ap.add_argument("--rate", type=float, default=4.0,
+                    help="Poisson arrival rate, requests/sec (open mode)")
+    ap.add_argument("--replicas", type=int, default=2,
+                    help="model replicas in the pool (open mode)")
+    ap.add_argument("--slow-factor", type=float, default=4.0,
+                    help="slowdown of replicas 1.. vs replica 0 (open mode)")
+    args = ap.parse_args()
+
+    cfg = get_smoke(args.arch)
+    if cfg.frontend != "none" or cfg.enc_layers:
+        raise SystemExit("serve driver handles token-in archs")
+    params, _ = lm.init(cfg, jax.random.key(args.seed))
+    if args.open_arrival:
+        _open_main(cfg, params, args)
+    else:
+        _closed_main(cfg, params, args)
 
 
 if __name__ == "__main__":

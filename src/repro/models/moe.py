@@ -31,6 +31,8 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
+from repro.parallel.sharding import shard_map_compat
+
 from .config import ModelConfig, MoEConfig
 from .layers import ksplit, Leaf, dense, param
 
@@ -225,7 +227,7 @@ def moe_apply(
     ]
     if m.num_shared:
         in_specs += [P(None, tp), P(None, tp), P(tp, None)]  # shared: TP
-    return jax.shard_map(
+    return shard_map_compat(
         body,
         mesh=ctx.mesh,
         in_specs=tuple(in_specs),

@@ -5,6 +5,7 @@ from .engine import (
     jit_decode_step,
     jit_prefill_step,
     Replica,
+    ServeFuture,
     ServePool,
 )
 
@@ -15,5 +16,6 @@ __all__ = [
     "jit_decode_step",
     "jit_prefill_step",
     "Replica",
+    "ServeFuture",
     "ServePool",
 ]

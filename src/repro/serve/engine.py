@@ -14,22 +14,28 @@ with explicit shardings.  KV-cache layout policy (per leaf):
 
 Host plane
 ----------
-``ServePool`` runs batched requests across heterogeneous model replicas with
-the paper's scheduler: requests are A2WS tasks, replicas are workers, so fast
-replicas steal queued requests from slow ones (preemptively, per §2.2.1).
+``ServePool`` is a **continuous-batching server** on the open-arrival A2WS
+runtime (DESIGN.md §Open-arrival): requests stream in through ``submit()``
+while the pool is live, each replica is a worker whose deque holds queued
+requests, and fast replicas steal queued requests from slow ones mid-flight.
+The pool never tears down or re-partitions between request waves — workers
+idle (with capped backoff) until the next submit wakes them, and quiescence
+detection only fires at ``shutdown()``.
 """
 
 from __future__ import annotations
 
+import threading
+import time
 from dataclasses import dataclass
-from typing import Callable
+from typing import Callable, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.core.a2ws import A2WSRuntime
+from repro.core.a2ws import A2WSRuntime, RunStats
 from repro.models import lm
 from repro.models.config import ModelConfig
 from repro.parallel.sharding import (
@@ -46,6 +52,7 @@ __all__ = [
     "jit_prefill_step",
     "jit_decode_step",
     "Replica",
+    "ServeFuture",
     "ServePool",
 ]
 
@@ -232,37 +239,187 @@ class Replica:
     slow_factor: float = 1.0
 
 
-class ServePool:
-    """A2WS-scheduled request pool over heterogeneous replicas.
+class ServeFuture:
+    """Handle for one in-flight request submitted to a live ``ServePool``.
 
-    Requests are the paper's tasks; each replica is a worker whose deque the
-    others can steal from.  ``submit_all`` runs one batch of requests to
-    completion and returns (responses, RunStats).
+    The scheduler moves the request between replica deques (steals) until a
+    replica executes it; ``result()`` blocks until then.  Timing telemetry:
+    ``submit_t`` (entered the pool), ``start_t``/``end_t`` (execution on the
+    serving replica), ``latency`` = end - submit (the open-arrival sojourn
+    time the §Open-arrival design optimises for).
     """
 
-    def __init__(self, replicas: list[Replica], *, radius: int | None = None):
+    __slots__ = (
+        "request", "response", "error", "worker",
+        "submit_t", "start_t", "end_t", "_done",
+    )
+
+    def __init__(self, request: dict) -> None:
+        self.request = request
+        self.response: dict | None = None
+        self.error: BaseException | None = None
+        self.worker: int | None = None  # replica that ultimately served it
+        self.submit_t: float = float("nan")
+        self.start_t: float = float("nan")
+        self.end_t: float = float("nan")
+        self._done = threading.Event()
+
+    def done(self) -> bool:
+        return self._done.is_set()
+
+    def result(self, timeout: float | None = None) -> dict:
+        if not self._done.wait(timeout):
+            raise TimeoutError("request not served in time")
+        if self.error is not None:
+            raise self.error
+        assert self.response is not None
+        return self.response
+
+    @property
+    def latency(self) -> float:
+        return self.end_t - self.submit_t
+
+
+class ServePool:
+    """Continuous-batching A2WS request pool over heterogeneous replicas.
+
+    Requests are the paper's tasks; each replica is a worker whose deque the
+    others steal from (open-arrival mode, DESIGN.md §Open-arrival).  The
+    pool boots ONCE (``start``), serves streamed requests (``submit``) for
+    its whole lifetime — fast replicas steal queued requests from slow ones
+    mid-flight, across wave boundaries, with no teardown or re-partitioning
+    in between — and drains at ``shutdown``.
+
+    ``submit_all`` is the closed-batch convenience wrapper: it submits a
+    wave into the live pool and waits for exactly that wave.
+    """
+
+    def __init__(
+        self,
+        replicas: list[Replica],
+        *,
+        radius: int | None = None,
+        seed: int = 0,
+    ):
         self.replicas = replicas
         self.radius = radius
+        self.seed = seed
+        self._runtime: A2WSRuntime | None = None
 
-    def submit_all(self, requests: list[dict], seed: int = 0):
-        import time as _time
+    # ------------------------------------------------------------- lifecycle
+    @property
+    def running(self) -> bool:
+        return self._runtime is not None
 
-        responses: dict[int, dict] = {}
+    def start(self) -> None:
+        """Boot the replica workers; idempotent."""
+        if self._runtime is not None:
+            return
 
-        def task_fn(wid: int, idx):
+        def task_fn(wid: int, fut: ServeFuture) -> None:
+            # A generate() failure propagates into the runtime's
+            # fault-tolerance path: the replica is tombstoned, the future is
+            # re-queued, and a SURVIVING replica re-serves it (transparent
+            # retry).  The future is only resolved on success — or at
+            # shutdown, if no survivor ever picked it up.
             rep = self.replicas[wid]
-            t0 = _time.perf_counter()
-            out = rep.generate(requests[int(idx)])
+            fut.worker = wid
+            fut.start_t = time.perf_counter()
+            out = rep.generate(fut.request)
             if rep.slow_factor > 1.0:
-                _time.sleep((_time.perf_counter() - t0) * (rep.slow_factor - 1.0))
-            responses[int(idx)] = out
+                time.sleep(
+                    (time.perf_counter() - fut.start_t)
+                    * (rep.slow_factor - 1.0)
+                )
+            fut.response = out
+            fut.end_t = time.perf_counter()
+            fut._done.set()
 
         rt = A2WSRuntime(
-            list(range(len(requests))),
+            [],
             len(self.replicas),
             task_fn,
             radius=self.radius,
-            seed=seed,
+            seed=self.seed,
+            open_arrival=True,
         )
-        stats = rt.run()
-        return [responses[i] for i in range(len(requests))], stats
+        # If the LAST replica dies, nothing will ever serve the queued
+        # requests — fail their futures immediately instead of letting
+        # result() (and submit_all) hang forever.
+        rt.on_collapse = self._fail_unserved
+        rt.start()
+        self._runtime = rt
+
+    def _fail_unserved(self, stranded: list) -> None:
+        err = RuntimeError("all replicas died; request not served")
+        for fut in stranded:
+            if isinstance(fut, ServeFuture) and not fut.done():
+                fut.error = err
+                fut.end_t = time.perf_counter()
+                fut._done.set()
+
+    def shutdown(self) -> RunStats:
+        """Drain (no more submits), wait for quiescence, return final stats."""
+        if self._runtime is None:
+            raise RuntimeError("pool not started")
+        rt = self._runtime
+        rt.drain()
+        stats = rt.join()
+        # Every replica that could serve a re-queued request has now had
+        # the chance.  Unresolved futures come in two flavours: the ones a
+        # dying replica was executing (rt.errors) and the ones still queued
+        # on deques no surviving worker ever popped — fail both so no
+        # waiter outlives the pool.
+        for _wid, fut, err in rt.errors:
+            if isinstance(fut, ServeFuture) and not fut.done():
+                fut.error = err
+                fut.end_t = time.perf_counter()
+                fut._done.set()
+        self._fail_unserved(rt.drain_leftover_tasks())
+        self._runtime = None
+        return stats
+
+    # -------------------------------------------------------------- requests
+    def submit(self, request: dict, *, replica: int | None = None) -> ServeFuture:
+        """Inject one request into the live pool (thread-safe); returns a
+        ``ServeFuture``.  ``replica`` pins the initial deque (tests/traces);
+        default routing round-robins and lets stealing do the balancing."""
+        if self._runtime is None:
+            self.start()
+        fut = ServeFuture(request)
+        fut.submit_t = time.perf_counter()
+        assert self._runtime is not None
+        self._runtime.submit(fut, worker=replica)
+        if self._runtime.alive.load() == 0:
+            # Pool collapsed (all replicas dead): the collapse hook may have
+            # fired before this submit landed — fail it rather than strand it.
+            self._fail_unserved(self._runtime.drain_leftover_tasks())
+        return fut
+
+    def submit_wave(
+        self, requests: Sequence[dict], *, replica: int | None = None
+    ) -> list[ServeFuture]:
+        return [self.submit(r, replica=replica) for r in requests]
+
+    def stats(self) -> RunStats:
+        """Live scheduler stats snapshot (callable while serving)."""
+        if self._runtime is None:
+            raise RuntimeError("pool not started")
+        return self._runtime.stats_snapshot()
+
+    def pending(self) -> int:
+        return self._runtime.pending() if self._runtime is not None else 0
+
+    # ------------------------------------------------------ closed-batch API
+    def submit_all(self, requests: list[dict], seed: int = 0):
+        """Serve one wave to completion on the LIVE pool and return
+        ``(responses, stats)`` — kept signature-compatible with the old
+        closed-batch ServePool, but no longer tears the pool down: calling
+        it repeatedly reuses the same workers and deques, and requests of a
+        later wave can be stolen the moment they are submitted.  ``stats``
+        is a pool-lifetime snapshot (per-wave deltas: diff two snapshots).
+        """
+        del seed  # scheduler seeding is fixed at pool construction now
+        futs = self.submit_wave(requests)
+        responses = [f.result() for f in futs]
+        return responses, self.stats()

@@ -1,0 +1,51 @@
+"""Optional-hypothesis shim: property tests SKIP (not error) when the
+``hypothesis`` package is absent, so tier-1 collection succeeds everywhere.
+
+Import from tests as ``from _hypo import given, settings, st`` — with
+hypothesis installed these are the real objects; without it ``@given``
+replaces the test with a skip marker and the strategy/settings calls become
+inert placeholders.  CI installs hypothesis, so the properties always run
+there (.github/workflows/ci.yml).
+"""
+
+from __future__ import annotations
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    def given(*_args, **_kwargs):
+        def deco(_fn):
+            @pytest.mark.skip(reason="hypothesis not installed")
+            def _skipped():  # pragma: no cover - placeholder body
+                pass
+
+            _skipped.__name__ = _fn.__name__
+            _skipped.__doc__ = _fn.__doc__
+            return _skipped
+
+        return deco
+
+    def settings(*_args, **_kwargs):
+        def deco(fn):
+            return fn
+
+        return deco
+
+    class _StrategyStub:
+        """Placeholder: strategy expressions evaluate to inert objects."""
+
+        def __getattr__(self, _name):
+            return lambda *a, **k: self
+
+        def __call__(self, *a, **k):  # strategies are sometimes called
+            return self
+
+    st = _StrategyStub()
+
+__all__ = ["given", "settings", "st", "HAVE_HYPOTHESIS"]

@@ -4,7 +4,8 @@ no-loss/no-duplication under concurrency."""
 import threading
 
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hypo import given, settings, st  # skips properties w/o hypothesis
 
 from repro.core.deque import AtomicInt64, TaskDeque, pack, unpack
 

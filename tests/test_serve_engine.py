@@ -6,7 +6,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hypo import given, settings, st  # skips properties w/o hypothesis
 
 from repro.configs import ARCH_IDS, get_smoke
 from repro.core.steal import tail_steal_amount

@@ -4,7 +4,8 @@ import math
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hypo import given, settings, st  # skips properties w/o hypothesis
 
 from repro.core import steal
 
