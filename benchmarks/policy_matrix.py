@@ -1,0 +1,110 @@
+"""Policy matrix — the head-to-head grid the policy layer exists for.
+
+Sweeps every scheduling policy ({a2ws, ctws, lw, random}) over the paper's
+Table 2 cluster configurations (C1..C5) under BOTH workload planes:
+
+* ``closed``  — the paper's batch workload (60·P shots at t=0): makespan,
+  the Tables 3/4 metric, plus the Eq. 13 gain of a2ws over each baseline.
+* ``poisson`` — open-arrival serving traffic at ~75% of aggregate capacity:
+  per-request p50/p95/p99 sojourn times, the serving metric the baselines
+  could not even report before the shared substrate (PR 2).
+
+One CSV line per (policy, config, arrival) cell:
+
+    policy_matrix_<conf>_<arrival>_<policy>,<makespan_us>,p50=..|p95=..|p99=..
+
+Run directly or through the harness:
+
+    PYTHONPATH=src python -m benchmarks.policy_matrix [--fast]
+    PYTHONPATH=src python -m benchmarks.run --only policy_matrix
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .common import gain  # noqa: F401  (re-exported harness convention)
+
+import sys
+
+sys.path.insert(0, "src")
+from repro.core.policy import POLICIES  # noqa: E402
+from repro.core.simulator import SimConfig, simulate, table2_speeds  # noqa: E402
+
+#: tasks per node in the closed plane (C1 = 8 nodes -> 480 tasks, as in §4)
+TASKS_PER_NODE = 60
+#: open-arrival utilisation (fraction of aggregate service capacity)
+RHO = 0.75
+
+
+def _cell(policy: str, conf: str, arrival: str, seeds: int):
+    """Median makespan + latency percentiles over ``seeds`` runs."""
+    speeds = table2_speeds(conf)
+    num_tasks = TASKS_PER_NODE * len(speeds)
+    mks, p50, p95, p99 = [], [], [], []
+    for seed in range(seeds):
+        kw = {}
+        if arrival == "poisson":
+            kw = dict(
+                arrival="poisson",
+                arrival_rate=RHO * float(speeds.sum()) / 60.0,
+            )
+        cfg = SimConfig(speeds=speeds, num_tasks=num_tasks, seed=seed, **kw)
+        res = simulate(policy, cfg)
+        mks.append(res.makespan)
+        pct = res.latency_percentiles((50.0, 95.0, 99.0))
+        if pct:
+            p50.append(pct[50.0])
+            p95.append(pct[95.0])
+            p99.append(pct[99.0])
+    med = lambda xs: float(np.median(xs)) if xs else float("nan")  # noqa: E731
+    return med(mks), med(p50), med(p95), med(p99)
+
+
+def run(seeds: int = 3, fast: bool = False, csv: bool = True):
+    configs = ("C1", "C2") if fast else ("C1", "C2", "C3", "C4", "C5")
+    grid: dict[tuple[str, str, str], dict[str, float]] = {}
+    for conf in configs:
+        for arrival in ("closed", "poisson"):
+            for policy in POLICIES:
+                mk, p50, p95, p99 = _cell(policy, conf, arrival, seeds)
+                grid[(conf, arrival, policy)] = {
+                    "makespan": mk, "p50": p50, "p95": p95, "p99": p99,
+                }
+                if csv:
+                    lat = (
+                        f"p50={p50:.2f}|p95={p95:.2f}|p99={p99:.2f}"
+                        if arrival == "poisson" else "closed"
+                    )
+                    print(
+                        f"policy_matrix_{conf}_{arrival}_{policy},"
+                        f"{mk*1e6:.0f},{lat}"
+                    )
+    # Headline: a2ws's Eq. 13 gain over each baseline on the biggest closed
+    # config of the sweep, and its p99 edge under serving traffic.
+    top = configs[-1]
+    a_mk = grid[(top, "closed", "a2ws")]["makespan"]
+    a_p99 = grid[(top, "poisson", "a2ws")]["p99"]
+    derived = {}
+    for other in POLICIES:
+        if other == "a2ws":
+            continue
+        derived[f"{top}_gain_vs_{other}"] = round(
+            gain(a_mk, grid[(top, "closed", other)]["makespan"]), 1
+        )
+        derived[f"{top}_p99_ratio_vs_{other}"] = round(
+            grid[(top, "poisson", other)]["p99"] / a_p99, 2
+        )
+    if csv:
+        print(f"policy_matrix_summary,0,{derived}")
+    return grid, derived
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true", help="C1-C2 only, 1 seed")
+    ap.add_argument("--seeds", type=int, default=3)
+    args = ap.parse_args()
+    run(seeds=1 if args.fast else args.seeds, fast=args.fast)

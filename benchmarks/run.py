@@ -28,6 +28,7 @@ def main() -> None:
         kernel_fd3d,
         open_arrival,
         placement_ablation,
+        policy_matrix,
         roofline,
         sched_micro,
         table3_lw,
@@ -43,6 +44,7 @@ def main() -> None:
         "kernel_fd3d": lambda: kernel_fd3d.run(n=32 if args.fast else 64),
         "sched_micro": lambda: sched_micro.run(),
         "open_arrival": lambda: open_arrival.run(seeds=seeds),
+        "policy_matrix": lambda: policy_matrix.run(seeds=seeds, fast=args.fast),
         "roofline": lambda: roofline.run(),
     }
     only = set(args.only.split(",")) if args.only else None

@@ -16,8 +16,6 @@ import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-import numpy as np
-
 from repro.core.a2ws import A2WSRuntime
 from repro.core.baselines import CTWSRuntime, LWRuntime
 from repro.core.simulator import SimConfig, simulate, table2_speeds

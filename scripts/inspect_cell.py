@@ -5,7 +5,6 @@ os.environ["XLA_FLAGS"] = (
 )
 import re
 import collections
-import jax
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 from repro.configs.base import SHAPES, get_config

@@ -20,7 +20,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import device_sched as ds
-from repro.launch.cells import HW, roofline_terms
+from repro.launch.cells import roofline_terms
 from repro.launch.hlo_analysis import analyze_hlo
 
 VARIANT = os.environ.get("REPRO_SCHED_VARIANT", "baseline")

@@ -4,16 +4,28 @@ Layers:
   steal        Eqs. 2-10 (steal rate, γ-rounding, victim selection)
   info_ring    radius-R bidirectional ring information vector (§2.1)
   deque        packed head/tail asynchronous-theft deque (§2.3, Fig. 2/3b)
-  a2ws         Algorithm 1 threaded host runtime
-  baselines    LW (leader-workers) and CTWS (cyclic token) comparisons
-  simulator    discrete-event heterogeneous-cluster simulator (paper §4 setup)
+  policy       pluggable SchedPolicy layer (A2WS, CTWS, LW, random-WS)
+  a2ws         policy-parametric threaded WorkerPool substrate (Algorithm 1)
+  baselines    LW (leader-workers) and CTWS (cyclic token) policy shims
+  simulator    discrete-event virtual-time plane driving the same policies
   device_sched jitted shard_map/ppermute SPMD scheduler (TPU data plane)
 """
 
-from .a2ws import A2WSRuntime, RunStats, partition_tasks
+from .a2ws import A2WSRuntime, RunStats, WorkerPool, partition_tasks
 from .baselines import CTWSRuntime, LWRuntime
 from .deque import AtomicInt64, StealResult, TaskDeque
 from .info_ring import RingInfo
+from .policy import (
+    POLICIES,
+    A2WSPolicy,
+    CTWSPolicy,
+    LWPolicy,
+    PolicyView,
+    RandomWSPolicy,
+    SchedPolicy,
+    StealPlan,
+    make_policy,
+)
 from .simulator import SimConfig, SimResult, simulate, table2_speeds
 from .steal import (
     StealDecision,
@@ -31,10 +43,20 @@ from .steal import (
 
 __all__ = [
     "A2WSRuntime",
+    "WorkerPool",
     "RunStats",
     "partition_tasks",
     "CTWSRuntime",
     "LWRuntime",
+    "SchedPolicy",
+    "StealPlan",
+    "PolicyView",
+    "A2WSPolicy",
+    "CTWSPolicy",
+    "LWPolicy",
+    "RandomWSPolicy",
+    "POLICIES",
+    "make_policy",
     "AtomicInt64",
     "StealResult",
     "TaskDeque",

@@ -1,19 +1,24 @@
-"""A2WS Algorithm 1 — the asynchronous host runtime.
+"""Policy-parametric threaded worker-pool substrate (+ A2WS Algorithm 1).
 
-This is the paper's scheduler running as the **control plane** of the
-framework: worker threads (one per heterogeneous worker group / node) execute
-opaque tasks, keep per-worker deques (``repro.core.deque``), exchange the
-information vector over the bidirectional ring (``repro.core.info_ring``) and
-steal adaptively (``repro.core.steal``).  Shared memory between threads stands
-in for MPI RMA windows — the protocol (packed head/tail get-accumulate,
-partitioned info Puts, preemptive wall-time speed estimates) is the paper's,
-see DESIGN.md §2 for the adaptation argument.
+``WorkerPool`` is the **control plane** of the framework: worker threads (one
+per heterogeneous worker group / node) execute opaque tasks and keep
+per-worker deques (``repro.core.deque``); shared memory between threads
+stands in for MPI RMA windows — the protocol (packed head/tail
+get-accumulate, partitioned info Puts, preemptive wall-time speed estimates)
+is the paper's, see DESIGN.md §2 for the adaptation argument.
 
-The runtime is generic over the task payload: the seismic driver feeds shots,
-the training runtime (``repro.runtime.het_dp``) feeds microbatches, the server
-feeds request batches.
+WHICH tasks move, and when, is decided by a pluggable ``SchedPolicy``
+(``repro.core.policy``): the paper's adaptive A2WS over the §2.1 info ring,
+the CTWS token, the LW central leader, or classical random stealing — all on
+this one substrate, so comparisons isolate the scheduling policy.  The
+discrete-event simulator (``repro.core.simulator``) drives the SAME policy
+objects under virtual time (DESIGN.md §Policy layer).
 
-Two workload modes (DESIGN.md §Open-arrival):
+The pool is generic over the task payload: the seismic driver feeds shots,
+the training runtime (``repro.runtime.het_dp``) feeds microbatches, the
+server feeds request batches.
+
+Two workload modes (DESIGN.md §Open-arrival), available to EVERY policy:
 
 * **closed** (the paper's Algorithm 1): every task is known up front,
   statically partitioned (§2.2.1), and the run ends when the fixed task count
@@ -23,12 +28,12 @@ Two workload modes (DESIGN.md §Open-arrival):
   further tasks will arrive and termination is detected by quiescence —
   "my deque is empty" no longer means "the workload is finished".
 
-Algorithm 1 mapping (line numbers from the paper):
+Algorithm 1 mapping (line numbers from the paper; policy = A2WSPolicy):
 
     1  while the process has task do            -> _worker_loop
     2    update_process_info()                  -> _update_info
-    3-8  if ran a task: S=steal_equation();     -> plan_steal + _do_steal
-         v=select_victim(S); steal_task(v,S)
+    3-8  if ran a task: S=steal_equation();     -> policy.on_boundary
+         v=select_victim(S); steal_task(v,S)       + _policy_boundary
     10   T_id = get_task_id()                   -> deque.get_task
     11   update_process_info()                  -> _update_info
     12   execute(T_id)                          -> task_fn
@@ -46,9 +51,10 @@ import numpy as np
 
 from .deque import AtomicInt64, TaskDeque
 from .info_ring import RingInfo
-from .steal import StealDecision, plan_steal
+from .policy import PolicyView, SchedPolicy, make_policy
 
 __all__ = [
+    "WorkerPool",
     "A2WSRuntime",
     "RunStats",
     "TaskRecord",
@@ -147,8 +153,9 @@ class _WorkerState:
         self.rng = np.random.default_rng(seed)
 
 
-class A2WSRuntime:
-    """Threaded A2WS executor for ``num_workers`` heterogeneous workers."""
+class WorkerPool:
+    """Threaded executor for ``num_workers`` heterogeneous workers, load
+    balanced by a pluggable scheduling policy."""
 
     def __init__(
         self,
@@ -156,6 +163,7 @@ class A2WSRuntime:
         num_workers: int,
         task_fn: Callable[[int, object], object],
         *,
+        policy: str | SchedPolicy = "a2ws",
         radius: int | None = None,
         seed: int = 0,
         idle_backoff: float = 1e-4,
@@ -165,8 +173,13 @@ class A2WSRuntime:
     ) -> None:
         """``task_fn(worker_id, task) -> result`` runs the task on a worker.
 
+        ``policy``: a ``SchedPolicy`` instance or registry name ("a2ws",
+        "ctws", "lw", "random").  The policy decides steals at every task
+        boundary; the pool owns deques, threads, termination and telemetry.
+
         ``radius`` defaults to the paper's operating point: 20% of the number
-        of workers (Fig. 4 discussion), at least 1.
+        of workers (Fig. 4 discussion), at least 1.  Only ring policies
+        (``policy.uses_ring``) build the info board.
 
         ``open_arrival``: accept ``submit()`` while running and terminate by
         quiescence (DESIGN.md §Open-arrival) instead of the closed-workload
@@ -181,6 +194,7 @@ class A2WSRuntime:
         """
         self.num_workers = num_workers
         self.task_fn = task_fn
+        self.policy = make_policy(policy, num_workers)
         self.radius = radius if radius is not None else max(1, round(0.2 * num_workers))
         self.idle_backoff = idle_backoff
         self.idle_backoff_max = (
@@ -188,12 +202,16 @@ class A2WSRuntime:
         )
         self.clock = clock
         self.open_arrival = open_arrival
-        parts = partition_tasks(tasks, num_workers)
+        parts = self.policy.partition(tasks, num_workers)
         self.workers = [
             _WorkerState(TaskDeque(parts[w]), seed * 1009 + w)
             for w in range(num_workers)
         ]
-        self.info = RingInfo(num_workers, self.radius)
+        # The §2.1 information board exists only for ring policies; central
+        # or probe-based policies (LW, CTWS, random) pay no cell traffic.
+        self.info = (
+            RingInfo(num_workers, self.radius) if self.policy.uses_ring else None
+        )
         self.done_counter = AtomicInt64(0)
         # Tasks ever made visible to the runtime (seed partition + submits).
         # Quiescence: submitted is bumped BEFORE the task is pushed, so
@@ -203,7 +221,7 @@ class A2WSRuntime:
         self.alive = AtomicInt64(num_workers)
         # Failure tombstones (the heartbeat/failure-detector channel of a
         # real deployment): a dead worker's info-vector cells go stale, so
-        # thieves must stop trusting them — see _try_steal.
+        # thieves must stop trusting them — see _ring_view.
         self.dead = [False] * num_workers
         self.errors: list[tuple[int, object, BaseException]] = []
         self._steal_log: list[tuple[float, int, int, int]] = []
@@ -230,18 +248,23 @@ class A2WSRuntime:
     def submit(self, task, worker: int | None = None) -> int:
         """Thread-safe task injection while the run loop is live.
 
-        Routes to ``worker`` when given, else round-robins across non-dead
-        workers (the front-end sprays; adaptive stealing balances, §2.2).
-        Returns the worker the task landed on.  Valid in open-arrival mode
-        only, any time before ``drain()``.
+        Routes to ``worker`` when given, else to the policy's central queue
+        (LW) when it declares one, else round-robins across non-dead workers
+        (the front-end sprays; adaptive stealing balances, §2.2).  Returns
+        the worker the task landed on.  Valid in open-arrival mode only, any
+        time before ``drain()``.
         """
         if not self.open_arrival:
             raise RuntimeError("submit() requires open_arrival=True")
         if worker is None:
-            for _ in range(self.num_workers):
-                worker = self._rr.get_accumulate(1) % self.num_workers
-                if not self.dead[worker]:
-                    break
+            central = self.policy.central
+            if central is not None and not self.dead[central]:
+                worker = central
+            else:
+                for _ in range(self.num_workers):
+                    worker = self._rr.get_accumulate(1) % self.num_workers
+                    if not self.dead[worker]:
+                        break
         elif not 0 <= worker < self.num_workers:
             # Validate BEFORE touching the quiescence counter: a failed push
             # after the accumulate would leave `submitted` permanently ahead
@@ -322,8 +345,10 @@ class A2WSRuntime:
         self._t0 = t0
         for w in self.workers:
             w.start_time = t0
-        for i in range(self.num_workers):
-            self._update_info(i)
+        if self.info is not None:
+            for i in range(self.num_workers):
+                self._update_info(i)
+        self.policy.on_start([len(w.deque) for w in self.workers], t0)
         self._threads = [
             threading.Thread(target=self._worker_loop, args=(i,), daemon=True)
             for i in range(self.num_workers)
@@ -337,6 +362,7 @@ class A2WSRuntime:
         work (by design — that is what keeps the pool alive between waves)."""
         for th in self._threads:
             th.join()
+        self.policy.termination(self.clock())
         return self.stats_snapshot()
 
     def run(self) -> RunStats:
@@ -360,7 +386,7 @@ class A2WSRuntime:
             records=records,
             steals=steals,
             failed_steals=failed,
-            info_cells_sent=self.info.puts,
+            info_cells_sent=self.info.puts if self.info is not None else 0,
             corrections=sum(w.deque.corrections for w in self.workers),
             per_worker_tasks=per_tasks,
             per_worker_mean_t=per_t,
@@ -368,21 +394,20 @@ class A2WSRuntime:
 
     def _worker_loop(self, i: int) -> None:
         w = self.workers[i]
-        ran_a_task = False
         idle_misses = 0
         while not self._finished():
-            self._update_info(i)  # line 2
-            if ran_a_task or w.ran_any:  # lines 3-9 (preemptive: any finished)
-                self._try_steal(i)
+            if self.info is not None:
+                self._update_info(i)  # line 2
+            self._policy_boundary(i)  # lines 3-9 (policy gates preemption)
             self._wake.clear()  # before the deque check: no lost submit wakeup
             task = w.deque.get_task()  # line 10
             if task is None:
                 # Empty deque: keep thieving until quiescence.
                 if self.alive.load() == 0:
                     return  # every worker died; nothing left to wait for
-                ran_a_task = False
-                self.info.communicate(i)
-                if not self._try_steal(i):
+                if self.info is not None:
+                    self.info.communicate(i)
+                if not self._policy_boundary(i):
                     idle_misses += 1
                     self._wake.wait(
                         min(
@@ -392,7 +417,8 @@ class A2WSRuntime:
                     )
                 continue
             idle_misses = 0
-            self._update_info(i)  # line 11
+            if self.info is not None:
+                self._update_info(i)  # line 11
             start = self.clock()
             try:
                 self.task_fn(i, task)  # line 12
@@ -403,8 +429,10 @@ class A2WSRuntime:
                 with self._log_lock:
                     self.errors.append((i, task, e))
                 self.dead[i] = True
-                self._update_info(i)
-                self.info.communicate(i)
+                if self.info is not None:
+                    self._update_info(i)
+                    self.info.communicate(i)
+                self.policy.on_worker_death(i, self.clock())
                 self.alive.accumulate(-1)
                 self._wake.set()  # idle sleepers must re-check alive state
                 if self.alive.load() == 0 and self.on_collapse is not None:
@@ -413,11 +441,13 @@ class A2WSRuntime:
                     # corresponding waiters fail instead of hanging.
                     self.on_collapse(self.drain_leftover_tasks())
                 return
+            mult = self.policy.task_multiplier(i)
+            if mult > 1.0:
+                _busy_wait((self.clock() - start) * (mult - 1.0), self.clock)
             end = self.clock()
             w.executed += 1
             w.runtime_sum += end - start
             w.ran_any = True
-            ran_a_task = True
             with self._log_lock:
                 stamps = self._arrivals.get(id(task))
                 arrival = stamps.pop(0) if stamps else float("nan")
@@ -427,8 +457,9 @@ class A2WSRuntime:
             self.done_counter.accumulate(1)
             if self._finished():
                 self._wake.set()  # completion wakes idle sleepers to exit
-            self._update_info(i)
-            self.info.communicate(i)  # line 13
+            if self.info is not None:
+                self._update_info(i)
+                self.info.communicate(i)  # line 13
 
     # ----------------------------------------------------------------- helpers
     def _update_info(self, i: int) -> None:
@@ -448,13 +479,13 @@ class A2WSRuntime:
             t_i = max(self.clock() - w.start_time, 1e-9)
         self.info.update_local(i, float(n_i), float(t_i))
 
-    def _try_steal(self, i: int) -> bool:
-        """Lines 4-8: steal_equation -> select_victim -> steal_task.
+    def _ring_view(self, i: int) -> tuple[np.ndarray, np.ndarray, np.ndarray, list[int]]:
+        """A2WS information model: what thief ``i`` may believe (§2.1/§2.2.1).
 
-        Decisions use ONLY the thief's information vector (plus the elapsed
-        wall time for preemptive estimates, §2.2.1) — never ground-truth reads
-        of remote state.  Over/under-estimates are absorbed by the Fig. 3b
-        atomic adjust-and-correct protocol, exactly as in the paper.
+        Estimates use ONLY the thief's information vector (plus the elapsed
+        wall time for preemptive estimates, §2.2.1) — never ground-truth
+        reads of remote state.  Over/under-estimates are absorbed by the
+        Fig. 3b atomic adjust-and-correct protocol, exactly as in the paper.
         """
         w = self.workers[i]
         n_view, t_view = self.info.view(i)
@@ -494,70 +525,105 @@ class A2WSRuntime:
                 # Estimated executed count from speed; remaining = n_j - done.
                 done_est = min(elapsed / max(t_view[j], 1e-9), n_view[j])
                 queued[j] = max(n_view[j] - done_est, 0.0)
-        decision = plan_steal(
-            w.rng, i, n_view, t_view, queued, self.radius,
+        return n_view, t_view, queued, window
+
+    def _make_view(self, i: int) -> PolicyView:
+        w = self.workers[i]
+        if self.info is not None:
+            n_view, t_view, queued, window = self._ring_view(i)
+        else:
+            n_view = t_view = queued = None
+            window = list(range(self.num_workers))
+        return PolicyView(
+            worker=i,
+            now=self.clock(),
             idle=len(w.deque) == 0,
+            ran_any=w.ran_any,
             open_arrival=self.open_arrival,
+            radius=self.radius,
+            num_workers=self.num_workers,
+            rng=w.rng,
+            window=window,
+            depth=lambda j: len(self.workers[j].deque),
+            alive=lambda j: not self.dead[j],
+            pending=self.pending,
+            n_view=n_view,
+            t_view=t_view,
+            queued=queued,
         )
-        if decision is None:
-            if not (self.open_arrival and len(w.deque) == 0):
-                return False
-            if self.pending() == 0:
-                # Nothing is queued or in flight anywhere — probing would
-                # only churn atomics and inflate failed_steals while the
-                # pool sits quiescent between request waves.
-                return False
-            # Probe steal (DESIGN.md §Open-arrival): a victim stuck inside a
-            # long task cannot publish the arrivals landing on its deque, so
-            # an idle thief's info vector can go PERMANENTLY stale — under
-            # closed workloads the preemptive wall-time estimate covers this,
-            # under open arrivals nothing does.  One speculative single-task
-            # get-accumulate doubles as a ground-truth depth read: the
-            # Fig. 3b correction path restores the deque when it was empty,
-            # and record_remote below folds the observed depth into the info
-            # vector either way.  Probe frequency is bounded by the idle
-            # backoff, so between waves this stays one cheap atomic per tick.
-            candidates = [j for j in window if j != i and not self.dead[j]]
-            if not candidates:
-                return False
-            decision = StealDecision(
-                victim=int(w.rng.choice(candidates)), amount=1,
-                criterion="probe",
-            )
-        victim = self.workers[decision.victim]
-        result = victim.deque.steal(decision.amount)  # Fig. 3b protocol
+
+    def _policy_boundary(self, i: int) -> bool:
+        """Consult the policy at a task boundary; execute any steal it plans
+        (Alg. 1 lines 4-8 for A2WS: steal_equation -> select_victim ->
+        steal_task via the Fig. 3b protocol)."""
+        view = self._make_view(i)
+        plan = self.policy.on_boundary(view)
+        if plan is None:
+            return False
+        if plan.delay > 0.0:
+            # Policy-priced dispatch latency (LW's leader round-trip),
+            # charged in CLOCK units: the policy booked its gate against
+            # view.now from self.clock, so a scaled/virtual clock must see
+            # the same delay it priced — a raw time.sleep would not.
+            deadline = self.clock() + plan.delay
+            while True:
+                remaining = deadline - self.clock()
+                if remaining <= 0.0:
+                    break
+                time.sleep(min(remaining, 1e-3))
+        victim = self.workers[plan.victim]
+        result = victim.deque.steal(plan.amount)  # Fig. 3b protocol
         # The get-accumulate snapshot tells the thief the victim's exact
         # remaining queue; fold it into the information vector (Table 1).
         observed_left = max(result.observed_tail - result.observed_head, 0)
-        if self.open_arrival:
-            # Depth semantics: the snapshot IS the depth at steal time.
-            victim_n_new = float(max(observed_left - len(result.tasks), 0))
-        else:
-            victim_n_new = n_view[decision.victim] - len(result.tasks)
+        got = len(result.tasks)
+        left = max(observed_left - got, 0)
         if not result:
             self._failed_steals += 1
             # Table 1 row 3: thief marks the victim position dirty anyway —
             # with n_j corrected down to what the snapshot implies.
-            if self.open_arrival:
-                corrected_n = float(observed_left)
-            else:
-                corrected_n = max(
-                    n_view[decision.victim] - observed_left, 0.0
+            if self.info is not None:
+                if self.open_arrival:
+                    corrected_n = float(observed_left)
+                else:
+                    corrected_n = max(
+                        view.n_view[plan.victim] - observed_left, 0.0
+                    )
+                self.info.record_remote(
+                    i, plan.victim, float(corrected_n),
+                    self.info.t[i, plan.victim],
                 )
-            self.info.record_remote(
-                i, decision.victim, float(corrected_n),
-                self.info.t[i, decision.victim],
-            )
+            self.policy.on_steal_result(view, plan, 0, left)
             return False
-        w.deque.push(result.tasks)
+        self.workers[i].deque.push(result.tasks)
         with self._log_lock:
-            self._steal_log.append(
-                (self.clock(), i, decision.victim, len(result.tasks))
+            self._steal_log.append((self.clock(), i, plan.victim, got))
+        if self.info is not None:
+            if self.open_arrival:
+                # Depth semantics: the snapshot IS the depth at steal time.
+                victim_n_new = float(left)
+            else:
+                victim_n_new = view.n_view[plan.victim] - got
+            # Table 1 row 2: thief refreshes its own and the victim's cells.
+            self._update_info(i)
+            self.info.record_remote(
+                i, plan.victim, float(victim_n_new),
+                self.info.t[i, plan.victim],
             )
-        # Table 1 row 2: thief refreshes its own and the victim's cells.
-        self._update_info(i)
-        self.info.record_remote(
-            i, decision.victim, float(victim_n_new),
-            self.info.t[i, decision.victim],
-        )
+        self.policy.on_steal_result(view, plan, got, left)
         return True
+
+
+def _busy_wait(duration: float, clock: Callable[[], float]) -> None:
+    """Burn CPU for ``duration`` seconds (models co-located thread
+    interference — a sleep would free the core, a real leader does not)."""
+    if duration <= 0:
+        return
+    end = clock() + duration
+    while clock() < end:
+        pass
+
+
+# The paper's runtime is the pool under its own policy: ``A2WSRuntime(...)``
+# constructs a ``WorkerPool`` with the default ``policy="a2ws"``.
+A2WSRuntime = WorkerPool

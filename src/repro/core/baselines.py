@@ -1,12 +1,11 @@
-"""Literature baselines the paper compares against (§4).
+"""Literature baselines the paper compares against (§4) — as policy shims.
 
-* **LW** — "Leader and Workers": classical centralized dynamic scheduling.  An
-  extra scheduler thread co-located with worker 0 hands out tasks on demand
-  from a central queue.  The paper's observed pathologies are reproduced
-  structurally: (a) worker 0 is slowed by the co-located leader thread
-  (Fig. 5b), and (b) the leader serializes requests, so it congests as the
-  node count grows (§4: "the primary node ... becomes increasingly
-  overloaded").
+* **LW** — "Leader and Workers": classical centralized dynamic scheduling.
+  The central queue lives on worker 0 (the leader is co-located, Fig. 5b):
+  worker 0 is slowed by ``leader_overhead`` and every other worker requests
+  one task at a time through a serialized leader gate (``service_time`` per
+  request), which congests as the node count grows (§4: "the primary node
+  ... becomes increasingly overloaded").
 
 * **CTWS** — Cyclic Token-based Work-Stealing (Assis et al., 2019).  A single
   token circulates the ring carrying the global task-count vector; only the
@@ -15,27 +14,27 @@
   exclusivity.  The cost is waiting for the token, which grows with the node
   count — the effect the paper beats.
 
-Both run on the same ``TaskDeque``/task_fn substrate as ``A2WSRuntime`` so the
-comparison isolates the scheduling policy.
+Since PR 2 both are thin wrappers over the shared ``WorkerPool`` substrate
+(``repro.core.a2ws``) parameterised by ``LWPolicy``/``CTWSPolicy``
+(``repro.core.policy``): the worker loops, deques, submit()/drain() open
+arrivals and latency telemetry are the substrate's, so the comparison
+isolates the scheduling policy — and the baselines gain everything the
+substrate grows (open arrivals, fault tombstones, ServePool serving).
 """
 
 from __future__ import annotations
 
-import queue as _queue
-import threading
 import time
 from typing import Callable, Sequence
 
-import numpy as np
-
-from .a2ws import RunStats, TaskRecord, partition_tasks
-from .deque import AtomicInt64, TaskDeque
+from .a2ws import WorkerPool
+from .policy import CTWSPolicy, LWPolicy
 
 __all__ = ["LWRuntime", "CTWSRuntime"]
 
 
-class LWRuntime:
-    """Centralized leader–workers scheduler (threaded)."""
+class LWRuntime(WorkerPool):
+    """Centralized leader–workers scheduler on the shared substrate."""
 
     def __init__(
         self,
@@ -45,92 +44,31 @@ class LWRuntime:
         *,
         leader_overhead: float = 0.0,
         service_time: float = 0.0,
+        request_rtt: float = 0.0,
         clock: Callable[[], float] = time.perf_counter,
+        **kw,
     ) -> None:
         """``leader_overhead``: fractional slowdown applied to worker 0's task
         execution (the co-located leader thread steals cycles).
         ``service_time``: leader-side seconds consumed per request (models the
-        serialization bottleneck at large worker counts)."""
-        self.tasks = list(tasks)
-        self.num_workers = num_workers
-        self.task_fn = task_fn
-        self.leader_overhead = leader_overhead
-        self.service_time = service_time
-        self.clock = clock
-        self._central: _queue.SimpleQueue = _queue.SimpleQueue()
-        self._request_q: _queue.SimpleQueue = _queue.SimpleQueue()
-        self._records: list[TaskRecord] = []
-        self._log_lock = threading.Lock()
-
-    def run(self) -> RunStats:
-        for task in self.tasks:
-            self._central.put(task)
-        t0 = self.clock()
-        per_worker = [0] * self.num_workers
-        per_runtime = [0.0] * self.num_workers
-        reply_qs = [_queue.SimpleQueue() for _ in range(self.num_workers)]
-        stop = threading.Event()
-
-        def leader() -> None:
-            remaining = len(self.tasks)
-            while remaining > 0:
-                wid = self._request_q.get()
-                if self.service_time:
-                    _busy_wait(self.service_time, self.clock)
-                try:
-                    task = self._central.get_nowait()
-                except _queue.Empty:
-                    reply_qs[wid].put(None)
-                    continue
-                remaining -= 1
-                reply_qs[wid].put(task)
-            stop.set()
-            for q in reply_qs:  # release any worker still waiting
-                q.put(None)
-
-        def worker(i: int) -> None:
-            while not stop.is_set():
-                self._request_q.put(i)
-                task = reply_qs[i].get()
-                if task is None:
-                    return
-                start = self.clock()
-                self.task_fn(i, task)
-                if i == 0 and self.leader_overhead:
-                    _busy_wait((self.clock() - start) * self.leader_overhead, self.clock)
-                end = self.clock()
-                per_worker[i] += 1
-                per_runtime[i] += end - start
-                with self._log_lock:
-                    self._records.append(TaskRecord(task, i, start, end))
-
-        threads = [threading.Thread(target=leader, daemon=True)]
-        threads += [
-            threading.Thread(target=worker, args=(i,), daemon=True)
-            for i in range(self.num_workers)
-        ]
-        for th in threads:
-            th.start()
-        for th in threads:
-            th.join()
-        t1 = self.clock()
-        return RunStats(
-            makespan=t1 - t0,
-            records=sorted(self._records, key=lambda r: r.start),
-            steals=[],
-            failed_steals=0,
-            info_cells_sent=0,
-            corrections=0,
-            per_worker_tasks=per_worker,
-            per_worker_mean_t=[
-                (rt / c) if c else float("nan")
-                for rt, c in zip(per_runtime, per_worker)
-            ],
+        serialization bottleneck at large worker counts).
+        ``request_rtt``: request/grant wire round-trip per dispatch."""
+        super().__init__(
+            tasks,
+            num_workers,
+            task_fn,
+            policy=LWPolicy(
+                leader_overhead=leader_overhead,
+                service_time=service_time,
+                request_rtt=request_rtt,
+            ),
+            clock=clock,
+            **kw,
         )
 
 
-class CTWSRuntime:
-    """Cyclic token-based work-stealing (threaded)."""
+class CTWSRuntime(WorkerPool):
+    """Cyclic token-based work-stealing on the shared substrate."""
 
     def __init__(
         self,
@@ -140,108 +78,18 @@ class CTWSRuntime:
         *,
         token_hop_time: float = 0.0,
         clock: Callable[[], float] = time.perf_counter,
+        **kw,
     ) -> None:
-        self.num_workers = num_workers
-        self.task_fn = task_fn
-        self.token_hop_time = token_hop_time
-        self.clock = clock
-        parts = partition_tasks(tasks, num_workers)
-        self.total = len(tasks)
-        self.deques = [TaskDeque(parts[i]) for i in range(num_workers)]
-        self.done = AtomicInt64(0)
-        # The token: a lock + the global remaining-task vector it carries.
-        self._token_lock = threading.Lock()
-        self._token_counts = np.array([len(d) for d in self.deques], dtype=np.int64)
-        self._token_at = 0
-        self._token_cond = threading.Condition()
-        self._steals: list[tuple[float, int, int, int]] = []
-        self._records: list[TaskRecord] = []
-        self._log_lock = threading.Lock()
-
-    def _handle_token(self, i: int, my: TaskDeque) -> None:
-        """If the token is at i: use it (steal iff empty) and pass it on.
-
-        The token circulates continuously — busy holders forward it at task
-        boundaries, idle holders steal first.  Only the holder may steal,
-        which is CTWS's race/deadlock-freedom argument.
-        """
-        with self._token_cond:
-            if self._token_at != i:
-                return
-            if self.token_hop_time:
-                # Token size grows with the node count (it carries the global
-                # task vector): hop cost scales with P.
-                _busy_wait(self.token_hop_time * self.num_workers, self.clock)
-            counts = self._token_counts
-            counts[i] = len(my)
-            if len(my) == 0:
-                victim = int(np.argmax(counts))
-                if victim != i and counts[victim] > 0:
-                    k = max(1, int(counts[victim]) // 2)
-                    res = self.deques[victim].steal(k)
-                    if res:
-                        my.push(res.tasks)
-                        with self._log_lock:
-                            self._steals.append(
-                                (self.clock(), i, victim, len(res.tasks))
-                            )
-                    counts[victim] = len(self.deques[victim])
-                counts[i] = len(my)
-            self._token_at = (self._token_at + 1) % self.num_workers
-            self._token_cond.notify_all()
-
-    def run(self) -> RunStats:
-        t0 = self.clock()
-        per_worker = [0] * self.num_workers
-        per_runtime = [0.0] * self.num_workers
-
-        def worker(i: int) -> None:
-            my = self.deques[i]
-            while self.done.load() < self.total:
-                self._handle_token(i, my)
-                task = my.get_task()
-                if task is None:
-                    # Empty deque: wait until the token comes around.
-                    with self._token_cond:
-                        if self._token_at != i:
-                            self._token_cond.wait(timeout=1e-3)
-                    continue
-                start = self.clock()
-                self.task_fn(i, task)
-                end = self.clock()
-                per_worker[i] += 1
-                per_runtime[i] += end - start
-                with self._log_lock:
-                    self._records.append(TaskRecord(task, i, start, end))
-                self.done.accumulate(1)
-
-        threads = [
-            threading.Thread(target=worker, args=(i,), daemon=True)
-            for i in range(self.num_workers)
-        ]
-        for th in threads:
-            th.start()
-        for th in threads:
-            th.join()
-        t1 = self.clock()
-        return RunStats(
-            makespan=t1 - t0,
-            records=sorted(self._records, key=lambda r: r.start),
-            steals=list(self._steals),
-            failed_steals=0,
-            info_cells_sent=0,
-            corrections=sum(d.corrections for d in self.deques),
-            per_worker_tasks=per_worker,
-            per_worker_mean_t=[
-                (rt / c) if c else float("nan")
-                for rt, c in zip(per_runtime, per_worker)
-            ],
+        """``token_hop_time``: per-node token transfer cost — the token
+        carries the global P-sized count vector, so the effective hop gate is
+        ``token_hop_time * num_workers`` (scales with the node count)."""
+        super().__init__(
+            tasks,
+            num_workers,
+            task_fn,
+            policy=CTWSPolicy(
+                num_workers, hop_time=token_hop_time * num_workers
+            ),
+            clock=clock,
+            **kw,
         )
-
-
-def _busy_wait(duration: float, clock: Callable[[], float]) -> None:
-    if duration <= 0:
-        return
-    end = clock() + duration
-    while clock() < end:
-        pass

@@ -119,13 +119,32 @@ class RingInfo:
         return 1
 
     # -------------------------------------------------------------- inspection
-    def view(self, i: int) -> tuple[np.ndarray, np.ndarray]:
-        """(n, t) rows as seen by process i; unknown t defaults to own t."""
+    def view(
+        self, i: int, default_t: float | None = None
+    ) -> tuple[np.ndarray, np.ndarray]:
+        """(n, t) rows as seen by process i, with unknown ``t`` cells filled.
+
+        Fallback order for a NaN cell: ``default_t`` when the caller passes
+        one (e.g. the preemptive wall-time estimate of §2.2.1), else the
+        MEAN of the t's process i actually knows — the subsystem-mean prior
+        says "an unreported neighbour is probably an average one", which
+        keeps Eq. 5's harmonic sum on the right scale.  Only when process i
+        knows NOTHING at all does 1.0 remain: with every cell equal, the
+        fair share degenerates to a pure task-count split, so the actual
+        constant cancels out.  (The old fallback of a flat 1.0 s whenever
+        the own cell was still NaN poisoned Eq. 5 for sub-millisecond
+        tasks: one fake 1 s neighbour dwarfs the real harmonic sum.)
+        """
         n = self.n[i].copy()
         t = self.t[i].copy()
-        own = t[i]
         mask = np.isnan(t)
-        t[mask] = own if own == own else 1.0
+        if mask.any():
+            if default_t is not None:
+                fill = default_t
+            else:
+                known = t[~mask]
+                fill = float(known.mean()) if known.size else 1.0
+            t[mask] = fill
         return n, t
 
     def window(self, i: int) -> list[int]:

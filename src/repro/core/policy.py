@@ -1,0 +1,421 @@
+"""Pluggable scheduling policies — one worker-loop substrate, many schedulers.
+
+The paper's contribution is a *policy* (adaptive victim selection + Eq. 4-7
+steal sizing over the §2.1 info ring), not the plumbing around it.  This
+module separates the two: a ``SchedPolicy`` decides *whether, whom and how
+much to steal* at every task boundary, while the execution substrates — the
+threaded ``repro.core.a2ws.WorkerPool`` (real time) and the discrete-event
+``repro.core.simulator`` (virtual time) — own deques, clocks, termination and
+telemetry.  The SAME policy objects drive both planes, so every policy is
+measurable under closed batches and open arrivals, threaded and simulated,
+with identical semantics (DESIGN.md §Policy layer).
+
+Hook contract
+-------------
+``on_boundary(view) -> StealPlan | None`` is called at every task boundary
+and idle tick with a :class:`PolicyView` of what the worker may legally know:
+its info-ring estimates (ring policies), one-sided ground-truth depth reads
+(``view.depth`` — an RMA head/tail snapshot costs one atomic in the paper's
+protocol, so classical random stealing and token counts may use it), the
+plane clock and the worker's rng.  Returning a plan asks the substrate to
+execute the Fig. 3b steal; the substrate then reports the outcome through
+``on_steal_result`` (the get-accumulate snapshot is knowledge the policy may
+fold into its own state — Table 1 rows 2-3).
+
+Policies must be thread-safe across workers in the threaded plane: any
+cross-worker state (CTWS token, LW leader gate) takes an internal lock.
+Policies must NOT keep per-plane state keyed on wall time — ``view.now`` is
+the only clock, so the same object works under both real and virtual time.
+
+Implementations
+---------------
+* :class:`A2WSPolicy`   — the paper: Eq. 5 steal rate over the radius-R info
+  ring, §2.2.2 victim selection, γ-rounding, probe steals under open arrivals.
+* :class:`CTWSPolicy`   — Assis et al. 2019: one token circulates the ring
+  carrying the global count vector; only the holder steals (half of the most
+  loaded victim), hop cost grows with P.
+* :class:`LWPolicy`     — leader–workers: worker 0 co-hosts the central queue
+  (its deque); everyone else requests one task at a time through a serialized
+  leader gate (service time + request RTT); worker 0 runs slower by
+  ``leader_overhead`` (the co-located distributor thread).
+* :class:`RandomWSPolicy` — classical receiver-initiated random stealing
+  (uniform victim, steal-half), the baseline of arXiv:2211.00838 /
+  arXiv:1911.06714.
+"""
+
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass
+from typing import Callable, Sequence
+
+import numpy as np
+
+from .steal import plan_steal
+
+__all__ = [
+    "StealPlan",
+    "PolicyView",
+    "SchedPolicy",
+    "A2WSPolicy",
+    "CTWSPolicy",
+    "LWPolicy",
+    "RandomWSPolicy",
+    "POLICIES",
+    "make_policy",
+]
+
+
+@dataclass(frozen=True)
+class StealPlan:
+    """A resolved transfer request: take ``amount`` tasks from ``victim``.
+
+    ``delay``: dispatch latency in seconds charged before the loot lands on
+    the thief's deque (LW's leader round-trip).  0.0 means "use the plane's
+    default transport cost" (none in the threaded plane, ``steal_latency`` in
+    the simulator).
+    """
+
+    victim: int
+    amount: int
+    criterion: str = ""
+    delay: float = 0.0
+
+
+@dataclass
+class PolicyView:
+    """What one worker may legally know at a task boundary.
+
+    Built by the substrate, consumed by the policy.  Ring estimates
+    (``n_view``/``t_view``/``queued``) are the plane's *information model* —
+    delayed, radius-limited, preemptively extrapolated — and are ``None`` for
+    policies that declared ``uses_ring = False``.  ``depth``/``alive`` are
+    one-sided ground-truth reads (one RMA atomic each in the paper's
+    protocol).  ``rng`` is the plane's generator (per-worker when threaded,
+    global when simulated) so decision sampling stays reproducible per plane.
+    """
+
+    worker: int
+    now: float
+    #: the worker's own deque is EMPTY — same strict meaning in both planes,
+    #: so strict-idle policies (LW requests, random/probe steals) behave
+    #: identically threaded and simulated
+    idle: bool
+    ran_any: bool
+    open_arrival: bool
+    radius: int
+    num_workers: int
+    rng: np.random.Generator
+    window: list[int]
+    depth: Callable[[int], int]
+    alive: Callable[[int], bool]
+    pending: Callable[[], int]
+    n_view: np.ndarray | None = None
+    t_view: np.ndarray | None = None
+    queued: np.ndarray | None = None
+    #: tasks already stolen/granted but still in transit to THIS worker —
+    #: nonzero only under the simulator (threaded transfers are synchronous);
+    #: one-request-at-a-time policies gate on it to avoid duplicate requests
+    inflight: Callable[[], int] = lambda: 0
+    #: the plane's "(nearly) idle" signal for the A2WS tail rule
+    #: (``plan_steal(idle=...)``): the threaded plane reports empty-deque,
+    #: the simulator reports depth<=1 (at a finish event the next pop is
+    #: imminent).  Plane-calibrated by design — A2WS's own semantics predate
+    #: the policy layer and are preserved exactly.  None = same as ``idle``.
+    near_idle: bool | None = None
+
+
+class SchedPolicy:
+    """Base scheduling policy: hook defaults shared by all implementations."""
+
+    name: str = "base"
+    #: substrate builds the RingInfo board / delayed-view histories iff True
+    uses_ring: bool = False
+    #: open-arrival ``submit()`` routes here when set (LW's central queue);
+    #: None = the substrate's default round-robin spray
+    central: int | None = None
+
+    # ------------------------------------------------------------- lifecycle
+    def partition(self, tasks: Sequence, num_workers: int) -> list[list]:
+        """Initial task placement (§2.2.1 static block split by default)."""
+        from .a2ws import partition_tasks
+
+        return partition_tasks(tasks, num_workers)
+
+    def on_start(self, depths: Sequence[int], now: float) -> None:
+        """Substrate booted: initial per-worker queue depths."""
+
+    def termination(self, now: float) -> None:
+        """Quiescence reached: release any policy-held state (token waits,
+        leader gates).  Purely a notification — the substrate's counters
+        decide termination, the policy cannot veto it."""
+
+    # -------------------------------------------------------------- stealing
+    def on_boundary(self, view: PolicyView) -> StealPlan | None:
+        raise NotImplementedError
+
+    def on_steal_result(
+        self, view: PolicyView, plan: StealPlan, got: int, left: int
+    ) -> None:
+        """Outcome of an executed plan: ``got`` tasks transferred, ``left``
+        tasks observed remaining on the victim (get-accumulate snapshot)."""
+
+    # ---------------------------------------------------------------- faults
+    def on_worker_death(self, worker: int, now: float) -> None:
+        """A worker tombstoned itself (its re-queued tasks stay stealable)."""
+
+    # --------------------------------------------------------------- costing
+    def task_multiplier(self, worker: int) -> float:
+        """Execution-time inflation for ``worker`` (LW's co-located leader
+        slows worker 0).  1.0 = run at native speed."""
+        return 1.0
+
+
+class A2WSPolicy(SchedPolicy):
+    """The paper's adaptive smart stealing (§2.2) over the §2.1 info ring.
+
+    Decision state lives entirely in the information plane the substrate
+    provides (``n_view``/``t_view``/``queued``), so the object itself is
+    stateless and trivially thread-safe.  ``probe``: under open arrivals an
+    idle thief whose view went stale fires one speculative single-task steal
+    per idle tick (DESIGN.md §Open-arrival); the get-accumulate doubles as a
+    ground-truth depth read either way.
+    """
+
+    name = "a2ws"
+    uses_ring = True
+
+    def __init__(self, probe: bool = True) -> None:
+        self.probe = probe
+
+    def on_boundary(self, view: PolicyView) -> StealPlan | None:
+        near_idle = view.near_idle if view.near_idle is not None else view.idle
+        if not near_idle and not view.ran_any:
+            # Preemptive stealing starts at the first completed task
+            # (Alg. 1 lines 3-9 gate); idle workers always try.
+            return None
+        decision = plan_steal(
+            view.rng, view.worker, view.n_view, view.t_view, view.queued,
+            view.radius, idle=near_idle, open_arrival=view.open_arrival,
+        )
+        if decision is None:
+            return self._probe(view)
+        return StealPlan(decision.victim, decision.amount, decision.criterion)
+
+    def _probe(self, view: PolicyView) -> StealPlan | None:
+        if not (self.probe and view.open_arrival):
+            return None
+        if view.depth(view.worker) > 0 or view.inflight() > 0:
+            return None
+        if view.pending() == 0:
+            # Nothing queued or in flight anywhere — probing would only
+            # churn atomics while the pool sits quiescent between waves.
+            return None
+        candidates = [
+            j for j in view.window if j != view.worker and view.alive(j)
+        ]
+        if not candidates:
+            return None
+        return StealPlan(int(view.rng.choice(candidates)), 1, "probe")
+
+
+class CTWSPolicy(SchedPolicy):
+    """Cyclic token-based work-stealing (Assis et al., 2019).
+
+    One token circulates the ring carrying the global task-count vector;
+    only the holder may steal (race/deadlock freedom by exclusivity), it
+    steals HALF the most-loaded victim's tasks, and it steals only when its
+    own deque is empty.  Busy holders forward the token at task boundaries.
+    ``hop_time`` models the token transfer cost (it carries a P-sized
+    vector, so real deployments scale it with P): the token is usable only
+    ``hop_time`` seconds after the previous holder released it — a virtual
+    gate that works identically under wall and simulated time.
+    """
+
+    name = "ctws"
+
+    def __init__(self, num_workers: int, hop_time: float = 0.0) -> None:
+        self.num_workers = num_workers
+        self.hop_time = hop_time
+        self.counts = np.zeros(num_workers, dtype=np.int64)
+        self.token_at = 0
+        self.token_ready = 0.0
+        self._dead: set[int] = set()
+        self._lock = threading.Lock()
+
+    def on_start(self, depths: Sequence[int], now: float) -> None:
+        with self._lock:
+            # Reset circulation state so the same policy object can drive a
+            # fresh run (HetDPTrainer builds one runtime per optimizer step).
+            self.counts[: len(depths)] = depths
+            self.token_at = 0
+            self.token_ready = now + self.hop_time
+            self._dead.clear()
+
+    def _advance(self, now: float) -> None:
+        # Pass the token, skipping tombstoned workers (a dead holder would
+        # freeze the ring forever — the liveness hole of token schemes).
+        for _ in range(self.num_workers):
+            self.token_at = (self.token_at + 1) % self.num_workers
+            if self.token_at not in self._dead:
+                break
+        self.token_ready = now + self.hop_time
+
+    def on_boundary(self, view: PolicyView) -> StealPlan | None:
+        i = view.worker
+        with self._lock:
+            if self.token_at != i or view.now < self.token_ready:
+                return None
+            my_depth = view.depth(i)
+            self.counts[i] = my_depth
+            # Tombstoned workers stop publishing, but their deques (holding
+            # their re-queued tasks) stay readable — fold in ground truth so
+            # orphaned work is rescued instead of stranded.
+            for j in self._dead:
+                self.counts[j] = view.depth(j)
+            plan = None
+            if my_depth == 0 and view.inflight() == 0:
+                victim = int(np.argmax(self.counts))
+                if victim != i and self.counts[victim] > 0:
+                    plan = StealPlan(
+                        victim, max(1, int(self.counts[victim]) // 2), "token"
+                    )
+            self._advance(view.now)
+            return plan
+
+    def on_steal_result(
+        self, view: PolicyView, plan: StealPlan, got: int, left: int
+    ) -> None:
+        with self._lock:
+            # The holder refreshes the vector entries it just learned
+            # first-hand (the token carries them to everyone downstream).
+            self.counts[plan.victim] = left
+            self.counts[view.worker] = view.depth(view.worker)
+
+    def on_worker_death(self, worker: int, now: float) -> None:
+        with self._lock:
+            self._dead.add(worker)
+            self.counts[worker] = 0
+            if self.token_at == worker:
+                self._advance(now)
+
+
+class LWPolicy(SchedPolicy):
+    """Centralized leader–workers dynamic scheduling (paper §4 baseline).
+
+    The central queue is worker 0's deque (the leader is co-located with
+    worker 0, as in the paper): worker 0 pops it directly, every other worker
+    requests ONE task at a time through the leader.  The leader is a serial
+    server — each request waits for ``leader_free``, holds it for
+    ``service_time`` and pays ``request_rtt`` on the wire — which reproduces
+    the paper's congestion pathology as the worker count grows.  Worker 0
+    additionally runs ``1 + leader_overhead`` slower (the co-located
+    distributor thread steals its cycles, Fig. 5b).
+    """
+
+    name = "lw"
+    central = 0
+
+    def __init__(
+        self,
+        leader_overhead: float = 0.0,
+        service_time: float = 0.0,
+        request_rtt: float = 0.0,
+    ) -> None:
+        self.leader_overhead = leader_overhead
+        self.service_time = service_time
+        self.request_rtt = request_rtt
+        self.leader_free = 0.0
+        self._lock = threading.Lock()
+
+    def partition(self, tasks: Sequence, num_workers: int) -> list[list]:
+        # Everything starts on the central queue (worker 0's deque).
+        out: list[list] = [[] for _ in range(num_workers)]
+        out[0] = list(tasks)
+        return out
+
+    def on_start(self, depths: Sequence[int], now: float) -> None:
+        with self._lock:
+            self.leader_free = now  # fresh run: the leader starts idle
+
+    def task_multiplier(self, worker: int) -> float:
+        return 1.0 + self.leader_overhead if worker == 0 else 1.0
+
+    def on_boundary(self, view: PolicyView) -> StealPlan | None:
+        i = view.worker
+        if not view.idle or view.inflight() > 0:
+            # One outstanding request at a time (classical on-demand
+            # dispatch — a worker never queues ahead at the leader).
+            return None
+        # Fault recovery: a tombstoned worker's re-queued tasks sit on its
+        # own (still readable) deque — reclaim them before they strand.
+        for j in range(view.num_workers):
+            if j != i and not view.alive(j) and view.depth(j) > 0:
+                return StealPlan(j, view.depth(j), "reclaim")
+        if i == 0:
+            # The leader's co-located worker has direct queue access; other
+            # workers only request when they have nothing to run (classical
+            # on-demand dispatch).
+            return None
+        if view.depth(0) == 0 or not view.alive(0):
+            return None
+        with self._lock:
+            start = max(view.now + self.request_rtt / 2.0, self.leader_free)
+            self.leader_free = start + self.service_time
+            grant = self.leader_free + self.request_rtt / 2.0
+        return StealPlan(0, 1, "leader", delay=max(grant - view.now, 0.0))
+
+
+class RandomWSPolicy(SchedPolicy):
+    """Classical receiver-initiated random work-stealing: an idle thief
+    probes a uniformly random victim and steals HALF its queue (the baseline
+    both arXiv:2211.00838 and arXiv:1911.06714 compare against).
+
+    No information ring: the victim's depth comes from the one-sided
+    head/tail snapshot (``view.depth`` — one RMA atomic), and victims are
+    drawn over the WHOLE system, not a radius window.
+    """
+
+    name = "random"
+
+    def on_boundary(self, view: PolicyView) -> StealPlan | None:
+        if not view.idle or view.inflight() > 0:
+            return None
+        i = view.worker
+        # Any non-empty deque is fair game — including a tombstoned worker's
+        # (still readable, holding its re-queued tasks).
+        loaded = [
+            j for j in range(view.num_workers)
+            if j != i and view.depth(j) > 0
+        ]
+        if not loaded:
+            return None
+        victim = int(view.rng.choice(loaded))
+        return StealPlan(victim, max(1, view.depth(victim) // 2), "random-half")
+
+
+POLICIES = ("a2ws", "ctws", "lw", "random")
+
+
+def make_policy(spec: str | SchedPolicy, num_workers: int, **kw) -> SchedPolicy:
+    """Resolve a policy spec (name or ready instance) to a policy object.
+
+    Keyword arguments are forwarded to the named policy's constructor
+    (``hop_time`` for ctws; ``leader_overhead``/``service_time``/
+    ``request_rtt`` for lw) and must be empty for an instance spec.
+    """
+    if isinstance(spec, SchedPolicy):
+        if kw:
+            raise ValueError(
+                f"policy kwargs {sorted(kw)} conflict with an instance spec"
+            )
+        return spec
+    if spec == "a2ws":
+        return A2WSPolicy(**kw)
+    if spec == "ctws":
+        return CTWSPolicy(num_workers, **kw)
+    if spec == "lw":
+        return LWPolicy(**kw)
+    if spec == "random":
+        return RandomWSPolicy(**kw)
+    raise ValueError(f"unknown policy {spec!r}; known: {', '.join(POLICIES)}")

@@ -1,4 +1,4 @@
-"""Discrete-event simulator of A2WS / CTWS / LW on a heterogeneous cluster.
+"""Discrete-event simulator: the virtual-time plane of the policy substrate.
 
 Reproduces the paper's experimental setup (§4) deterministically and fast:
 SDumont nodes throttled to {1,2,4,8,16,24} cores via SLURM heterogeneous jobs
@@ -6,28 +6,40 @@ SDumont nodes throttled to {1,2,4,8,16,24} cores via SLURM heterogeneous jobs
 speed proportional to core count (the shot solver scales over cores; Fig. 5's
 task-count ratios ~24x between 24-core and 1-core nodes confirm this model).
 
-The simulator advances *virtual time* through an event heap.  It exercises the
-exact same decision code as the threaded runtime (``repro.core.steal``) so the
-paper's mathematics is tested once and measured twice.
+The simulator advances *virtual time* through an event heap, and it drives
+the exact same ``SchedPolicy`` objects (``repro.core.policy``) as the
+threaded ``WorkerPool`` — A2WS, CTWS, LW and random work-stealing all run on
+one event loop, so the paper's mathematics is tested once and measured twice
+and every policy is available in both the real-time and virtual-time planes
+with identical telemetry (DESIGN.md §Policy layer).  Open-arrival modes
+(``poisson``/``trace``) work for every policy.
 
 Modelled costs (all configurable):
 
 * task duration         = task_cost / speed_i * lognormal(noise)
-* info propagation      : process i's view of process j lags by the ring
-                          distance d(i,j): each relay forwards at its own task
-                          boundaries, so per-hop delay = hop_latency + half the
-                          relay's current mean task time.  Radius R caps the
-                          window (Eq. 5) — beyond R there is NO information.
+                          * policy.task_multiplier(i)  (LW leader co-location)
+* info propagation      : ring policies only.  Process i's view of process j
+                          lags by the ring distance d(i,j): each relay
+                          forwards at its own task boundaries, so per-hop
+                          delay = hop_latency + half the relay's current mean
+                          task time.  Radius R caps the window (Eq. 5) —
+                          beyond R there is NO information.
 * info send overhead    : comm_cell_cost * cells per boundary (grows with R —
-                          the Fig. 4 tradeoff).
+                          the Fig. 4 tradeoff; ring policies only).
 * steal                 : round-trip steal_latency + per-task payload cost;
                           claimed tasks leave the victim at decision time and
-                          reach the thief after the transfer delay.
-* CTWS token            : hop time = token_base + token_per_node * P; only the
-                          holder steals (half of the most-loaded victim).
+                          reach the thief after the transfer delay.  A policy
+                          may price the dispatch itself (``StealPlan.delay``,
+                          LW's leader round-trip), which then replaces the
+                          default transport cost.
+* CTWS token            : hop gate = token_base + token_per_node * P; only
+                          the holder steals (half of the most-loaded victim),
+                          and busy holders forward the token at task
+                          boundaries — exactly like the threaded plane.
 * LW                    : serialized leader (service time per request +
                           request round-trip); worker 0 runs slower by
-                          leader_overhead (the co-located distributor thread).
+                          leader_overhead (the co-located distributor
+                          thread) and co-hosts the central queue.
 """
 
 from __future__ import annotations
@@ -36,18 +48,19 @@ import heapq
 from bisect import bisect_right
 from collections import deque as _deque
 from dataclasses import dataclass, field, replace
-from typing import Literal
 
 import numpy as np
 
 from .a2ws import latency_percentiles
-from .steal import plan_steal
+from .policy import PolicyView, SchedPolicy, make_policy
+from .steal import neighborhood
 
 __all__ = [
     "SimConfig",
     "SimResult",
     "table2_speeds",
     "simulate",
+    "sim_policy",
     "CORE_STEPS",
 ]
 
@@ -102,7 +115,7 @@ class SimConfig:
     task_cost: float = 60.0  # seconds of work per task at speed 1.0
     noise: float = 0.03
     seed: int = 0
-    # --- A2WS ---
+    # --- ring policies (A2WS) ---
     radius: int | None = None  # None -> 20% of P (paper's operating point)
     hop_latency: float = 2e-3
     # §2.1: info is forwarded "during the task execution if the application
@@ -113,13 +126,13 @@ class SimConfig:
     steal_latency: float = 2e-2
     steal_per_task: float = 2e-3
     retry_interval: float = 5e-2
-    # --- open arrivals (DESIGN.md §Open-arrival; A2WS policy only) ---
+    # --- open arrivals (DESIGN.md §Open-arrival; all policies) ---
     # "closed": the paper's workload — all tasks present at t=0 (§2.2.1).
     # "poisson": num_tasks tasks arrive with Exp(1/arrival_rate) gaps and are
-    #            round-robined across nodes (the front-end sprays; adaptive
-    #            stealing balances).
+    #            routed by the policy (round-robin spray by default, the
+    #            central queue for LW).
     # "trace":   arrival_trace gives the absolute arrival times verbatim.
-    arrival: Literal["closed", "poisson", "trace"] = "closed"
+    arrival: str = "closed"
     arrival_rate: float = 0.0  # tasks/second entering the system (poisson)
     arrival_trace: tuple[float, ...] = ()  # absolute times (trace mode)
     # --- CTWS ---
@@ -171,7 +184,7 @@ class SimResult:
 
 
 # --------------------------------------------------------------------------- #
-#                                   A2WS                                       #
+#                       generic policy-driven event loop                       #
 # --------------------------------------------------------------------------- #
 
 
@@ -214,26 +227,53 @@ def _arrival_times(cfg: SimConfig, rng: np.random.Generator) -> np.ndarray:
     raise ValueError(f"not an open-arrival mode: {cfg.arrival!r}")
 
 
-def _simulate_a2ws(cfg: SimConfig) -> SimResult:
+def sim_policy(spec: str | SchedPolicy, cfg: SimConfig) -> SchedPolicy:
+    """Resolve a policy spec against the simulator's cost model (the plane
+    owns the policy *parameters* — hop gates, leader service — because they
+    are measured quantities of the modelled cluster, not of the policy).
+
+    Name dispatch itself lives in ``policy.make_policy`` (the single
+    registry); this only translates SimConfig costs into the named policy's
+    constructor kwargs, so a new registered policy without sim-specific
+    costs is simulatable with no change here.
+    """
+    if isinstance(spec, SchedPolicy):
+        return spec
+    kw: dict = {}
+    if spec == "ctws":
+        kw = {"hop_time": cfg.token_base + cfg.token_per_node * cfg.P}
+    elif spec == "lw":
+        kw = {
+            "leader_overhead": cfg.leader_overhead,
+            "service_time": cfg.leader_service,
+            "request_rtt": cfg.request_rtt,
+        }
+    return make_policy(spec, cfg.P, **kw)
+
+
+def simulate(policy: str | SchedPolicy, cfg: SimConfig) -> SimResult:
+    """Run ``cfg`` under ``policy`` ("a2ws" | "ctws" | "lw" | "random", or a
+    ready ``SchedPolicy`` instance) on the virtual-time substrate."""
+    pol = sim_policy(policy, cfg)
     p = cfg.P
     rng = np.random.default_rng(cfg.seed)
     radius = cfg.radius if cfg.radius is not None else max(1, round(0.2 * p))
     radius = min(radius, p // 2)
     open_mode = cfg.arrival != "closed"
+    uses_ring = pol.uses_ring
 
     # Per-node queues hold ARRIVAL STAMPS (the simulator's task identity —
     # enough for latency accounting).  Head = left (owner pops, new arrivals
     # land), tail = right (thieves claim the oldest waiters), matching the
-    # TaskDeque discipline of the threaded runtime.
+    # TaskDeque discipline of the threaded runtime.  Initial placement is the
+    # policy's (static block split by default, the central queue for LW).
     queues: list[_deque] = [_deque() for _ in range(p)]
     if open_mode:
         arrivals = _arrival_times(cfg, rng)
         total_tasks = len(arrivals)
     else:
-        # Static block partition (paper §2.2.1): everything arrives at t=0.
-        base, rem = divmod(cfg.num_tasks, p)
-        for i in range(p):
-            queues[i].extend([0.0] * (base + (1 if i < rem else 0)))
+        for i, part in enumerate(pol.partition([0.0] * cfg.num_tasks, p)):
+            queues[i].extend(part)
         arrivals = np.empty(0)
         total_tasks = cfg.num_tasks
 
@@ -244,15 +284,18 @@ def _simulate_a2ws(cfg: SimConfig) -> SimResult:
     runtime_sum = np.zeros(p, np.float64)
     busy = np.zeros(p, np.float64)
     hist = [_History() for _ in range(p)]
-    for i in range(p):
-        hist[i].append(0.0, float(depth(i)), float("nan"))
+    if uses_ring:
+        for i in range(p):
+            hist[i].append(0.0, float(depth(i)), float("nan"))
     cur_t = np.full(p, np.nan)  # latest own estimate (for relay pacing)
     pending_dur = np.zeros(p, np.float64)  # duration of the task in flight
     pending_arr = np.zeros(p, np.float64)  # arrival stamp of that task
     idle_since = np.full(p, -1.0)
+    in_transit = np.zeros(p, np.int64)  # loot scheduled but not yet received
+    arrived = 0 if open_mode else total_tasks
     records: list[tuple[int, float, float]] = []
     latencies: list[float] = []
-    steals = failed = moved = 0
+    stats = {"steals": 0, "failed": 0, "moved": 0, "done": 0}
 
     # Event heap: (time, seq, kind, node, payload)
     heap: list[tuple[float, int, str, int, object]] = []
@@ -280,15 +323,21 @@ def _simulate_a2ws(cfg: SimConfig) -> SimResult:
         dur = cfg.task_cost / cfg.speeds[i]
         if cfg.noise:
             dur *= float(rng.lognormal(0.0, cfg.noise))
+        dur *= pol.task_multiplier(i)  # LW: co-located leader slows worker 0
         # Sender-side info-communication overhead at the task boundary: the
         # dirty part of the window goes to both neighbours (≤ R cells each).
-        overhead = cfg.comm_cell_cost * 2 * radius
+        overhead = cfg.comm_cell_cost * 2 * radius if uses_ring else 0.0
         pending_dur[i] = dur
         push_event(now + overhead + dur, "finish", i)
         busy[i] += dur
         records.append((i, now + overhead, now + overhead + dur))
 
-    def view_for(i: int, now: float) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    def _own_t(i: int, now: float) -> float:
+        if executed[i] > 0:
+            return runtime_sum[i] / executed[i]
+        return max(now, 1e-9)
+
+    def ring_view(i: int, now: float) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
         """Delayed (n, t, queued-estimate) views of the window around i."""
         n_view = np.zeros(p)
         t_view = np.ones(p)
@@ -327,253 +376,125 @@ def _simulate_a2ws(cfg: SimConfig) -> SimResult:
                 queued[j] = max(n_j - done_est, 0.0)
         return n_view, t_view, queued
 
-    def _own_t(i: int, now: float) -> float:
-        if executed[i] > 0:
-            return runtime_sum[i] / executed[i]
-        return max(now, 1e-9)
-
-    def try_steal(i: int, now: float) -> bool:
-        nonlocal steals, failed, moved
-        n_view, t_view, queued = view_for(i, now)
-        decision = plan_steal(
-            rng, i, n_view, t_view, queued, radius,
-            idle=depth(i) <= 1, open_arrival=open_mode,
+    def make_view(i: int, now: float) -> PolicyView:
+        if uses_ring:
+            n_view, t_view, queued = ring_view(i, now)
+            window = neighborhood(i, p, radius)
+        else:
+            n_view = t_view = queued = None
+            window = list(range(p))
+        return PolicyView(
+            worker=i,
+            now=now,
+            idle=depth(i) == 0,
+            near_idle=depth(i) <= 1,
+            ran_any=bool(executed[i] > 0),
+            open_arrival=open_mode,
+            radius=radius,
+            num_workers=p,
+            rng=rng,
+            window=window,
+            depth=depth,
+            alive=lambda j: True,
+            pending=lambda: arrived - stats["done"],
+            n_view=n_view,
+            t_view=t_view,
+            queued=queued,
+            inflight=lambda: int(in_transit[i]),
         )
-        if decision is None:
+
+    def boundary(i: int, now: float) -> bool:
+        """Task-boundary policy consultation + steal execution (the
+        simulator's analogue of WorkerPool._policy_boundary)."""
+        view = make_view(i, now)
+        plan = pol.on_boundary(view)
+        if plan is None:
             return False
-        v = decision.victim
+        v = plan.victim
         avail = depth(v)  # get-accumulate ground truth at the victim
-        take = min(decision.amount, avail)
+        take = min(plan.amount, avail)
         if take <= 0:
-            failed += 1
+            stats["failed"] += 1
+            pol.on_steal_result(view, plan, 0, avail)
             return False
         stamps = [queues[v].pop() for _ in range(take)]  # tail: oldest waiters
-        hist[v].append(now, reported_n(v), _own_t(v, now))
-        arrive = now + cfg.steal_latency + cfg.steal_per_task * take
+        if uses_ring:
+            hist[v].append(now, reported_n(v), _own_t(v, now))
+        # Transport: policy-priced dispatch (LW leader round-trip) or the
+        # plane's default steal cost.
+        if plan.delay > 0.0:
+            arrive = now + plan.delay
+        else:
+            arrive = now + cfg.steal_latency + cfg.steal_per_task * take
+        in_transit[i] += take
         push_event(arrive, "receive", i, stamps)
-        steals += 1
-        moved += take
+        stats["steals"] += 1
+        stats["moved"] += take
+        pol.on_steal_result(view, plan, take, depth(v))
         return True
 
     # Boot: all nodes start their first task at t=0; open-arrival tasks
-    # enter through "arrive" events (round-robin routed — the front-end
-    # sprays, adaptive stealing balances).
+    # enter through "arrive" events, routed by the policy (round-robin spray
+    # by default, the central queue for LW).
     for k, t_arr in enumerate(arrivals):
-        push_event(float(t_arr), "arrive", k % p, float(t_arr))
+        target = pol.central if pol.central is not None else k % p
+        push_event(float(t_arr), "arrive", target, float(t_arr))
+    pol.on_start([depth(i) for i in range(p)], 0.0)
     for i in range(p):
         start_task(i, 0.0)
 
     makespan = 0.0
-    total_done = 0
-    while heap and total_done < total_tasks:
+    while heap and stats["done"] < total_tasks:
         now, _, kind, i, payload = heapq.heappop(heap)
         if kind == "finish":
             executed[i] += 1
-            total_done += 1
+            stats["done"] += 1
             runtime_sum[i] += pending_dur[i]
             if open_mode:
                 latencies.append(now - pending_arr[i])
             makespan = max(makespan, now)
-            # Update own info + history (Alg. 1 line 11 + communicate).
-            cur_t[i] = runtime_sum[i] / executed[i]
-            hist[i].append(now, reported_n(i), cur_t[i])
+            if uses_ring:
+                # Update own info + history (Alg. 1 line 11 + communicate).
+                cur_t[i] = runtime_sum[i] / executed[i]
+                hist[i].append(now, reported_n(i), cur_t[i])
             # Smart stealing right after finishing a task (preemptive).
-            try_steal(i, now)
+            boundary(i, now)
             start_task(i, now)
         elif kind == "arrive":
+            arrived += 1
             queues[i].appendleft(float(payload))  # head side, like submit()
-            hist[i].append(now, reported_n(i), _own_t(i, now))
+            if uses_ring:
+                hist[i].append(now, reported_n(i), _own_t(i, now))
             if idle_since[i] >= 0.0:
                 idle_since[i] = -1.0
                 start_task(i, now)
         elif kind == "receive":
             queues[i].extendleft(payload)  # stolen goods land head-side
-            hist[i].append(now, reported_n(i), _own_t(i, now))
+            in_transit[i] -= len(payload)
+            if uses_ring:
+                hist[i].append(now, reported_n(i), _own_t(i, now))
             if idle_since[i] >= 0.0:
                 idle_since[i] = -1.0
                 start_task(i, now)
         elif kind == "retry":
             if queues[i] or idle_since[i] < 0.0:
                 continue  # no longer idle
-            if total_done >= total_tasks:
+            if stats["done"] >= total_tasks:
                 continue
-            if not try_steal(i, now):
+            if not boundary(i, now):
                 # mild exponential backoff so long idle tails stay cheap
                 delay = cfg.retry_interval * (1.3 ** min(payload, 12))
                 push_event(now + delay, "retry", i, payload + 1)
             # on success the stolen tasks arrive via a "receive" event
 
+    pol.termination(makespan)
     return SimResult(
         makespan=makespan,
         per_node_tasks=[int(x) for x in executed],
         per_node_busy=[float(b) for b in busy],
-        steals=steals,
-        failed_steals=failed,
-        moved_tasks=moved,
+        steals=stats["steals"],
+        failed_steals=stats["failed"],
+        moved_tasks=stats["moved"],
         records=records,
         latencies=latencies,
     )
-
-
-# --------------------------------------------------------------------------- #
-#                                   CTWS                                       #
-# --------------------------------------------------------------------------- #
-
-
-def _simulate_ctws(cfg: SimConfig) -> SimResult:
-    p = cfg.P
-    rng = np.random.default_rng(cfg.seed)
-    base, rem = divmod(cfg.num_tasks, p)
-    queue = np.array([base + (1 if i < rem else 0) for i in range(p)], np.int64)
-    executed = np.zeros(p, np.int64)
-    busy = np.zeros(p, np.float64)
-    idle = np.zeros(p, bool)
-    records: list[tuple[int, float, float]] = []
-    steals = moved = 0
-    hop = cfg.token_base + cfg.token_per_node * p
-
-    heap: list[tuple[float, int, str, int, int]] = []
-    seq = 0
-
-    def push_event(time: float, kind: str, node: int, payload: int = 0) -> None:
-        nonlocal seq
-        heapq.heappush(heap, (time, seq, kind, node, payload))
-        seq += 1
-
-    def start_task(i: int, now: float) -> None:
-        if queue[i] <= 0:
-            idle[i] = True
-            return
-        idle[i] = False
-        queue[i] -= 1
-        dur = cfg.task_cost / cfg.speeds[i]
-        if cfg.noise:
-            dur *= float(rng.lognormal(0.0, cfg.noise))
-        push_event(now + dur, "finish", i)
-        busy[i] += dur
-        records.append((i, now, now + dur))
-
-    for i in range(p):
-        start_task(i, 0.0)
-    push_event(hop, "token", 0)
-
-    makespan = 0.0
-    total_done = 0
-    while heap and total_done < cfg.num_tasks:
-        now, _, kind, i, payload = heapq.heappop(heap)
-        if kind == "finish":
-            executed[i] += 1
-            total_done += 1
-            makespan = max(makespan, now)
-            start_task(i, now)
-        elif kind == "receive":
-            queue[i] += payload
-            if idle[i]:
-                start_task(i, now)
-        elif kind == "token":
-            # Holder steals only if its queue is empty (CTWS rule).
-            if queue[i] == 0 and idle[i]:
-                victim = int(np.argmax(queue))
-                if victim != i and queue[victim] > 0:
-                    take = max(1, int(queue[victim]) // 2)
-                    queue[victim] -= take
-                    arrive = now + cfg.steal_latency + cfg.steal_per_task * take
-                    push_event(arrive, "receive", i, take)
-                    steals += 1
-                    moved += take
-            if total_done < cfg.num_tasks:
-                push_event(now + hop, "token", (i + 1) % p)
-
-    return SimResult(
-        makespan=makespan,
-        per_node_tasks=[int(x) for x in executed],
-        per_node_busy=[float(b) for b in busy],
-        steals=steals,
-        failed_steals=0,
-        moved_tasks=moved,
-        records=records,
-    )
-
-
-# --------------------------------------------------------------------------- #
-#                                    LW                                        #
-# --------------------------------------------------------------------------- #
-
-
-def _simulate_lw(cfg: SimConfig) -> SimResult:
-    p = cfg.P
-    rng = np.random.default_rng(cfg.seed)
-    speeds = cfg.speeds.copy()
-    speeds[0] *= 1.0 - cfg.leader_overhead  # co-located distributor thread
-    executed = np.zeros(p, np.int64)
-    busy = np.zeros(p, np.float64)
-    records: list[tuple[int, float, float]] = []
-    remaining = cfg.num_tasks
-    leader_free = 0.0
-
-    heap: list[tuple[float, int, str, int]] = []
-    seq = 0
-
-    def push_event(time: float, kind: str, node: int) -> None:
-        nonlocal seq
-        heapq.heappush(heap, (time, seq, kind, node))
-        seq += 1
-
-    def request(i: int, now: float) -> None:
-        """Worker i asks the leader for a task; leader is a serial server."""
-        nonlocal leader_free, remaining
-        if remaining <= 0:
-            return
-        arrive_leader = now + cfg.request_rtt / 2
-        service_start = max(arrive_leader, leader_free)
-        leader_free = service_start + cfg.leader_service
-        remaining -= 1
-        push_event(leader_free + cfg.request_rtt / 2, "task", i)
-
-    for i in range(p):
-        request(i, 0.0)
-
-    makespan = 0.0
-    total_done = 0
-    while heap and total_done < cfg.num_tasks:
-        now, _, kind, i = heapq.heappop(heap)
-        if kind == "task":
-            dur = cfg.task_cost / speeds[i]
-            if cfg.noise:
-                dur *= float(rng.lognormal(0.0, cfg.noise))
-            push_event(now + dur, "finish", i)
-            busy[i] += dur
-            records.append((i, now, now + dur))
-        elif kind == "finish":
-            executed[i] += 1
-            total_done += 1
-            makespan = max(makespan, now)
-            request(i, now)
-
-    return SimResult(
-        makespan=makespan,
-        per_node_tasks=[int(x) for x in executed],
-        per_node_busy=[float(b) for b in busy],
-        steals=0,
-        failed_steals=0,
-        moved_tasks=0,
-        records=records,
-    )
-
-
-# --------------------------------------------------------------------------- #
-
-
-def simulate(policy: Literal["a2ws", "ctws", "lw"], cfg: SimConfig) -> SimResult:
-    if policy == "a2ws":
-        return _simulate_a2ws(cfg)
-    if cfg.arrival != "closed":
-        raise NotImplementedError(
-            f"open-arrival simulation is A2WS-only for now (got {policy!r}); "
-            "compare against no-stealing by setting radius=0 instead"
-        )
-    if policy == "ctws":
-        return _simulate_ctws(cfg)
-    if policy == "lw":
-        return _simulate_lw(cfg)
-    raise ValueError(f"unknown policy {policy!r}")

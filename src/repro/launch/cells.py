@@ -13,17 +13,14 @@ from __future__ import annotations
 import os
 import re
 import time
-from dataclasses import dataclass
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.base import Shape, input_specs
 from repro.models import lm
 from repro.models.config import ModelConfig
 from repro.optim.adamw import AdamWConfig
-from repro.parallel.sharding import ParallelContext, make_context
+from repro.parallel.sharding import ParallelContext
 from repro.serve.engine import abstract_caches, jit_decode_step, jit_prefill_step
 from repro.train.step import abstract_train_state, jit_train_step
 

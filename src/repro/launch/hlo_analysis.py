@@ -22,7 +22,6 @@ from __future__ import annotations
 import math
 import re
 from dataclasses import dataclass, field
-from functools import lru_cache
 
 __all__ = ["analyze_hlo", "HloCosts"]
 

@@ -13,6 +13,10 @@ driver reports per-request latency percentiles:
     PYTHONPATH=src python -m repro.launch.serve --arch phi4-mini-3.8b \
         --requests 24 --prompt-len 16 --new-tokens 8 \
         --open-arrival --rate 8 --replicas 2 --slow-factor 4
+
+``--policy`` swaps the scheduling policy balancing the replica pool
+(DESIGN.md §Policy layer): a2ws (default) vs the ctws / lw / random
+baselines, head-to-head on the same Poisson trace and latency metric.
 """
 
 from __future__ import annotations
@@ -25,6 +29,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ARCH_IDS, get_smoke
+from repro.core.policy import POLICIES
 from repro.models import lm
 from repro.serve.engine import Replica, ServePool
 
@@ -94,7 +99,7 @@ def _open_main(cfg, params, args) -> None:
         # by slow_factor (on real hardware: different device slices)
         replicas.append(Replica(f"replica{r}", gen,
                                 slow_factor=args.slow_factor))
-    pool = ServePool(replicas, seed=args.seed)
+    pool = ServePool(replicas, seed=args.seed, policy=args.policy)
     pool.start()
 
     futs = []
@@ -108,8 +113,8 @@ def _open_main(cfg, params, args) -> None:
     stats = pool.shutdown()
     pct = stats.latency_percentiles()
     per_rep = stats.per_worker_tasks
-    print(f"served {len(futs)} streamed requests; requests/replica={per_rep} "
-          f"steals={len(stats.steals)}")
+    print(f"served {len(futs)} streamed requests [{args.policy}]; "
+          f"requests/replica={per_rep} steals={len(stats.steals)}")
     print("latency p50/p95/p99 = "
           + "/".join(f"{pct[q]*1e3:.0f}ms" for q in (50.0, 95.0, 99.0)))
     print(f"sample completion: {futs[0].result()['completion'][:8]}")
@@ -130,6 +135,8 @@ def main() -> None:
                     help="model replicas in the pool (open mode)")
     ap.add_argument("--slow-factor", type=float, default=4.0,
                     help="slowdown of replicas 1.. vs replica 0 (open mode)")
+    ap.add_argument("--policy", choices=POLICIES, default="a2ws",
+                    help="scheduling policy for the replica pool (open mode)")
     args = ap.parse_args()
 
     cfg = get_smoke(args.arch)

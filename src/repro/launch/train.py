@@ -14,7 +14,6 @@ import argparse
 import time
 
 import jax
-import numpy as np
 
 from repro.checkpoint import store
 from repro.configs.base import ARCH_IDS, get_config, get_smoke
@@ -22,7 +21,7 @@ from repro.data.pipeline import DataConfig, SyntheticLM
 from repro.launch.mesh import make_debug_mesh
 from repro.models import lm
 from repro.optim.adamw import AdamWConfig, adamw_init
-from repro.parallel.sharding import make_context, shardings_for
+from repro.parallel.sharding import make_context
 from repro.train.step import jit_train_step, train_shardings
 
 

@@ -14,13 +14,12 @@ and the up-projections are folded into the query/output einsums.
 from __future__ import annotations
 
 import math
-from functools import partial
 
 import jax
 import jax.numpy as jnp
 
 from .config import MLAConfig, ModelConfig
-from .layers import ksplit, Leaf, dense, param, rms_norm, rope
+from .layers import ksplit, dense, param, rms_norm, rope
 
 __all__ = [
     "gqa_params",

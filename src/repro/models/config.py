@@ -6,7 +6,7 @@ None when unused.  Instances are hashable (usable as jit static args).
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, replace
 from typing import Literal
 
 __all__ = [

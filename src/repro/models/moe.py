@@ -24,7 +24,6 @@ Design (baseline, recorded as such in EXPERIMENTS.md §Perf):
 from __future__ import annotations
 
 import math
-from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -34,7 +33,7 @@ from jax.sharding import PartitionSpec as P
 from repro.parallel.sharding import shard_map_compat
 
 from .config import ModelConfig, MoEConfig
-from .layers import ksplit, Leaf, dense, param
+from .layers import ksplit, dense, param
 
 __all__ = [
     "moe_params",

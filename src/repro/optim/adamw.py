@@ -8,7 +8,6 @@ m/v are automatically ZeRO-sharded — no replicated optimizer state anywhere).
 
 from __future__ import annotations
 
-import functools
 from typing import NamedTuple
 
 import jax

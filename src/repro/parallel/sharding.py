@@ -16,7 +16,7 @@ Batch/activations: batch dim over ('pod', 'data').
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P

@@ -10,7 +10,6 @@ interconnect is slow (cross-pod DCI), cutting gradient bytes 4x vs f32.
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 __all__ = ["quantize", "dequantize", "ErrorFeedback", "compressed_bytes"]

@@ -18,10 +18,9 @@ from __future__ import annotations
 import time
 from dataclasses import dataclass
 
-import jax
 
 from repro.checkpoint import store
-from .het_dp import HetDPTrainer, WorkerFailed, WorkerSpec
+from .het_dp import HetDPTrainer, WorkerFailed
 
 __all__ = ["Heartbeat", "ResilientDriver"]
 

@@ -23,13 +23,14 @@ from __future__ import annotations
 
 import threading
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.a2ws import A2WSRuntime, RunStats
+from repro.core.a2ws import RunStats, WorkerPool
+from repro.core.policy import SchedPolicy
 from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
 from .compression import ErrorFeedback
 
@@ -60,14 +61,19 @@ class HetDPTrainer:
         opt_cfg: AdamWConfig = AdamWConfig(),
         *,
         radius: int | None = None,
+        policy: str | SchedPolicy = "a2ws",
         compress: bool = False,
         base_task_time: float = 0.0,  # extra per-task sleep (demo pacing)
     ) -> None:
+        """``policy``: scheduling policy for the per-step microbatch pool —
+        "a2ws" (default), "ctws", "lw", "random", or a ``SchedPolicy``
+        instance (reused across steps; name specs build one per step)."""
         self.params = params
         self.opt_cfg = opt_cfg
         self.opt_state = adamw_init(params, opt_cfg)
         self.workers = list(workers)
         self.radius = radius
+        self.policy = policy
         self.compress = compress
         self.base_task_time = base_task_time
         self._grad_fn = jax.jit(jax.value_and_grad(loss_fn, has_aux=True))
@@ -104,10 +110,11 @@ class HetDPTrainer:
                         lambda a, b: a + np.asarray(b), grads[wid], g
                     )
 
-        rt = A2WSRuntime(
+        rt = WorkerPool(
             list(range(len(microbatches))),
             nw,
             task_fn,
+            policy=self.policy,
             radius=self.radius,
             seed=self.step_count,
         )

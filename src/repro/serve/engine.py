@@ -14,13 +14,15 @@ with explicit shardings.  KV-cache layout policy (per leaf):
 
 Host plane
 ----------
-``ServePool`` is a **continuous-batching server** on the open-arrival A2WS
-runtime (DESIGN.md §Open-arrival): requests stream in through ``submit()``
-while the pool is live, each replica is a worker whose deque holds queued
-requests, and fast replicas steal queued requests from slow ones mid-flight.
-The pool never tears down or re-partitions between request waves — workers
-idle (with capped backoff) until the next submit wakes them, and quiescence
-detection only fires at ``shutdown()``.
+``ServePool`` is a **continuous-batching server** on the open-arrival
+``WorkerPool`` substrate (DESIGN.md §Open-arrival, §Policy layer): requests
+stream in through ``submit()`` while the pool is live, each replica is a
+worker whose deque holds queued requests, and the scheduling policy
+(``policy=`` — A2WS by default, or CTWS/LW/random for head-to-head baseline
+serving) moves queued requests between replicas mid-flight.  The pool never
+tears down or re-partitions between request waves — workers idle (with
+capped backoff) until the next submit wakes them, and quiescence detection
+only fires at ``shutdown()``.
 """
 
 from __future__ import annotations
@@ -32,10 +34,10 @@ from typing import Callable, Sequence
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.core.a2ws import A2WSRuntime, RunStats
+from repro.core.a2ws import RunStats, WorkerPool
+from repro.core.policy import SchedPolicy
 from repro.models import lm
 from repro.models.config import ModelConfig
 from repro.parallel.sharding import (
@@ -292,6 +294,11 @@ class ServePool:
 
     ``submit_all`` is the closed-batch convenience wrapper: it submits a
     wave into the live pool and waits for exactly that wave.
+
+    ``policy`` selects the scheduling policy balancing the replica deques —
+    "a2ws" (default), "ctws", "lw", "random", or a ``SchedPolicy`` instance
+    — so the paper's baselines are benchmarkable head-to-head on latency
+    percentiles under identical serving traffic.
     """
 
     def __init__(
@@ -300,11 +307,13 @@ class ServePool:
         *,
         radius: int | None = None,
         seed: int = 0,
+        policy: str | SchedPolicy = "a2ws",
     ):
         self.replicas = replicas
         self.radius = radius
         self.seed = seed
-        self._runtime: A2WSRuntime | None = None
+        self.policy = policy
+        self._runtime: WorkerPool | None = None
 
     # ------------------------------------------------------------- lifecycle
     @property
@@ -335,10 +344,11 @@ class ServePool:
             fut.end_t = time.perf_counter()
             fut._done.set()
 
-        rt = A2WSRuntime(
+        rt = WorkerPool(
             [],
             len(self.replicas),
             task_fn,
+            policy=self.policy,
             radius=self.radius,
             seed=self.seed,
             open_arrival=True,

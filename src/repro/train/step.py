@@ -16,7 +16,6 @@ Sharding layout (see ``repro.parallel.sharding``):
 
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

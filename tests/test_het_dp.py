@@ -4,7 +4,6 @@ stealing, straggler mitigation, fault tolerance, elasticity."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.optim.adamw import AdamWConfig
 from repro.runtime.fault_tolerance import ResilientDriver

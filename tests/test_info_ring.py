@@ -89,3 +89,76 @@ def test_radius_zero_or_single_process_noop():
     assert r.communicate(0) == 0
     r2 = RingInfo(4, 0)
     assert r2.communicate(1) == 0
+
+
+def test_view_unknown_t_falls_back_to_subsystem_mean():
+    """PR 2 fix: a NaN t cell fills with the MEAN of the known t's (not a
+    flat 1.0 s guess, which poisons Eq. 5 for sub-millisecond tasks)."""
+    r = RingInfo(6, 2)
+    # Own cell still NaN, but two neighbours reported 2ms tasks.
+    r.record_remote(0, 1, 5.0, 2e-3)
+    r.record_remote(0, 2, 7.0, 2e-3)
+    _, t = r.view(0)
+    np.testing.assert_allclose(t, 2e-3)  # every unknown = subsystem mean
+    # Explicit default wins over the mean.
+    _, t = r.view(0, default_t=5e-4)
+    assert t[0] == 5e-4 and t[1] == 2e-3 and t[2] == 2e-3
+    # Nothing known at all: a flat constant (cancels out of Eq. 5).
+    _, t_blank = RingInfo(4, 1).view(0)
+    np.testing.assert_allclose(t_blank, 1.0)
+
+
+# --------------------------------------------------- concurrency properties
+from _hypo import given, settings, st  # noqa: E402
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    p=st.integers(min_value=3, max_value=9),
+    radius=st.integers(min_value=1, max_value=4),
+    rounds=st.integers(min_value=5, max_value=25),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_version_monotonic_under_concurrent_communicate(p, radius, rounds, seed):
+    """Per-cell version counters only ever move FORWARD, even with every
+    process communicating concurrently (the §2.1 single-writer partition is
+    what makes the lock-free Puts safe), and no view ever runs ahead of the
+    owner's own version (staleness >= 0)."""
+    import threading
+
+    r = RingInfo(p, radius)
+    snapshots: list[np.ndarray] = []
+    snap_lock = threading.Lock()
+    rng = np.random.default_rng(seed)
+    plans = [
+        [(float(rng.integers(0, 50)), float(rng.random() + 1e-3))
+         for _ in range(rounds)]
+        for _ in range(p)
+    ]
+
+    def worker(i: int) -> None:
+        for n_i, t_i in plans[i]:
+            r.update_local(i, n_i, t_i)
+            r.communicate(i)
+            with snap_lock:
+                snapshots.append(r.version.copy())
+
+    threads = [threading.Thread(target=worker, args=(i,)) for i in range(p)]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    # 1) per-cell monotonicity across the snapshot sequence
+    for prev, cur in zip(snapshots, snapshots[1:]):
+        assert (cur >= prev).all(), "a version counter moved backwards"
+    # 2) with only owner writes + ring propagation, nobody's view of j can
+    #    be newer than j's own cell: staleness is non-negative everywhere
+    truth = r.version.diagonal().copy()
+    assert (r.staleness(truth) >= 0).all()
+    # 3) and the owner's own cell saw every local update exactly once
+    for i in range(p):
+        expected = sum(
+            1 for k, (n_i, t_i) in enumerate(plans[i])
+            if k == 0 or plans[i][k - 1] != (n_i, t_i)
+        )
+        assert r.version[i, i] == expected

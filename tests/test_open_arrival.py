@@ -308,8 +308,14 @@ def test_sim_open_stealing_beats_static_routing_tail():
     assert steal.makespan < nosteal.makespan
 
 
-def test_sim_open_arrival_a2ws_only():
-    cfg = SimConfig(speeds=table2_speeds("C1"), num_tasks=10,
-                    arrival="poisson", arrival_rate=1.0)
-    with pytest.raises(NotImplementedError):
-        simulate("lw", cfg)
+@pytest.mark.parametrize("policy", ["ctws", "lw", "random"])
+def test_sim_open_arrival_baseline_parity(policy):
+    """PR 2 (policy layer): open-arrival simulation is no longer A2WS-only —
+    every policy runs on the same event loop and reports latencies."""
+    speeds = table2_speeds("C1")
+    cfg = SimConfig(speeds=speeds, num_tasks=60, seed=3,
+                    arrival="poisson", arrival_rate=0.5 * float(speeds.sum()) / 60.0)
+    res = simulate(policy, cfg)
+    assert sum(res.per_node_tasks) == 60
+    assert len(res.latencies) == 60
+    assert res.latency_percentiles()[99.0] > 0.0

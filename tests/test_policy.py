@@ -1,0 +1,239 @@
+"""Pluggable scheduling-policy layer (DESIGN.md §Policy layer): the four
+policies on the shared WorkerPool substrate, cross-plane conformance between
+the threaded runtime and the discrete-event simulator, open-arrival parity
+for the baselines, and policy-parametric serving."""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.a2ws import WorkerPool
+from repro.core.baselines import CTWSRuntime, LWRuntime
+from repro.core.policy import (
+    POLICIES,
+    CTWSPolicy,
+    LWPolicy,
+    PolicyView,
+    RandomWSPolicy,
+    make_policy,
+)
+from repro.core.simulator import SimConfig, simulate
+from repro.serve.engine import Replica, ServePool
+
+
+def _busy(seconds: float) -> None:
+    end = time.perf_counter() + seconds
+    while time.perf_counter() < end:
+        pass
+
+
+# --------------------------------------------------------------- unit layer
+def test_make_policy_registry():
+    for name in POLICIES:
+        assert make_policy(name, 4).name == name
+    with pytest.raises(ValueError):
+        make_policy("fifo", 4)
+    pol = RandomWSPolicy()
+    assert make_policy(pol, 4) is pol
+    with pytest.raises(ValueError):  # kwargs make no sense for an instance
+        make_policy(pol, 4, hop_time=1.0)
+
+
+def test_lw_partition_routes_everything_to_leader():
+    parts = LWPolicy().partition(list(range(7)), 3)
+    assert parts == [[0, 1, 2, 3, 4, 5, 6], [], []]
+    assert LWPolicy.central == 0
+
+
+def _view(worker, num_workers, depths, now=0.0, idle=True, inflight=0):
+    return PolicyView(
+        worker=worker, now=now, idle=idle, ran_any=True, open_arrival=False,
+        radius=1, num_workers=num_workers, rng=np.random.default_rng(0),
+        window=list(range(num_workers)), depth=lambda j: depths[j],
+        alive=lambda j: True, pending=lambda: sum(depths),
+        inflight=lambda: inflight,
+    )
+
+
+def test_random_policy_steals_half_uniform():
+    pol = RandomWSPolicy()
+    plan = pol.on_boundary(_view(0, 3, [0, 9, 0]))
+    assert plan is not None and plan.victim == 1 and plan.amount == 4
+    # busy thieves and loot-in-transit never probe
+    assert pol.on_boundary(_view(0, 3, [2, 9, 0], idle=False)) is None
+    assert pol.on_boundary(_view(0, 3, [0, 9, 0], inflight=1)) is None
+    # nothing anywhere -> no churn
+    assert pol.on_boundary(_view(0, 3, [0, 0, 0])) is None
+
+
+def test_ctws_only_token_holder_steals():
+    pol = CTWSPolicy(3)
+    pol.on_start([0, 6, 2], now=0.0)
+    # worker 1 does not hold the token: no plan, token does not move
+    assert pol.on_boundary(_view(1, 3, [0, 6, 2])) is None
+    assert pol.token_at == 0
+    # the holder is empty: steals HALF the most-loaded victim, passes token
+    plan = pol.on_boundary(_view(0, 3, [0, 6, 2]))
+    assert plan is not None and plan.victim == 1 and plan.amount == 3
+    assert pol.token_at == 1
+
+
+def test_ctws_hop_time_gates_token_reuse():
+    pol = CTWSPolicy(2, hop_time=1.0)
+    pol.on_start([0, 8], now=0.0)
+    assert pol.on_boundary(_view(0, 2, [0, 8], now=0.5)) is None  # in transit
+    assert pol.on_boundary(_view(0, 2, [0, 8], now=1.5)) is not None
+
+
+def test_simulate_rejects_unknown_policy():
+    cfg = SimConfig(speeds=np.ones(3), num_tasks=6)
+    with pytest.raises(ValueError):
+        simulate("fifo", cfg)
+
+
+# ------------------------------------------------------ threaded substrate
+@pytest.mark.parametrize("policy", ["ctws", "lw", "random"])
+def test_baselines_every_task_once_on_substrate(policy):
+    n, done, lock = 40, [], threading.Lock()
+
+    def task_fn(wid, task):
+        _busy(0.0005)
+        with lock:
+            done.append(task)
+
+    stats = WorkerPool(list(range(n)), 4, task_fn, policy=policy).run()
+    assert sorted(done) == list(range(n))
+    assert sum(stats.per_worker_tasks) == n
+    # non-ring policies pay zero info-cell traffic
+    assert stats.info_cells_sent == 0
+
+
+@pytest.mark.parametrize("cls", [LWRuntime, CTWSRuntime])
+def test_baseline_open_arrival_latency_parity(cls):
+    """PR 2 satellite: on the shared substrate LW/CTWS gain submit()/drain()
+    and arrival-stamped records, so latency_percentiles() is non-empty for
+    them too (it used to silently return {})."""
+    done, lock = [], threading.Lock()
+
+    def task_fn(wid, task):
+        _busy(0.0005)
+        with lock:
+            done.append(task)
+
+    rt = cls([], 3, task_fn, open_arrival=True)
+    rt.start()
+    rt.submit_many(range(8))
+    time.sleep(0.01)  # a second wave, mid-flight
+    rt.submit_many(range(8, 18))
+    rt.drain()
+    stats = rt.join()
+    assert sorted(done) == list(range(18))
+    pct = stats.latency_percentiles()
+    assert pct and 0.0 < pct[50.0] <= pct[95.0] <= pct[99.0]
+
+
+def test_random_policy_balances_heterogeneous_pool():
+    """Classical random stealing must still drain a slow worker's queue."""
+    n, slow = 30, {1}
+
+    def task_fn(wid, task):
+        _busy(0.012 if wid in slow else 0.002)
+
+    stats = WorkerPool(list(range(n)), 2, task_fn, policy="random", seed=3).run()
+    assert sum(stats.per_worker_tasks) == n
+    assert len(stats.steals) > 0
+    assert stats.per_worker_tasks[0] > stats.per_worker_tasks[1]
+
+
+# --------------------------------------------------- cross-plane conformance
+_SPEEDS = [4.0, 1.0, 1.0, 1.0]
+_N, _BASE = 48, 0.012
+
+
+def _threaded_stats(policy: str, seed: int):
+    def task_fn(wid, task):
+        _busy(_BASE / _SPEEDS[wid])
+
+    pool = WorkerPool(
+        list(range(_N)), len(_SPEEDS), task_fn, policy=policy, seed=seed
+    )
+    return pool.run()
+
+
+def _sim_stats(policy: str):
+    cfg = SimConfig(
+        speeds=np.asarray(_SPEEDS), num_tasks=_N, task_cost=_BASE, noise=0.0,
+        seed=0, hop_latency=1e-4, info_poll=1e-3, comm_cell_cost=0.0,
+        steal_latency=5e-4, steal_per_task=1e-5, retry_interval=1e-3,
+        token_base=1e-4, token_per_node=0.0, request_rtt=2e-4,
+        leader_service=1e-4, leader_overhead=0.0,
+    )
+    return simulate(policy, cfg)
+
+
+@pytest.mark.parametrize("policy", list(POLICIES))
+def test_cross_plane_conformance(policy):
+    """The same SchedPolicy semantics through BOTH planes: a threaded run
+    (real clock, one 4x-fast worker) and a simulated run of the same seeded
+    workload must agree on who dominates and how much work moved.
+
+    The threaded plane is wall-clock noisy (GIL, CI machines), so it is
+    sampled three times and compared by medians with a generous band — the
+    assertion catches plane divergence (a policy that steals in one plane
+    and not the other, or by an order of magnitude differently), not exact
+    schedules.
+    """
+    sim = _sim_stats(policy)
+    assert sum(sim.per_node_tasks) == _N
+    assert int(np.argmax(sim.per_node_tasks)) == 0
+    assert sim.steals > 0
+
+    runs = [_threaded_stats(policy, seed) for seed in range(3)]
+    for st in runs:
+        assert sum(st.per_worker_tasks) == _N
+    med_w0 = float(np.median([st.per_worker_tasks[0] for st in runs]))
+    others = float(
+        np.median([max(st.per_worker_tasks[1:]) for st in runs])
+    )
+    assert med_w0 > others, "fast worker must dominate in the threaded plane"
+    med_moved = float(
+        np.median([sum(s[3] for s in st.steals) for st in runs])
+    )
+    assert med_moved > 0, "threaded plane never stole"
+    hi = max(med_moved, float(sim.moved_tasks))
+    assert abs(med_moved - sim.moved_tasks) <= max(8.0, 0.8 * hi), (
+        f"steal volume diverged across planes: threaded~{med_moved} "
+        f"vs simulated {sim.moved_tasks}"
+    )
+
+
+# ------------------------------------------------------ policy-parametric serving
+@pytest.mark.parametrize("policy", ["ctws", "lw", "random"])
+def test_servepool_serves_open_arrival_with_baseline_policy(policy):
+    """Acceptance: ServePool(policy="ctws") serves an open-arrival Poisson
+    run end-to-end and reports latency percentiles (likewise lw/random)."""
+    rng = np.random.default_rng(0)
+
+    def gen(request):
+        _busy(0.002)
+        return {"echo": request["x"]}
+
+    replicas = [
+        Replica("fast", gen),
+        Replica("slow", gen, slow_factor=6.0),
+        Replica("slow2", gen, slow_factor=6.0),
+    ]
+    pool = ServePool(replicas, policy=policy, seed=0)
+    pool.start()
+    futs = []
+    for k in range(24):
+        time.sleep(float(rng.exponential(1.0 / 400.0)))
+        futs.append(pool.submit({"x": k}))
+    for k, f in enumerate(futs):
+        assert f.result(timeout=30.0) == {"echo": k}
+    stats = pool.shutdown()
+    assert sum(stats.per_worker_tasks) == 24
+    pct = stats.latency_percentiles()
+    assert pct and 0.0 < pct[50.0] <= pct[99.0]

@@ -9,10 +9,9 @@ import pytest
 
 from _hypo import given, settings, st  # skips properties w/o hypothesis
 
-from repro.configs import ARCH_IDS, get_smoke
+from repro.configs import get_smoke
 from repro.core.steal import tail_steal_amount
 from repro.models import lm
-from repro.parallel.sharding import DEFAULT_RULES, ParallelContext
 from repro.serve.engine import abstract_caches
 
 

@@ -1,13 +1,11 @@
 """Sharding rules, batch/cache partition specs, config registry + shapes."""
 
 import jax
-import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import ARCH_IDS, SHAPES, cells, get_config, get_smoke, input_specs
 from repro.configs.base import shape_applicable
-from repro.models import lm
 from repro.parallel.sharding import (
     DEFAULT_RULES,
     ParallelContext,

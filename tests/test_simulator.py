@@ -3,7 +3,7 @@
 import numpy as np
 import pytest
 
-from repro.core.simulator import CORE_STEPS, SimConfig, simulate, table2_speeds
+from repro.core.simulator import SimConfig, simulate, table2_speeds
 
 
 def test_table2_configurations():

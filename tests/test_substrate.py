@@ -1,8 +1,6 @@
 """Substrate layers: optimizer, checkpoint store, data pipeline, gradient
 compression."""
 
-import os
-
 import jax
 import jax.numpy as jnp
 import numpy as np
