@@ -1,0 +1,146 @@
+"""Elastic-membership benchmark (DESIGN.md §Elasticity).
+
+Measures the scenario a fixed-size pool cannot express: a traffic surge
+hitting a small serving pool that is allowed to SCALE OUT at runtime.
+
+1. Threaded surge (the acceptance scenario): Poisson requests at ~1.8x the
+   2-replica service capacity.  The elastic pool starts at 2 replicas and a
+   threshold autoscaler (backlog > 3 requests/replica) grows it up to 6;
+   the fixed pool serves the identical trace with 2 replicas forever.  The
+   autoscaler must reach 6 replicas and cut p99 latency vs the fixed pool.
+
+2. Virtual maintenance churn: C1 under open arrivals at ~85% utilisation
+   with two slow nodes retiring mid-run; the elastic run replaces them with
+   two fast joiners (spot-preemption-with-replacement), the degraded run
+   does not.  Same policy objects, virtual time (`SimConfig.joins/retires`).
+
+Emits ``BENCH_elastic.json`` via ``benchmarks.run`` (the returned dict).
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from .common import timed  # noqa: F401  (harness convention)
+
+import sys
+
+sys.path.insert(0, "src")
+from repro.core.simulator import SimConfig, simulate, table2_speeds  # noqa: E402
+from repro.serve.engine import AutoscaleConfig, Replica, ServePool  # noqa: E402
+
+#: per-request service time of the no-op model (seconds)
+WORK = 0.004
+#: surge arrival rate vs the 2-replica capacity (2/WORK requests/sec) —
+#: 3x keeps even the fully scaled-out 6-replica pool at saturation, so the
+#: autoscaler must ride all the way to max_replicas
+SURGE = 3.0
+
+
+def _surge_pool(elastic: bool, n_req: int, seed: int):
+    rng = np.random.default_rng(seed)
+
+    def gen(request):
+        time.sleep(WORK)
+        return {"ok": True}
+
+    def factory(wid: int) -> Replica:
+        return Replica(f"surge{wid}", gen)
+
+    autoscale = (
+        AutoscaleConfig(
+            factory=factory, min_replicas=2, max_replicas=6,
+            high_pending_per_replica=3.0, interval=0.01,
+        )
+        if elastic
+        else None
+    )
+    pool = ServePool(
+        [Replica("r0", gen), Replica("r1", gen)], seed=seed,
+        autoscale=autoscale,
+    )
+    pool.start()
+    rate = SURGE * 2.0 / WORK
+    # Pace against the wall clock, not with per-gap sleeps: sub-millisecond
+    # time.sleep overshoots ~2x, which would quietly halve the surge.
+    offsets = np.cumsum(rng.exponential(1.0 / rate, n_req))
+    futs = []
+    t0 = time.perf_counter()
+    for t_arr in offsets:
+        while time.perf_counter() - t0 < t_arr:
+            time.sleep(2e-4)
+        futs.append(pool.submit({"x": 0}))
+    for f in futs:
+        f.result(timeout=60)
+    peak = pool.peak_live
+    scale_outs = sum(1 for e in pool.scale_events if e[1] == "out")
+    stats = pool.shutdown()
+    pct = stats.latency_percentiles((50.0, 99.0))
+    return pct[50.0], pct[99.0], peak, scale_outs
+
+
+def _sim_churn(replace: bool, seeds: int):
+    """C1 open arrivals; two 1-core nodes retire at t=120/180.  ``replace``
+    adds two 24-core joiners at the same instants."""
+    speeds = table2_speeds("C1")
+    capacity = float(speeds.sum()) / 60.0
+    slow = [int(i) for i in np.argsort(speeds)[:2]]
+    p99s = []
+    for seed in range(seeds):
+        cfg = SimConfig(
+            speeds=speeds, num_tasks=600, seed=seed,
+            arrival="poisson", arrival_rate=0.85 * capacity,
+            retires=((120.0, slow[0]), (180.0, slow[1])),
+            joins=((120.0, 24.0), (180.0, 24.0)) if replace else (),
+        )
+        res = simulate("a2ws", cfg)
+        assert sum(res.per_node_tasks) == 600
+        p99s.append(res.latency_percentiles((99.0,))[99.0])
+    return float(np.median(p99s))
+
+
+def run(seeds: int = 3, fast: bool = False, csv: bool = True):
+    n_req = 150 if fast else 300
+    fixed_p50, fixed_p99, fixed_peak, _ = _surge_pool(False, n_req, seed=0)
+    el_p50, el_p99, el_peak, outs = _surge_pool(True, n_req, seed=0)
+    sim_degraded = _sim_churn(False, seeds)
+    sim_replaced = _sim_churn(True, seeds)
+    out = {
+        "surge_requests": n_req,
+        "surge_fixed_p99_s": fixed_p99,
+        "surge_elastic_p99_s": el_p99,
+        "surge_fixed_p50_s": fixed_p50,
+        "surge_elastic_p50_s": el_p50,
+        "surge_fixed_replicas": fixed_peak,
+        "surge_elastic_peak_replicas": el_peak,
+        "surge_scale_outs": outs,
+        "surge_p99_gain_pct": (1.0 - el_p99 / fixed_p99) * 100.0,
+        "sim_churn_degraded_p99_s": sim_degraded,
+        "sim_churn_replaced_p99_s": sim_replaced,
+        "sim_churn_p99_gain_pct": (1.0 - sim_replaced / sim_degraded) * 100.0,
+    }
+    if csv:
+        print(f"elastic_surge_fixed_p99,{fixed_p99*1e6:.0f},replicas=2")
+        print(
+            f"elastic_surge_elastic_p99,{el_p99*1e6:.0f},"
+            f"peak_replicas={el_peak}|scale_outs={outs}"
+        )
+        print(
+            f"elastic_surge_p99_gain,{out['surge_p99_gain_pct']:.1f},"
+            f"percent_vs_fixed_pool"
+        )
+        print(f"elastic_sim_churn_degraded_p99,{sim_degraded*1e6:.0f},seconds={sim_degraded:.2f}")
+        print(f"elastic_sim_churn_replaced_p99,{sim_replaced*1e6:.0f},seconds={sim_replaced:.2f}")
+    return out
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--seeds", type=int, default=3)
+    args = ap.parse_args()
+    run(seeds=1 if args.fast else args.seeds, fast=args.fast)

@@ -1,15 +1,41 @@
 """Benchmark harness entry point — one module per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--seeds N] [--fast]
+    PYTHONPATH=src python -m benchmarks.run [--seeds N] [--fast] [--out-dir D]
 
-Prints ``name,us_per_call,derived`` CSV lines per benchmark.
+Prints ``name,us_per_call,derived`` CSV lines per benchmark, and records
+each benchmark's returned result object to ``BENCH_<name>.json`` under
+``--out-dir`` (default: the working directory) — the machine-readable perf
+trajectory CI archives per commit.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 import time
+
+
+def _jsonable(obj):
+    """Best-effort conversion to JSON-serialisable structures (tuple-keyed
+    dicts become "a|b|c" keys; numpy scalars become floats)."""
+    if isinstance(obj, dict):
+        return {
+            "|".join(str(p) for p in k) if isinstance(k, tuple) else str(k):
+                _jsonable(v)
+            for k, v in obj.items()
+        }
+    if isinstance(obj, (list, tuple)):
+        return [_jsonable(v) for v in obj]
+    if hasattr(obj, "item") and not isinstance(obj, (str, bytes)):
+        try:
+            return obj.item()
+        except (TypeError, ValueError):
+            pass
+    if isinstance(obj, (str, int, float, bool)) or obj is None:
+        return obj
+    return str(obj)
 
 
 def main() -> None:
@@ -19,10 +45,15 @@ def main() -> None:
     ap.add_argument(
         "--only", default="", help="comma-separated benchmark names"
     )
+    ap.add_argument(
+        "--out-dir", default=".",
+        help="directory for the BENCH_<name>.json result records",
+    )
     args = ap.parse_args()
     seeds = 1 if args.fast else args.seeds
 
     from . import (
+        elastic,
         fig4_radius,
         fig5_tasks,
         kernel_fd3d,
@@ -45,19 +76,26 @@ def main() -> None:
         "sched_micro": lambda: sched_micro.run(),
         "open_arrival": lambda: open_arrival.run(seeds=seeds),
         "policy_matrix": lambda: policy_matrix.run(seeds=seeds, fast=args.fast),
+        "elastic": lambda: elastic.run(seeds=seeds, fast=args.fast),
         "roofline": lambda: roofline.run(),
     }
     only = set(args.only.split(",")) if args.only else None
+    os.makedirs(args.out_dir, exist_ok=True)
     t0 = time.time()
     for name, fn in benches.items():
         if only and name not in only:
             continue
         print(f"# --- {name} ---", flush=True)
         try:
-            fn()
+            result = fn()
         except Exception as e:  # noqa: BLE001
             print(f"{name}_FAILED,0,{type(e).__name__}: {e}", file=sys.stderr)
             raise
+        if result is not None:
+            path = os.path.join(args.out_dir, f"BENCH_{name}.json")
+            with open(path, "w") as fh:
+                json.dump(_jsonable(result), fh, indent=2, sort_keys=True)
+            print(f"# wrote {path}", flush=True)
     print(f"# done in {time.time()-t0:.1f}s")
 
 

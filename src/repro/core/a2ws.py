@@ -56,11 +56,19 @@ from .policy import PolicyView, SchedPolicy, make_policy
 __all__ = [
     "WorkerPool",
     "A2WSRuntime",
+    "PoolCollapsed",
     "RunStats",
     "TaskRecord",
     "latency_percentiles",
     "partition_tasks",
 ]
+
+
+class PoolCollapsed(RuntimeError):
+    """``submit()`` into a pool with no live worker: nothing can ever run
+    the task (every worker died or retired).  Distinct from the plain
+    ``RuntimeError`` of submit-after-drain so servers can fail the one
+    request instead of treating the pool as cleanly shut down."""
 
 
 def latency_percentiles(
@@ -142,6 +150,7 @@ def partition_tasks(tasks: Sequence, num_workers: int) -> list[list]:
 class _WorkerState:
     __slots__ = (
         "deque", "executed", "runtime_sum", "ran_any", "start_time", "rng",
+        "wake", "retiring", "drain_on_retire",
     )
 
     def __init__(self, deque: TaskDeque, seed: int) -> None:
@@ -151,6 +160,13 @@ class _WorkerState:
         self.ran_any = False
         self.start_time = 0.0
         self.rng = np.random.default_rng(seed)
+        # Per-worker wake event: a submit()/drain()/death sets EVERY event,
+        # but each worker clears only its OWN — a busy worker's clear can
+        # therefore never erase a wakeup meant for an idle sleeper (the
+        # lost-wakeup bug a single shared Event had).
+        self.wake = threading.Event()
+        self.retiring = False
+        self.drain_on_retire = True
 
 
 class WorkerPool:
@@ -195,6 +211,10 @@ class WorkerPool:
         self.num_workers = num_workers
         self.task_fn = task_fn
         self.policy = make_policy(policy, num_workers)
+        self.seed = seed
+        # The paper's 20% operating point tracks an ELASTIC pool: unless the
+        # caller pinned a radius, membership changes recompute it.
+        self._radius_explicit = radius is not None
         self.radius = radius if radius is not None else max(1, round(0.2 * num_workers))
         self.idle_backoff = idle_backoff
         self.idle_backoff_max = (
@@ -235,9 +255,19 @@ class WorkerPool:
         # Serialises the drained-check against drain() so a concurrent
         # submit can never slip a task past an exiting run loop.
         self._submit_lock = threading.Lock()
-        self._wake = threading.Event()  # submit() -> idle sleepers
+        # Serialises membership changes (add_worker/retire_worker) against
+        # each other; readers stay lock-free — every membership structure
+        # only ever APPENDS (workers, dead) or swaps whole boards (RingInfo
+        # epoch guard), so a racing reader sees a valid old or new state.
+        self._membership_lock = threading.Lock()
+        #: (time, "join" | "retire" | "death", worker) membership telemetry
+        self.membership_log: list[tuple[float, str, int]] = []
         self._rr = AtomicInt64(0)  # round-robin router for submit()
         self._threads: list[threading.Thread] = []
+        # Per-SLOT thread handle (reuse gate: a tombstoned slot may only be
+        # recycled once its old thread has fully exited — two threads must
+        # never run the same worker loop).
+        self._slot_threads: list[threading.Thread | None] = [None] * num_workers
         self._t0: float | None = None
         # Total-collapse hook: called exactly once, by the last dying
         # worker, with every task left stranded in the deques — so a caller
@@ -249,22 +279,35 @@ class WorkerPool:
         """Thread-safe task injection while the run loop is live.
 
         Routes to ``worker`` when given, else to the policy's central queue
-        (LW) when it declares one, else round-robins across non-dead workers
+        (LW) when it declares one, else round-robins across live workers
         (the front-end sprays; adaptive stealing balances, §2.2).  Returns
         the worker the task landed on.  Valid in open-arrival mode only, any
-        time before ``drain()``.
+        time before ``drain()``.  Raises :class:`PoolCollapsed` when no live
+        worker exists — a task pushed onto a dead pool's deques would strand
+        forever (detected again AFTER the push, in case the last worker dies
+        mid-injection; the stranded sweep then routes to ``on_collapse``).
         """
         if not self.open_arrival:
             raise RuntimeError("submit() requires open_arrival=True")
+        if self.alive.load() == 0:
+            raise PoolCollapsed("submit() into a collapsed pool (no live workers)")
         if worker is None:
             central = self.policy.central
-            if central is not None and not self.dead[central]:
+            if central is not None and self._routable(central):
                 worker = central
             else:
-                for _ in range(self.num_workers):
-                    worker = self._rr.get_accumulate(1) % self.num_workers
-                    if not self.dead[worker]:
+                num = self.num_workers
+                for _ in range(num):
+                    cand = self._rr.get_accumulate(1) % num
+                    if self._routable(cand):
+                        worker = cand
                         break
+                else:
+                    # Every worker died/retired between the alive check and
+                    # the scan — never settle on a dead deque.
+                    raise PoolCollapsed(
+                        "submit() into a collapsed pool (no live workers)"
+                    )
         elif not 0 <= worker < self.num_workers:
             # Validate BEFORE touching the quiescence counter: a failed push
             # after the accumulate would leave `submitted` permanently ahead
@@ -291,8 +334,48 @@ class WorkerPool:
                 raise RuntimeError("submit() after drain()")
             self.submitted.accumulate(1)
         self.workers[worker].deque.push([task])
-        self._wake.set()
+        self._wake_all()
+        if self.alive.load() == 0:
+            # Total collapse raced the push: the last worker's dying sweep
+            # may have missed this task — nobody will ever pop it.  Sweep
+            # again (the hook fails the corresponding waiters), or — with no
+            # hook — leave the queue in place for a possible resurrection
+            # and surface the strand to the caller.
+            if self._collapse_sweep() == 0 and self.on_collapse is None:
+                raise PoolCollapsed(
+                    "pool collapsed mid-submit; the task stays queued and "
+                    "runs only if the pool is resurrected via add_worker() "
+                    "— do not blindly resubmit"
+                )
         return worker
+
+    def _collapse_sweep(self) -> int:
+        """Total collapse with a registered hook: pop every stranded task,
+        hand the batch to ``on_collapse`` (which fails the waiters), and
+        RECONCILE the quiescence counters — a swept task is permanently
+        resolved, so it must count as done or ``pending()`` stays positive
+        forever and a later resurrection (``add_worker``) could never reach
+        quiescence.  Without a hook the queues are left intact (a
+        resurrected pool serves them) and nothing is counted.  Returns the
+        number of swept tasks."""
+        if self.on_collapse is None:
+            return 0
+        stranded = self.drain_leftover_tasks()
+        if stranded:
+            self.done_counter.accumulate(len(stranded))
+            self.on_collapse(stranded)
+        return len(stranded)
+
+    def _routable(self, worker: int) -> bool:
+        """May ``submit()`` place new work on this worker's deque?"""
+        return not self.dead[worker] and not self.workers[worker].retiring
+
+    def _wake_all(self) -> None:
+        """Wake every idle sleeper (submit/drain/membership/death events).
+        Sets each worker's PRIVATE event — only its owner clears it, so a
+        busy worker cycling through its loop cannot eat another's wakeup."""
+        for w in self.workers:
+            w.wake.set()
 
     def submit_many(self, tasks: Sequence, worker: int | None = None) -> list[int]:
         return [self.submit(t, worker) for t in tasks]
@@ -302,7 +385,7 @@ class WorkerPool:
         run loop then exits as soon as quiescence is reached."""
         with self._submit_lock:
             self._drained.set()
-        self._wake.set()
+        self._wake_all()
 
     def drain_leftover_tasks(self) -> list:
         """Pop every task still sitting in any deque.  Only meaningful once
@@ -320,6 +403,147 @@ class WorkerPool:
     def pending(self) -> int:
         """Tasks submitted but not yet executed (queued + in flight)."""
         return self.submitted.load() - self.done_counter.load()
+
+    # ------------------------------------------------- elastic membership
+    def add_worker(
+        self, on_assign: Callable[[int], None] | None = None
+    ) -> int:
+        """Boot ONE new worker thread into the live pool (elastic scale-out,
+        DESIGN.md §Elasticity) and return its id.
+
+        Slot policy: the lowest tombstoned slot whose old thread has fully
+        exited is REUSED (spot-preemption-with-replacement; an autoscaled
+        pool cycling out/in keeps a bounded ring instead of growing O(P²)
+        board state per surge) — the replacement inherits the tombstone's
+        deque, so any still-orphaned tasks come back to life with it, and
+        its info column resets to the unreported state.  Only when no such
+        slot exists does the ring grow by one appended position.
+
+        Either way the joiner immediately participates as a thief, so
+        existing work flows to it through the ordinary steal protocol — no
+        re-partitioning — and every other member prices it by the §2.2.1
+        preemptive wall-time estimate (NaN cells) exactly like an
+        unreported boot member.  Joining a COLLAPSED pool resurrects it —
+        but note any ``on_collapse`` sweep that already fired kept its word
+        to the old waiters.
+
+        ``on_assign(wid)`` runs under the membership lock after the id is
+        fixed but BEFORE the worker thread starts — callers that index
+        side tables by worker id (``ServePool.replicas``) install the entry
+        there, never racing the first ``task_fn`` call.
+
+        Telemetry note: a recycled slot's per-worker counters
+        (``per_worker_tasks``/``per_worker_mean_t``) restart with the
+        replacement; ``RunStats.records`` keeps every incarnation's tasks.
+        """
+        with self._membership_lock:
+            if self._t0 is None:
+                raise RuntimeError("add_worker() requires a started pool")
+            wid = next(
+                (
+                    k for k in range(len(self.workers))
+                    if self.dead[k]
+                    and self._slot_threads[k] is not None
+                    and not self._slot_threads[k].is_alive()
+                ),
+                len(self.workers),
+            )
+            now = self.clock()
+            if wid < len(self.workers):
+                # Replacement: fresh run state, inherited deque (orphans on
+                # the tombstone become the joiner's backlog).
+                w = _WorkerState(self.workers[wid].deque, self.seed * 1009 + wid)
+                w.start_time = now
+                self.workers[wid] = w
+                if self.info is not None:
+                    self.info.reset_member(wid)  # back to the unreported state
+                self.dead[wid] = False
+            else:
+                w = _WorkerState(TaskDeque([]), self.seed * 1009 + wid)
+                w.start_time = now  # preemptive-estimate baseline = NOW
+                # Append order matters for lock-free readers: the worker and
+                # its tombstone slot exist BEFORE any count admits id wid.
+                self.workers.append(w)
+                self.dead.append(False)
+                self._slot_threads.append(None)
+                self.num_workers = len(self.workers)
+                if not self._radius_explicit:
+                    self.radius = max(1, round(0.2 * self.num_workers))
+                if self.info is not None:
+                    self.info.grow(self.num_workers, self.radius)
+            # (No own-cell publish here: the joiner's loop does it as its
+            # first action — §2.2.1 elapsed-time self-report, as at boot —
+            # and until then every thief prices the NaN cell preemptively.)
+            self.alive.accumulate(1)
+            self.policy.on_worker_join(wid, now)
+            with self._log_lock:
+                self.membership_log.append((now, "join", wid))
+            if on_assign is not None:
+                on_assign(wid)
+            th = threading.Thread(
+                target=self._worker_loop, args=(wid,), daemon=True
+            )
+            self._slot_threads[wid] = th
+            self._threads.append(th)
+            th.start()
+        self._wake_all()  # sleepers re-derive windows over the new ring
+        return wid
+
+    def retire_worker(self, worker: int, drain: bool = True) -> None:
+        """Gracefully remove ``worker`` from the live pool (scale-in /
+        maintenance drain).  Asynchronous: the worker finishes its in-flight
+        task, then — with ``drain=True`` — re-distributes its queued tasks
+        over the surviving workers before tombstoning itself and exiting;
+        ``drain=False`` tombstones immediately and leaves the queue on the
+        (still readable) dead deque for thieves to reclaim, i.e. the fault
+        path minus the crash.  Idempotent; retiring the last live worker
+        collapses the pool (the ``on_collapse`` sweep runs as on death).
+        """
+        with self._membership_lock:
+            if not 0 <= worker < self.num_workers:
+                raise ValueError(
+                    f"worker {worker} out of range 0..{self.num_workers - 1}"
+                )
+            w = self.workers[worker]
+            if self.dead[worker] or w.retiring:
+                return
+            w.drain_on_retire = drain
+            w.retiring = True
+        self._wake_all()  # a sleeping retiree must wake to process the flag
+
+    def _retire(self, i: int, w: _WorkerState) -> None:
+        """Executed ON the retiring worker's thread at a task boundary — it
+        never interrupts a task mid-flight."""
+        self.dead[i] = True  # tombstone first: submit() stops routing here
+        if w.drain_on_retire:
+            targets = [
+                j for j in range(self.num_workers)
+                if j != i and not self.dead[j] and not self.workers[j].retiring
+            ]
+            leftover = []
+            while True:
+                task = w.deque.get_task()
+                if task is None:
+                    break
+                leftover.append(task)
+            if targets:
+                for k, task in enumerate(leftover):
+                    self.workers[targets[k % len(targets)]].deque.push([task])
+            else:
+                # Nobody left to hand them to; keep them visible on the dead
+                # deque so the collapse sweep below can fail their waiters.
+                w.deque.push(leftover)
+        if self.info is not None:
+            self._update_info(i)
+            self.info.communicate(i)
+        now = self.clock()
+        self.policy.on_worker_death(i, now)
+        with self._log_lock:
+            self.membership_log.append((now, "retire", i))
+        self.alive.accumulate(-1)
+        self._wake_all()
+        if self.alive.load() == 0:
+            self._collapse_sweep()
 
     def _finished(self) -> bool:
         """Quiescence termination (DESIGN.md §Open-arrival).
@@ -353,6 +577,7 @@ class WorkerPool:
             threading.Thread(target=self._worker_loop, args=(i,), daemon=True)
             for i in range(self.num_workers)
         ]
+        self._slot_threads = list(self._threads)
         for th in self._threads:
             th.start()
 
@@ -360,8 +585,10 @@ class WorkerPool:
         """Wait for termination and return the final stats.  Open-arrival
         callers must ``drain()`` first or the workers wait forever for more
         work (by design — that is what keeps the pool alive between waves)."""
-        for th in self._threads:
-            th.join()
+        k = 0
+        while k < len(self._threads):  # add_worker may append mid-join
+            self._threads[k].join()
+            k += 1
         self.policy.termination(self.clock())
         return self.stats_snapshot()
 
@@ -396,10 +623,14 @@ class WorkerPool:
         w = self.workers[i]
         idle_misses = 0
         while not self._finished():
+            if w.retiring:  # graceful leave, only ever at a task boundary
+                self._retire(i, w)
+                return
             if self.info is not None:
                 self._update_info(i)  # line 2
             self._policy_boundary(i)  # lines 3-9 (policy gates preemption)
-            self._wake.clear()  # before the deque check: no lost submit wakeup
+            w.wake.clear()  # own event only, before the deque check: a
+            # concurrent submit() re-sets it and the wait below falls through
             task = w.deque.get_task()  # line 10
             if task is None:
                 # Empty deque: keep thieving until quiescence.
@@ -409,7 +640,7 @@ class WorkerPool:
                     self.info.communicate(i)
                 if not self._policy_boundary(i):
                     idle_misses += 1
-                    self._wake.wait(
+                    w.wake.wait(
                         min(
                             self.idle_backoff * (2.0 ** min(idle_misses, 30)),
                             self.idle_backoff_max,
@@ -432,14 +663,17 @@ class WorkerPool:
                 if self.info is not None:
                     self._update_info(i)
                     self.info.communicate(i)
-                self.policy.on_worker_death(i, self.clock())
+                now = self.clock()
+                self.policy.on_worker_death(i, now)
+                with self._log_lock:
+                    self.membership_log.append((now, "death", i))
                 self.alive.accumulate(-1)
-                self._wake.set()  # idle sleepers must re-check alive state
-                if self.alive.load() == 0 and self.on_collapse is not None:
+                self._wake_all()  # idle sleepers must re-check alive state
+                if self.alive.load() == 0:
                     # Last worker standing just died: nobody will ever pop
                     # the remaining tasks — hand them to the caller so the
                     # corresponding waiters fail instead of hanging.
-                    self.on_collapse(self.drain_leftover_tasks())
+                    self._collapse_sweep()
                 return
             mult = self.policy.task_multiplier(i)
             if mult > 1.0:
@@ -456,7 +690,7 @@ class WorkerPool:
                 self._records.append(TaskRecord(task, i, start, end, arrival))
             self.done_counter.accumulate(1)
             if self._finished():
-                self._wake.set()  # completion wakes idle sleepers to exit
+                self._wake_all()  # completion wakes idle sleepers to exit
             if self.info is not None:
                 self._update_info(i)
                 self.info.communicate(i)  # line 13
@@ -488,11 +722,12 @@ class WorkerPool:
         Fig. 3b atomic adjust-and-correct protocol, exactly as in the paper.
         """
         w = self.workers[i]
-        n_view, t_view = self.info.view(i)
+        # One board epoch for rows + window: a concurrent grow() can never
+        # produce a window index outside the copied rows.
+        n_view, t_view, raw_t, window = self.info.view_window(i)
         now = self.clock()
         elapsed = max(now - w.start_time, 1e-9)
-        window = self.info.window(i)
-        queued = np.zeros(self.num_workers)
+        queued = np.zeros(len(n_view))
         for j in window:
             if j == i:
                 queued[j] = len(w.deque)
@@ -512,7 +747,7 @@ class WorkerPool:
                     else self.workers[j].executed + queued[j]
                 )
                 continue
-            if np.isnan(self.info.t[i, j]):
+            if np.isnan(raw_t[j]):
                 # No report from j yet: preemptive wall-time estimate — j
                 # looks like it has finished 0 tasks in `elapsed` seconds.
                 t_view[j] = elapsed
@@ -531,9 +766,11 @@ class WorkerPool:
         w = self.workers[i]
         if self.info is not None:
             n_view, t_view, queued, window = self._ring_view(i)
+            num_workers = len(n_view)  # the board epoch's ring size
         else:
             n_view = t_view = queued = None
-            window = list(range(self.num_workers))
+            num_workers = self.num_workers
+            window = list(range(num_workers))
         return PolicyView(
             worker=i,
             now=self.clock(),
@@ -541,7 +778,7 @@ class WorkerPool:
             ran_any=w.ran_any,
             open_arrival=self.open_arrival,
             radius=self.radius,
-            num_workers=self.num_workers,
+            num_workers=num_workers,
             rng=w.rng,
             window=window,
             depth=lambda j: len(self.workers[j].deque),
@@ -578,17 +815,28 @@ class WorkerPool:
         observed_left = max(result.observed_tail - result.observed_head, 0)
         got = len(result.tasks)
         left = max(observed_left - got, 0)
+        # Closed-mode reconciliation: n_j is the victim's TOTAL (executed +
+        # queued, §2.2).  The snapshot gives ground truth for the QUEUED
+        # part only, so keep the executed estimate the thief already priced
+        # (n_view − queued estimate) and replace the queued estimate with
+        # the observation: corrected n = done_est + observed queue.
+        # (Subtracting the remaining queue from the total — the old rule —
+        # left a drained victim at its stale full n and under-counted a
+        # loaded one.)
+        if self.info is not None and not self.open_arrival:
+            done_est = max(
+                float(view.n_view[plan.victim]) - float(view.queued[plan.victim]),
+                0.0,
+            )
         if not result:
             self._failed_steals += 1
             # Table 1 row 3: thief marks the victim position dirty anyway —
-            # with n_j corrected down to what the snapshot implies.
+            # with n_j corrected to what the snapshot implies.
             if self.info is not None:
                 if self.open_arrival:
                     corrected_n = float(observed_left)
                 else:
-                    corrected_n = max(
-                        view.n_view[plan.victim] - observed_left, 0.0
-                    )
+                    corrected_n = done_est + float(observed_left)
                 self.info.record_remote(
                     i, plan.victim, float(corrected_n),
                     self.info.t[i, plan.victim],
@@ -603,7 +851,10 @@ class WorkerPool:
                 # Depth semantics: the snapshot IS the depth at steal time.
                 victim_n_new = float(left)
             else:
-                victim_n_new = view.n_view[plan.victim] - got
+                # Same reconciliation as above, post-transfer: the steal
+                # moved queued tasks, the victim's executed count is
+                # untouched, and `left` is the observed remaining queue.
+                victim_n_new = done_est + float(left)
             # Table 1 row 2: thief refreshes its own and the victim's cells.
             self._update_info(i)
             self.info.record_remote(

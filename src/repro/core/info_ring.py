@@ -27,6 +27,8 @@ gives staleness telemetry for free.
 
 from __future__ import annotations
 
+import threading
+
 import numpy as np
 
 from .steal import neighborhood
@@ -35,7 +37,17 @@ __all__ = ["RingInfo"]
 
 
 class RingInfo:
-    """Shared information board for P processes with propagation radius R."""
+    """Shared information board for P processes with propagation radius R.
+
+    Elastic membership (DESIGN.md §Elasticity): ``grow`` remaps the board to
+    a larger ring.  New members start with ``n = 0, t = NaN, version = 0`` —
+    exactly the boot state — so every thief's §2.2.1 preemptive wall-time
+    estimate covers them until their first report propagates.  ``_epoch``
+    serialises the whole-board swap against cell writes; it is NOT a cell
+    lock (the §2.1 single-writer partition still makes individual Puts
+    race-free) but an epoch guard so a writer never lands on a half-swapped
+    board and per-cell versions stay monotone across growth.
+    """
 
     def __init__(self, num_procs: int, radius: int) -> None:
         if num_procs < 1:
@@ -51,14 +63,62 @@ class RingInfo:
         self.last_sent = np.zeros((2, self.P, self.P), dtype=np.int64)
         self.puts = 0  # telemetry: number of cell-level Put operations
         self.rounds = 0
+        # Reentrant so communicate() can hold it ONCE around its whole send
+        # round (up to 2R cell Puts) instead of paying an acquire per cell.
+        self._epoch = threading.RLock()
+
+    # -------------------------------------------------------------- elasticity
+    def grow(self, num_procs: int, radius: int | None = None) -> None:
+        """Remap the board to ``num_procs`` ring positions (scale-out).
+
+        Existing cells (values, versions, send watermarks) carry over
+        verbatim; the new positions join as unreported members (n=0, t=NaN,
+        version=0).  Shrinking is not supported — leavers are tombstoned by
+        the substrate, never removed, so ring indices stay stable.
+        """
+        if num_procs < self.P:
+            raise ValueError(
+                f"cannot shrink the ring ({self.P} -> {num_procs}); "
+                "retired members keep their positions as tombstones"
+            )
+        with self._epoch:
+            new_r = self.R if radius is None else radius
+            new_r = int(max(0, min(new_r, num_procs // 2)))
+            if num_procs == self.P:
+                self.R = new_r
+                return
+            old = self.P
+            n = np.zeros((num_procs, num_procs), dtype=np.float64)
+            t = np.full((num_procs, num_procs), np.nan, dtype=np.float64)
+            version = np.zeros((num_procs, num_procs), dtype=np.int64)
+            last_sent = np.zeros((2, num_procs, num_procs), dtype=np.int64)
+            n[:old, :old] = self.n
+            t[:old, :old] = self.t
+            version[:old, :old] = self.version
+            last_sent[:, :old, :old] = self.last_sent
+            self.n, self.t = n, t
+            self.version, self.last_sent = version, last_sent
+            self.P, self.R = num_procs, new_r
+
+    def reset_member(self, k: int) -> None:
+        """A replacement took over tombstoned ring position ``k``: every
+        process's cell about k returns to the unreported boot state (n=0,
+        t=NaN) so §2.2.1 preemptive estimates price the newcomer, not the
+        ghost it replaced.  Versions BUMP (never reset) — observers stay
+        monotone and the reset propagates like any other news."""
+        with self._epoch:
+            self.n[:, k] = 0.0
+            self.t[:, k] = np.nan
+            self.version[:, k] += 1
 
     # ------------------------------------------------------------ local write
     def update_local(self, i: int, n_i: float, t_i: float) -> None:
         """Alg. 1 lines 2/11: p_i refreshes its own cell (Table 1 row 1)."""
-        if (self.n[i, i] != n_i) or not _feq(self.t[i, i], t_i):
-            self.n[i, i] = n_i
-            self.t[i, i] = t_i
-            self.version[i, i] += 1
+        with self._epoch:
+            if (self.n[i, i] != n_i) or not _feq(self.t[i, i], t_i):
+                self.n[i, i] = n_i
+                self.t[i, i] = t_i
+                self.version[i, i] += 1
 
     def record_remote(self, i: int, j: int, n_j: float, t_j: float) -> None:
         """Thief-side knowledge injection (Table 1 rows 2-3).
@@ -68,10 +128,11 @@ class RingInfo:
         victim's cell in its OWN vector and bumps the version so the news
         propagates outward from the thief.
         """
-        self.n[i, j] = n_j
-        if t_j == t_j:  # not NaN
-            self.t[i, j] = t_j
-        self.version[i, j] += 1
+        with self._epoch:
+            self.n[i, j] = n_j
+            if t_j == t_j:  # not NaN
+                self.t[i, j] = t_j
+            self.version[i, j] += 1
 
     # ------------------------------------------------------- ring propagation
     def communicate(self, i: int) -> int:
@@ -88,35 +149,39 @@ class RingInfo:
         if self.P == 1 or self.R == 0:
             return 0
         sent = 0
-        left = (i - 1) % self.P
-        right = (i + 1) % self.P
-        # Cells the LEFT neighbour may receive: positions j in left's upper
-        # window, i.e. ring-distance(left -> j) in [1, R] going right; those
-        # are exactly j = i .. i+R-1 (distance from i: 0..R-1).
-        for off in range(0, self.R):
-            j = (i + off) % self.P
-            sent += self._put(i, left, j, direction=0)
-        # Cells the RIGHT neighbour may receive: j = i-R+1 .. i.
-        for off in range(0, self.R):
-            j = (i - off) % self.P
-            sent += self._put(i, right, j, direction=1)
-        self.rounds += 1
+        with self._epoch:  # one hold per round; inner Puts re-enter cheaply
+            left = (i - 1) % self.P
+            right = (i + 1) % self.P
+            # Cells the LEFT neighbour may receive: positions j in left's
+            # upper window, i.e. ring-distance(left -> j) in [1, R] going
+            # right; those are exactly j = i .. i+R-1 (distance from i:
+            # 0..R-1).
+            for off in range(0, self.R):
+                j = (i + off) % self.P
+                sent += self._put(i, left, j, direction=0)
+            # Cells the RIGHT neighbour may receive: j = i-R+1 .. i.
+            for off in range(0, self.R):
+                j = (i - off) % self.P
+                sent += self._put(i, right, j, direction=1)
+            self.rounds += 1
         return sent
 
     def _put(self, src: int, dst: int, j: int, direction: int) -> int:
-        ver = self.version[src, j]
-        if ver <= self.last_sent[direction, src, j]:
-            return 0  # flag is false: nothing new to send
-        self.last_sent[direction, src, j] = ver
-        # One-sided Put into dst's window.  Single-writer per (dst, j) cell by
-        # the §2.1 partition, hence no lock.  Keep monotonicity: a cell only
-        # moves forward in version (defensive; partition already ensures it).
-        if ver > self.version[dst, j]:
-            self.n[dst, j] = self.n[src, j]
-            self.t[dst, j] = self.t[src, j]
-            self.version[dst, j] = ver
-        self.puts += 1
-        return 1
+        with self._epoch:  # epoch guard only — see class docstring
+            ver = self.version[src, j]
+            if ver <= self.last_sent[direction, src, j]:
+                return 0  # flag is false: nothing new to send
+            self.last_sent[direction, src, j] = ver
+            # One-sided Put into dst's window.  Single-writer per (dst, j)
+            # cell by the §2.1 partition, hence no cell lock.  Keep
+            # monotonicity: a cell only moves forward in version (defensive;
+            # partition already ensures it).
+            if ver > self.version[dst, j]:
+                self.n[dst, j] = self.n[src, j]
+                self.t[dst, j] = self.t[src, j]
+                self.version[dst, j] = ver
+            self.puts += 1
+            return 1
 
     # -------------------------------------------------------------- inspection
     def view(
@@ -135,8 +200,20 @@ class RingInfo:
         the own cell was still NaN poisoned Eq. 5 for sub-millisecond
         tasks: one fake 1 s neighbour dwarfs the real harmonic sum.)
         """
-        n = self.n[i].copy()
-        t = self.t[i].copy()
+        n, t, _raw, _window = self.view_window(i, default_t)
+        return n, t
+
+    def view_window(
+        self, i: int, default_t: float | None = None
+    ) -> tuple[np.ndarray, np.ndarray, np.ndarray, list[int]]:
+        """``view(i)`` plus the raw-t row and radius window, all from ONE
+        board epoch — a concurrent ``grow`` can never hand a caller a window
+        sized for a bigger ring than the rows it just copied."""
+        with self._epoch:
+            n = self.n[i].copy()
+            raw_t = self.t[i].copy()
+            window = neighborhood(i, self.P, self.R)
+        t = raw_t.copy()
         mask = np.isnan(t)
         if mask.any():
             if default_t is not None:
@@ -145,7 +222,7 @@ class RingInfo:
                 known = t[~mask]
                 fill = float(known.mean()) if known.size else 1.0
             t[mask] = fill
-        return n, t
+        return n, t, raw_t, window
 
     def window(self, i: int) -> list[int]:
         return neighborhood(i, self.P, self.R)

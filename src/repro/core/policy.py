@@ -162,7 +162,19 @@ class SchedPolicy:
 
     # ---------------------------------------------------------------- faults
     def on_worker_death(self, worker: int, now: float) -> None:
-        """A worker tombstoned itself (its re-queued tasks stay stealable)."""
+        """A worker tombstoned itself (its re-queued tasks stay stealable).
+        Graceful retirement (``WorkerPool.retire_worker``) reports through
+        the same hook — from the policy's perspective a drained leaver and a
+        crashed member differ only in who rescued the queued tasks."""
+
+    # ------------------------------------------------------------- elasticity
+    def on_worker_join(self, worker: int, now: float) -> None:
+        """A worker joined the LIVE pool (elastic scale-out, DESIGN.md
+        §Elasticity).  ``worker`` is its ring position — either a brand-new
+        index one past the previous ring size, or a previously tombstoned
+        slot being replaced.  Called by both substrates BEFORE the joiner
+        takes its first boundary, so any policy state sized on the worker
+        count must be grown here."""
 
     # --------------------------------------------------------------- costing
     def task_multiplier(self, worker: int) -> float:
@@ -201,6 +213,13 @@ class A2WSPolicy(SchedPolicy):
         if decision is None:
             return self._probe(view)
         return StealPlan(decision.victim, decision.amount, decision.criterion)
+
+    def on_worker_join(self, worker: int, now: float) -> None:
+        """Nothing to grow: A2WS decision state lives in the information
+        plane, and the substrate already recomputed the radius window and
+        remapped the ring (``RingInfo.grow``).  The joiner's cells are NaN
+        everywhere, so thieves price it by the §2.2.1 preemptive wall-time
+        estimate until its first report propagates — exactly like boot."""
 
     def _probe(self, view: PolicyView) -> StealPlan | None:
         if not (self.probe and view.open_arrival):
@@ -299,6 +318,19 @@ class CTWSPolicy(SchedPolicy):
             if self.token_at == worker:
                 self._advance(now)
 
+    def on_worker_join(self, worker: int, now: float) -> None:
+        with self._lock:
+            if worker >= self.num_workers:
+                grown = np.zeros(worker + 1, dtype=np.int64)
+                grown[: self.num_workers] = self.counts
+                self.counts = grown
+                self.num_workers = worker + 1
+            # Un-skip: the slot re-enters the token rotation (``_advance``
+            # hops over ``_dead`` members, so without this a replacement in
+            # a tombstoned slot would never receive the token).
+            self._dead.discard(worker)
+            self.counts[worker] = 0
+
 
 class LWPolicy(SchedPolicy):
     """Centralized leader–workers dynamic scheduling (paper §4 baseline).
@@ -365,6 +397,11 @@ class LWPolicy(SchedPolicy):
             grant = self.leader_free + self.request_rtt / 2.0
         return StealPlan(0, 1, "leader", delay=max(grant - view.now, 0.0))
 
+    def on_worker_join(self, worker: int, now: float) -> None:
+        """Joiners become requesters: the central queue stays on worker 0
+        and the new worker's first idle boundary sends it through the same
+        serialized leader gate as everyone else — no policy state to grow."""
+
 
 class RandomWSPolicy(SchedPolicy):
     """Classical receiver-initiated random work-stealing: an idle thief
@@ -392,6 +429,10 @@ class RandomWSPolicy(SchedPolicy):
             return None
         victim = int(view.rng.choice(loaded))
         return StealPlan(victim, max(1, view.depth(victim) // 2), "random-half")
+
+    def on_worker_join(self, worker: int, now: float) -> None:
+        """The victim set grows implicitly: every boundary draws uniformly
+        over ``view.num_workers``, which the substrate already bumped."""
 
 
 POLICIES = ("a2ws", "ctws", "lw", "random")

@@ -135,6 +135,16 @@ class SimConfig:
     arrival: str = "closed"
     arrival_rate: float = 0.0  # tasks/second entering the system (poisson)
     arrival_trace: tuple[float, ...] = ()  # absolute times (trace mode)
+    # --- elastic membership (DESIGN.md §Elasticity) ---
+    # joins:   (time, speed) scale-out events — each activates ONE new node
+    #          appended to the ring at that virtual time; it starts with an
+    #          empty queue and pulls work through the policy's own steal
+    #          path (preemptive estimates cover it exactly like boot).
+    # retires: (time, node) graceful drains — the node finishes its
+    #          in-flight task, its queued tasks are re-sprayed over the live
+    #          nodes, and its ring position is tombstoned.
+    joins: tuple[tuple[float, float], ...] = ()
+    retires: tuple[tuple[float, int], ...] = ()
     # --- CTWS ---
     token_base: float = 2e-3
     token_per_node: float = 2.5e-4
@@ -255,10 +265,28 @@ def simulate(policy: str | SchedPolicy, cfg: SimConfig) -> SimResult:
     """Run ``cfg`` under ``policy`` ("a2ws" | "ctws" | "lw" | "random", or a
     ready ``SchedPolicy`` instance) on the virtual-time substrate."""
     pol = sim_policy(policy, cfg)
-    p = cfg.P
+    p0 = cfg.P
     rng = np.random.default_rng(cfg.seed)
-    radius = cfg.radius if cfg.radius is not None else max(1, round(0.2 * p))
-    radius = min(radius, p // 2)
+
+    # Elastic membership: every join appends one ring position, so all
+    # per-node state is sized for the FINAL ring up front; `p` is the
+    # currently-materialised prefix and `alive_sim` masks live members.
+    joins = sorted(cfg.joins)
+    pmax = p0 + len(joins)
+    speeds = np.concatenate(
+        [np.asarray(cfg.speeds, np.float64),
+         np.asarray([s for _, s in joins], np.float64)]
+    )
+    p = p0
+    alive_sim = np.zeros(pmax, bool)
+    alive_sim[:p0] = True
+    born = np.zeros(pmax, np.float64)  # preemptive-estimate baseline per node
+
+    def _radius_for(active: int) -> int:
+        r = cfg.radius if cfg.radius is not None else max(1, round(0.2 * active))
+        return min(r, active // 2)
+
+    radius = _radius_for(p0)
     open_mode = cfg.arrival != "closed"
     uses_ring = pol.uses_ring
 
@@ -267,12 +295,12 @@ def simulate(policy: str | SchedPolicy, cfg: SimConfig) -> SimResult:
     # land), tail = right (thieves claim the oldest waiters), matching the
     # TaskDeque discipline of the threaded runtime.  Initial placement is the
     # policy's (static block split by default, the central queue for LW).
-    queues: list[_deque] = [_deque() for _ in range(p)]
+    queues: list[_deque] = [_deque() for _ in range(pmax)]
     if open_mode:
         arrivals = _arrival_times(cfg, rng)
         total_tasks = len(arrivals)
     else:
-        for i, part in enumerate(pol.partition([0.0] * cfg.num_tasks, p)):
+        for i, part in enumerate(pol.partition([0.0] * cfg.num_tasks, p0)):
             queues[i].extend(part)
         arrivals = np.empty(0)
         total_tasks = cfg.num_tasks
@@ -280,22 +308,36 @@ def simulate(policy: str | SchedPolicy, cfg: SimConfig) -> SimResult:
     def depth(i: int) -> int:
         return len(queues[i])
 
-    executed = np.zeros(p, np.int64)
-    runtime_sum = np.zeros(p, np.float64)
-    busy = np.zeros(p, np.float64)
-    hist = [_History() for _ in range(p)]
+    executed = np.zeros(pmax, np.int64)
+    runtime_sum = np.zeros(pmax, np.float64)
+    busy = np.zeros(pmax, np.float64)
+    hist = [_History() for _ in range(pmax)]
     if uses_ring:
-        for i in range(p):
+        for i in range(p0):
             hist[i].append(0.0, float(depth(i)), float("nan"))
-    cur_t = np.full(p, np.nan)  # latest own estimate (for relay pacing)
-    pending_dur = np.zeros(p, np.float64)  # duration of the task in flight
-    pending_arr = np.zeros(p, np.float64)  # arrival stamp of that task
-    idle_since = np.full(p, -1.0)
-    in_transit = np.zeros(p, np.int64)  # loot scheduled but not yet received
+    cur_t = np.full(pmax, np.nan)  # latest own estimate (for relay pacing)
+    pending_dur = np.zeros(pmax, np.float64)  # duration of the task in flight
+    pending_arr = np.zeros(pmax, np.float64)  # arrival stamp of that task
+    idle_since = np.full(pmax, -1.0)
+    in_transit = np.zeros(pmax, np.int64)  # loot scheduled but not yet received
     arrived = 0 if open_mode else total_tasks
     records: list[tuple[int, float, float]] = []
     latencies: list[float] = []
     stats = {"steals": 0, "failed": 0, "moved": 0, "done": 0}
+    rr_state = [0]  # round-robin router for arrivals / drain re-sprays
+
+    def route(prefer_central: bool = True) -> int:
+        """Pick a LIVE landing node (arrival spray / retirement drain) —
+        membership changes mean targets must resolve at event time, not at
+        trace-generation time."""
+        central = pol.central if prefer_central else None
+        if central is not None and alive_sim[central]:
+            return central
+        for _ in range(p):
+            rr_state[0] = (rr_state[0] + 1) % p
+            if alive_sim[rr_state[0]]:
+                return rr_state[0]
+        return -1  # nobody is alive
 
     # Event heap: (time, seq, kind, node, payload)
     heap: list[tuple[float, int, str, int, object]] = []
@@ -315,12 +357,14 @@ def simulate(policy: str | SchedPolicy, cfg: SimConfig) -> SimResult:
         return float(executed[i] + depth(i))
 
     def start_task(i: int, now: float) -> None:
+        if not alive_sim[i]:
+            return  # tombstoned/retired: never picks up work again
         if not queues[i]:
             idle_since[i] = now
             push_event(now + cfg.retry_interval, "retry", i, 0)
             return
         pending_arr[i] = queues[i].popleft()
-        dur = cfg.task_cost / cfg.speeds[i]
+        dur = cfg.task_cost / speeds[i]
         if cfg.noise:
             dur *= float(rng.lognormal(0.0, cfg.noise))
         dur *= pol.task_multiplier(i)  # LW: co-located leader slows worker 0
@@ -335,7 +379,7 @@ def simulate(policy: str | SchedPolicy, cfg: SimConfig) -> SimResult:
     def _own_t(i: int, now: float) -> float:
         if executed[i] > 0:
             return runtime_sum[i] / executed[i]
-        return max(now, 1e-9)
+        return max(now - born[i], 1e-9)  # elapsed since the node joined
 
     def ring_view(i: int, now: float) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
         """Delayed (n, t, queued-estimate) views of the window around i."""
@@ -345,13 +389,22 @@ def simulate(policy: str | SchedPolicy, cfg: SimConfig) -> SimResult:
         # Relay pacing: per-hop delay = link latency + half the relay's poll
         # interval (relays forward mid-task, §2.1 — capped by poll period,
         # never by the 60 s task duration).
-        t_relay = np.where(np.isnan(cur_t), cfg.task_cost / cfg.speeds, cur_t)
+        t_relay = np.where(
+            np.isnan(cur_t[:p]), cfg.task_cost / speeds[:p], cur_t[:p]
+        )
         for off in range(-radius, radius + 1):
             j = (i + off) % p
             if j == i:
                 n_view[j] = reported_n(i)
                 t_view[j] = _own_t(i, now)
                 queued[j] = depth(i)
+                continue
+            if not alive_sim[j]:
+                # Tombstoned member: frozen cells; count the orphaned queue
+                # directly and report speed ~0 (mirrors the threaded plane).
+                queued[j] = depth(j)
+                t_view[j] = 1e12
+                n_view[j] = queued[j] if open_mode else executed[j] + queued[j]
                 continue
             d = _ring_dist(i, j, p)
             step = 1 if off > 0 else -1
@@ -363,7 +416,7 @@ def simulate(policy: str | SchedPolicy, cfg: SimConfig) -> SimResult:
                 )
             n_j, t_j = hist[j].at(max(now - delay, 0.0))
             if t_j != t_j:  # no report yet: preemptive wall-time estimate
-                t_j = max(now, 1e-9)
+                t_j = max(now - born[i], 1e-9)  # the THIEF's elapsed time
             n_view[j] = n_j
             t_view[j] = t_j
             if open_mode:
@@ -395,7 +448,7 @@ def simulate(policy: str | SchedPolicy, cfg: SimConfig) -> SimResult:
             rng=rng,
             window=window,
             depth=depth,
-            alive=lambda j: True,
+            alive=lambda j: bool(alive_sim[j]),
             pending=lambda: arrived - stats["done"],
             n_view=n_view,
             t_view=t_view,
@@ -406,6 +459,8 @@ def simulate(policy: str | SchedPolicy, cfg: SimConfig) -> SimResult:
     def boundary(i: int, now: float) -> bool:
         """Task-boundary policy consultation + steal execution (the
         simulator's analogue of WorkerPool._policy_boundary)."""
+        if not alive_sim[i]:
+            return False  # tombstoned members take no more boundaries
         view = make_view(i, now)
         plan = pol.on_boundary(view)
         if plan is None:
@@ -433,14 +488,37 @@ def simulate(policy: str | SchedPolicy, cfg: SimConfig) -> SimResult:
         pol.on_steal_result(view, plan, take, depth(v))
         return True
 
-    # Boot: all nodes start their first task at t=0; open-arrival tasks
-    # enter through "arrive" events, routed by the policy (round-robin spray
-    # by default, the central queue for LW).
-    for k, t_arr in enumerate(arrivals):
-        target = pol.central if pol.central is not None else k % p
-        push_event(float(t_arr), "arrive", target, float(t_arr))
+    def land(node: int, stamps, now: float) -> None:
+        """Queue stamps head-side on ``node`` and wake it if idle."""
+        queues[node].extendleft(stamps)
+        if uses_ring:
+            hist[node].append(now, reported_n(node), _own_t(node, now))
+        if idle_since[node] >= 0.0:
+            idle_since[node] = -1.0
+            start_task(node, now)
+
+    # Boot: all initial nodes start their first task at t=0.  Open-arrival
+    # tasks enter through "arrive" events whose landing node is resolved at
+    # ARRIVAL time (policy central queue, else live round-robin) — the ring
+    # may have grown or shrunk since the trace was generated.  Membership
+    # events are scheduled alongside.
+    for t_arr in arrivals:
+        push_event(float(t_arr), "arrive", -1, float(t_arr))
+    for k, (t_join, _speed) in enumerate(joins):
+        push_event(float(t_join), "join", p0 + k)
+    for t_ret, node in cfg.retires:
+        if not 0 <= node < pmax:
+            raise ValueError(f"retire target {node} outside the ring 0..{pmax - 1}")
+        if node >= p0 and t_ret < joins[node - p0][0]:
+            # Would hit the not-yet-joined node's tombstone guard and be
+            # silently dropped — surface the mis-ordered churn script.
+            raise ValueError(
+                f"retire of node {node} at t={t_ret} precedes its join "
+                f"at t={joins[node - p0][0]}"
+            )
+        push_event(float(t_ret), "retire", int(node))
     pol.on_start([depth(i) for i in range(p)], 0.0)
-    for i in range(p):
+    for i in range(p0):
         start_task(i, 0.0)
 
     makespan = 0.0
@@ -457,26 +535,39 @@ def simulate(policy: str | SchedPolicy, cfg: SimConfig) -> SimResult:
                 # Update own info + history (Alg. 1 line 11 + communicate).
                 cur_t[i] = runtime_sum[i] / executed[i]
                 hist[i].append(now, reported_n(i), cur_t[i])
-            # Smart stealing right after finishing a task (preemptive).
+            # Smart stealing right after finishing a task (preemptive);
+            # a node retired mid-task completes it, then leaves the loop.
             boundary(i, now)
             start_task(i, now)
         elif kind == "arrive":
             arrived += 1
-            queues[i].appendleft(float(payload))  # head side, like submit()
-            if uses_ring:
-                hist[i].append(now, reported_n(i), _own_t(i, now))
-            if idle_since[i] >= 0.0:
-                idle_since[i] = -1.0
-                start_task(i, now)
+            target = route()
+            if target < 0:
+                # Unlike the threaded plane (which raises PoolCollapsed at
+                # submit), silently parking the stamp would truncate the
+                # latency/task counts the caller is measuring — fail loud.
+                raise RuntimeError(
+                    f"arrival at t={now:.3f} but every node has retired; "
+                    "fix the churn script (cfg.retires/joins)"
+                )
+            land(target, [float(payload)], now)
         elif kind == "receive":
-            queues[i].extendleft(payload)  # stolen goods land head-side
             in_transit[i] -= len(payload)
-            if uses_ring:
-                hist[i].append(now, reported_n(i), _own_t(i, now))
-            if idle_since[i] >= 0.0:
-                idle_since[i] = -1.0
-                start_task(i, now)
+            if not alive_sim[i]:
+                # Loot landed on a node that retired while it was in
+                # transit: forward it to a live member immediately.
+                tgt = route(prefer_central=False)
+                if tgt < 0:
+                    raise RuntimeError(
+                        f"steal loot arrived at t={now:.3f} but every node "
+                        "has retired; fix the churn script"
+                    )
+                land(tgt, payload, now)
+                continue
+            land(i, payload, now)
         elif kind == "retry":
+            if not alive_sim[i]:
+                continue  # tombstoned while idle: drop the poll loop
             if queues[i] or idle_since[i] < 0.0:
                 continue  # no longer idle
             if stats["done"] >= total_tasks:
@@ -486,6 +577,37 @@ def simulate(policy: str | SchedPolicy, cfg: SimConfig) -> SimResult:
                 delay = cfg.retry_interval * (1.3 ** min(payload, 12))
                 push_event(now + delay, "retry", i, payload + 1)
             # on success the stolen tasks arrive via a "receive" event
+        elif kind == "join":
+            # Scale-out: node i materialises NOW — empty queue, no history,
+            # preemptive estimates date from `born[i]`, and the policy grows
+            # any member-count state before the joiner's first boundary.
+            p = i + 1
+            alive_sim[i] = True
+            born[i] = now
+            radius = _radius_for(p)
+            if uses_ring:
+                hist[i].append(now, 0.0, float("nan"))
+            pol.on_worker_join(i, now)
+            start_task(i, now)  # empty queue -> the retry/steal loop
+        elif kind == "retire":
+            if not alive_sim[i]:
+                continue  # already tombstoned (double retire / dead)
+            alive_sim[i] = False
+            # Graceful drain: re-spray the queued stamps over live members
+            # (the threaded plane's retire_worker(drain=True) semantics).
+            stamps = list(queues[i])
+            queues[i].clear()
+            if uses_ring:
+                hist[i].append(now, reported_n(i), _own_t(i, now))
+            if stamps and not alive_sim[:p].any():
+                raise RuntimeError(
+                    f"retiring the last live node at t={now:.3f} with "
+                    f"{len(stamps)} task(s) queued would silently drop "
+                    "them; fix the churn script"
+                )
+            for s in stamps:
+                land(route(prefer_central=False), [s], now)
+            pol.on_worker_death(i, now)
 
     pol.termination(makespan)
     return SimResult(

@@ -17,6 +17,10 @@ driver reports per-request latency percentiles:
 ``--policy`` swaps the scheduling policy balancing the replica pool
 (DESIGN.md §Policy layer): a2ws (default) vs the ctws / lw / random
 baselines, head-to-head on the same Poisson trace and latency metric.
+
+``--autoscale-max N`` makes the pool ELASTIC (DESIGN.md §Elasticity): a
+threshold autoscaler boots surge replicas up to N while the backlog
+exceeds its per-replica bound and drains them back once traffic quiets.
 """
 
 from __future__ import annotations
@@ -31,7 +35,7 @@ import numpy as np
 from repro.configs.base import ARCH_IDS, get_smoke
 from repro.core.policy import POLICIES
 from repro.models import lm
-from repro.serve.engine import Replica, ServePool
+from repro.serve.engine import AutoscaleConfig, Replica, ServePool
 
 
 def make_decode(cfg):
@@ -99,7 +103,17 @@ def _open_main(cfg, params, args) -> None:
         # by slow_factor (on real hardware: different device slices)
         replicas.append(Replica(f"replica{r}", gen,
                                 slow_factor=args.slow_factor))
-    pool = ServePool(replicas, seed=args.seed, policy=args.policy)
+    autoscale = None
+    if args.autoscale_max > args.replicas:
+        # Elastic pool (DESIGN.md §Elasticity): surge replicas boot at full
+        # speed (fresh capacity) and drain back out once the backlog clears.
+        autoscale = AutoscaleConfig(
+            factory=lambda wid: Replica(f"surge{wid}", gen),
+            min_replicas=args.replicas,
+            max_replicas=args.autoscale_max,
+        )
+    pool = ServePool(replicas, seed=args.seed, policy=args.policy,
+                     autoscale=autoscale)
     pool.start()
 
     futs = []
@@ -110,11 +124,15 @@ def _open_main(cfg, params, args) -> None:
         futs.append(pool.submit(req))
     for f in futs:
         f.result(timeout=600)
+    scale_outs = sum(1 for e in pool.scale_events if e[1] == "out")
+    peak = pool.peak_live
     stats = pool.shutdown()
     pct = stats.latency_percentiles()
     per_rep = stats.per_worker_tasks
     print(f"served {len(futs)} streamed requests [{args.policy}]; "
           f"requests/replica={per_rep} steals={len(stats.steals)}")
+    if autoscale is not None:
+        print(f"autoscaler: peak {peak} replicas, {scale_outs} scale-outs")
     print("latency p50/p95/p99 = "
           + "/".join(f"{pct[q]*1e3:.0f}ms" for q in (50.0, 95.0, 99.0)))
     print(f"sample completion: {futs[0].result()['completion'][:8]}")
@@ -137,6 +155,10 @@ def main() -> None:
                     help="slowdown of replicas 1.. vs replica 0 (open mode)")
     ap.add_argument("--policy", choices=POLICIES, default="a2ws",
                     help="scheduling policy for the replica pool (open mode)")
+    ap.add_argument("--autoscale-max", type=int, default=0,
+                    help="elastic pool: scale out to at most this many "
+                         "replicas under backlog, drain back when idle "
+                         "(0 = fixed pool; open mode)")
     args = ap.parse_args()
 
     cfg = get_smoke(args.arch)

@@ -36,7 +36,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.core.a2ws import RunStats, WorkerPool
+from repro.core.a2ws import PoolCollapsed, RunStats, WorkerPool
 from repro.core.policy import SchedPolicy
 from repro.models import lm
 from repro.models.config import ModelConfig
@@ -56,6 +56,7 @@ __all__ = [
     "Replica",
     "ServeFuture",
     "ServePool",
+    "AutoscaleConfig",
 ]
 
 
@@ -241,6 +242,32 @@ class Replica:
     slow_factor: float = 1.0
 
 
+@dataclass
+class AutoscaleConfig:
+    """Threshold autoscaler for an elastic ``ServePool`` (DESIGN.md
+    §Elasticity).
+
+    A background watcher samples the pool every ``interval`` seconds:
+
+    * **scale OUT** when the request backlog exceeds
+      ``high_pending_per_replica`` × live replicas (queueing theory's "the
+      pool is past saturation" signal — pending() counts queued + in-flight,
+      so the bound is in units of requests-per-server) and the pool is below
+      ``max_replicas``: ``factory(worker_id)`` builds the new replica.
+    * **scale IN** when ``pending() == 0`` for ``idle_ticks_to_retire``
+      consecutive samples and the pool is above ``min_replicas``: the
+      highest-numbered live replica is drained back out (LIFO, so the boot
+      replicas — typically the fast reserved capacity — stay).
+    """
+
+    factory: Callable[[int], Replica]  # worker id -> new Replica
+    min_replicas: int = 1
+    max_replicas: int = 8
+    high_pending_per_replica: float = 4.0
+    idle_ticks_to_retire: int = 3
+    interval: float = 0.02
+
+
 class ServeFuture:
     """Handle for one in-flight request submitted to a live ``ServePool``.
 
@@ -308,11 +335,19 @@ class ServePool:
         radius: int | None = None,
         seed: int = 0,
         policy: str | SchedPolicy = "a2ws",
+        autoscale: AutoscaleConfig | None = None,
     ):
         self.replicas = replicas
         self.radius = radius
         self.seed = seed
         self.policy = policy
+        self.autoscale = autoscale
+        #: (wall time, "out" | "in", worker id, pending at decision)
+        self.scale_events: list[tuple[float, str, int, int]] = []
+        self.peak_live = len(replicas)
+        self._scale_lock = threading.Lock()
+        self._scale_stop = threading.Event()
+        self._scaler: threading.Thread | None = None
         self._runtime: WorkerPool | None = None
 
     # ------------------------------------------------------------- lifecycle
@@ -359,6 +394,12 @@ class ServePool:
         rt.on_collapse = self._fail_unserved
         rt.start()
         self._runtime = rt
+        if self.autoscale is not None:
+            self._scale_stop.clear()
+            self._scaler = threading.Thread(
+                target=self._autoscale_loop, daemon=True
+            )
+            self._scaler.start()
 
     def _fail_unserved(self, stranded: list) -> None:
         err = RuntimeError("all replicas died; request not served")
@@ -368,10 +409,97 @@ class ServePool:
                 fut.end_t = time.perf_counter()
                 fut._done.set()
 
+    # ------------------------------------------------------------- elasticity
+    def live_replicas(self) -> list[int]:
+        """Ids of replicas currently serving (not dead, not draining)."""
+        rt = self._runtime
+        if rt is None:
+            return []
+        return [
+            i for i in range(rt.num_workers)
+            if not rt.dead[i] and not rt.workers[i].retiring
+        ]
+
+    def add_replica(
+        self, replica: Replica | Callable[[int], Replica]
+    ) -> int:
+        """Scale out: boot one more worker of the LIVE pool.  Queued
+        requests flow to it through the ordinary steal path — no
+        rebalancing pass, no pause.  Returns the replica id — a recycled
+        slot of a previously retired/dead replica when one is free (the
+        pool's ring stays bounded across surge cycles), else a fresh one.
+
+        ``replica`` may be a ready ``Replica`` or a factory called with the
+        ACTUAL assigned id — a recycled slot's id is only known at
+        assignment time, so id-keyed replica config (device slice, name,
+        endpoint) must be built there, not guessed from the list length."""
+        if self._runtime is None:
+            raise RuntimeError("pool not started")
+
+        def place(wid: int) -> None:
+            # Runs before the worker thread boots: task_fn indexes
+            # self.replicas[wid], so the entry must exist first.
+            rep = replica(wid) if callable(replica) else replica
+            if wid == len(self.replicas):
+                self.replicas.append(rep)
+            else:
+                self.replicas[wid] = rep
+
+        with self._scale_lock:
+            wid = self._runtime.add_worker(on_assign=place)
+        self.peak_live = max(self.peak_live, len(self.live_replicas()))
+        return wid
+
+    def retire_replica(self, replica: int, drain: bool = True) -> None:
+        """Scale in / maintenance: gracefully drain one replica out of the
+        live pool (its queued requests move to survivors first).  The
+        ``Replica`` object keeps its slot so ids stay stable."""
+        if self._runtime is None:
+            raise RuntimeError("pool not started")
+        self._runtime.retire_worker(replica, drain=drain)
+
+    def _autoscale_loop(self) -> None:
+        cfg = self.autoscale
+        assert cfg is not None
+        idle_ticks = 0
+        while not self._scale_stop.wait(cfg.interval):
+            rt = self._runtime
+            if rt is None:
+                return
+            live = self.live_replicas()
+            self.peak_live = max(self.peak_live, len(live))
+            pending = rt.pending()
+            if (
+                pending > cfg.high_pending_per_replica * max(len(live), 1)
+                and len(live) < cfg.max_replicas
+            ):
+                # The factory receives the ACTUAL slot id (recycled slots
+                # make it differ from the replica-list length).
+                wid = self.add_replica(cfg.factory)
+                self.scale_events.append(
+                    (time.perf_counter(), "out", wid, pending)
+                )
+                idle_ticks = 0
+            elif pending == 0 and len(live) > cfg.min_replicas:
+                idle_ticks += 1
+                if idle_ticks >= cfg.idle_ticks_to_retire:
+                    victim = max(live)  # LIFO: boot replicas stay
+                    self.retire_replica(victim, drain=True)
+                    self.scale_events.append(
+                        (time.perf_counter(), "in", victim, 0)
+                    )
+                    idle_ticks = 0
+            else:
+                idle_ticks = 0
+
     def shutdown(self) -> RunStats:
         """Drain (no more submits), wait for quiescence, return final stats."""
         if self._runtime is None:
             raise RuntimeError("pool not started")
+        if self._scaler is not None:
+            self._scale_stop.set()
+            self._scaler.join()
+            self._scaler = None
         rt = self._runtime
         rt.drain()
         stats = rt.join()
@@ -399,11 +527,23 @@ class ServePool:
         fut = ServeFuture(request)
         fut.submit_t = time.perf_counter()
         assert self._runtime is not None
-        self._runtime.submit(fut, worker=replica)
+        try:
+            self._runtime.submit(fut, worker=replica)
+        except PoolCollapsed:
+            # Every replica is dead: fail THIS request immediately (the
+            # runtime either never accepted it, or swept it into the
+            # collapse hook — which already failed it, making this a no-op).
+            self._fail_unserved([fut])
+            return fut
         if self._runtime.alive.load() == 0:
-            # Pool collapsed (all replicas dead): the collapse hook may have
-            # fired before this submit landed — fail it rather than strand it.
-            self._fail_unserved(self._runtime.drain_leftover_tasks())
+            # Pool collapsed (all replicas dead).  Redundant safety net: the
+            # runtime's post-push sweep already routed every stranded future
+            # through the collapse hook (ServePool always installs it before
+            # start), making this a no-op via the fut.done() guard — kept so
+            # a waiter can never hang even if the collapse protocol shifts.
+            # Never drain here: the runtime reconciles its quiescence
+            # counters when IT sweeps.
+            self._fail_unserved([fut])
         return fut
 
     def submit_wave(

@@ -1,0 +1,394 @@
+"""Elastic membership (DESIGN.md §Elasticity): runtime worker join/retire on
+the live pool, for every policy, in BOTH planes (threaded WorkerPool and the
+discrete-event simulator), plus the ServePool elastic API and autoscaler."""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.a2ws import WorkerPool
+from repro.core.policy import POLICIES
+from repro.core.simulator import SimConfig, simulate
+from repro.serve.engine import AutoscaleConfig, Replica, ServePool
+
+
+# -------------------------------------------------- threaded plane, per policy
+@pytest.mark.parametrize("policy", list(POLICIES))
+def test_threaded_join_and_retire_open_arrival(policy):
+    """A worker joins the live open-arrival pool mid-run and serves part of
+    the workload through the ordinary steal path; a worker retires with
+    drain=True and its queue survives.  Every task executes exactly once."""
+    done, lock = [], threading.Lock()
+
+    def task_fn(wid, task):
+        time.sleep(0.002)
+        with lock:
+            done.append(task)
+
+    pool = WorkerPool([], 2, task_fn, policy=policy, open_arrival=True, seed=0)
+    pool.start()
+    pool.submit_many(range(30), worker=0)  # backlog on worker 0
+    wid = pool.add_worker()
+    assert wid == 2
+    pool.submit_many(range(30, 60))
+    time.sleep(0.05)
+    pool.retire_worker(1, drain=True)
+    pool.submit_many(range(60, 80))
+    pool.drain()
+    stats = pool.join()
+    assert sorted(done) == list(range(80))
+    assert sum(stats.per_worker_tasks) == 80
+    assert stats.per_worker_tasks[wid] > 0, "joiner never served a task"
+    assert pool.dead[1] and not pool.dead[0] and not pool.dead[wid]
+    kinds = [(k, w) for _, k, w in pool.membership_log]
+    assert ("join", 2) in kinds and ("retire", 1) in kinds
+
+
+@pytest.mark.parametrize("policy", list(POLICIES))
+def test_threaded_join_closed_workload(policy):
+    """Elasticity is not open-arrival-only: a joiner entering a CLOSED run
+    steals from the static partition and shortens the tail.  (Sleep-based
+    tasks: GIL-free, so thread scheduling stays fair on small CI boxes.)"""
+    n = 48
+
+    def task_fn(wid, task):
+        time.sleep(0.004)
+
+    pool = WorkerPool(list(range(n)), 2, task_fn, policy=policy, seed=1)
+    pool.start()
+    time.sleep(0.02)
+    wid = pool.add_worker()
+    stats = pool.join()
+    assert sum(stats.per_worker_tasks) == n
+    assert stats.per_worker_tasks[wid] > 0, "closed-mode joiner never served"
+
+
+def test_retire_without_drain_leaves_tasks_stealable():
+    """drain=False is the fault path minus the crash: the queue stays on the
+    tombstoned deque and thieves reclaim it."""
+    done, lock = [], threading.Lock()
+
+    def task_fn(wid, task):
+        time.sleep(0.001)
+        with lock:
+            done.append((wid, task))
+
+    pool = WorkerPool([], 2, task_fn, policy="a2ws", open_arrival=True, seed=0)
+    pool.start()
+    pool.retire_worker(1, drain=False)
+    deadline = time.time() + 5.0
+    while not pool.dead[1] and time.time() < deadline:
+        time.sleep(0.001)
+    assert pool.dead[1]
+    pool.submit_many(range(12), worker=1)  # pinned onto the tombstone
+    pool.drain()
+    stats = pool.join()
+    assert sorted(t for _, t in done) == list(range(12))
+    assert all(w == 0 for w, _ in done), "only the survivor may serve"
+    assert sum(stats.per_worker_tasks) == 12
+
+
+def test_collapse_sweep_reconciles_quiescence_for_resurrection():
+    """Review fix: sweeping stranded tasks at total collapse must count them
+    as resolved — otherwise pending() stays positive forever and a pool
+    resurrected with add_worker() can never reach quiescence (join hangs)."""
+    stranded, done, lock = [], [], threading.Lock()
+
+    def task_fn(wid, task):
+        if task == "die":
+            raise RuntimeError("boom")
+        time.sleep(0.001)
+        with lock:
+            done.append(task)
+
+    pool = WorkerPool([], 2, task_fn, policy="random", open_arrival=True)
+    pool.on_collapse = stranded.extend
+    pool.start()
+    pool.submit_many(["die", "die"])  # both workers crash; tasks re-queued
+    deadline = time.time() + 5.0
+    while pool.alive.load() > 0 and time.time() < deadline:
+        time.sleep(0.001)
+    assert pool.alive.load() == 0
+    assert len(stranded) == 2  # the re-queued crashers were swept
+    assert pool.pending() == 0, "swept tasks must reconcile the counters"
+    # Resurrection: a replacement worker joins the collapsed pool and the
+    # pool serves new work and terminates cleanly.
+    wid = pool.add_worker()
+    pool.submit_many(range(4))
+    pool.drain()
+    stats = pool.join()  # pre-fix: hangs forever (done can never catch up)
+    assert sorted(done) == list(range(4))
+    assert stats.per_worker_tasks[wid] == 4
+
+
+def test_retiring_last_worker_collapses_pool():
+    stranded_seen = []
+
+    pool = WorkerPool([], 2, lambda w, t: time.sleep(0.001),
+                      policy="random", open_arrival=True, seed=0)
+    pool.on_collapse = stranded_seen.extend
+    pool.start()
+    pool.retire_worker(0)
+    pool.retire_worker(1)
+    deadline = time.time() + 5.0
+    while pool.alive.load() > 0 and time.time() < deadline:
+        time.sleep(0.001)
+    assert pool.alive.load() == 0
+    with pytest.raises(RuntimeError):
+        pool.submit("x")
+    pool.drain()
+    pool.join()
+
+
+def test_add_worker_recycles_tombstoned_slot():
+    """Review fix (bounded elastic state): a replacement reuses the lowest
+    fully-exited tombstone — inheriting its deque — instead of growing the
+    ring forever; per-worker counters restart but records keep history."""
+    done, lock = [], threading.Lock()
+
+    def task_fn(wid, task):
+        time.sleep(0.001)
+        with lock:
+            done.append((wid, task))
+
+    pool = WorkerPool([], 3, task_fn, policy="a2ws", open_arrival=True, seed=0)
+    pool.start()
+    pool.retire_worker(1, drain=True)
+    deadline = time.time() + 5.0
+    while pool._slot_threads[1].is_alive() and time.time() < deadline:
+        time.sleep(0.001)
+    assert pool.dead[1]
+    wid = pool.add_worker()
+    assert wid == 1, "tombstoned slot must be recycled, not appended past"
+    assert pool.num_workers == 3 and not pool.dead[1]
+    assert pool.info.P == 3  # the ring did NOT grow
+    # (the info-column reset to the unreported state is unit-tested in
+    # test_info_ring.py — here live propagation re-fills it immediately)
+    pool.submit_many(range(20), worker=1)
+    pool.drain()
+    pool.join()
+    assert sorted(t for _, t in done) == list(range(20))
+    assert any(w == 1 for w, _ in done), "replacement never served"
+    joins = [(k, w) for _, k, w in pool.membership_log if k == "join"]
+    assert ("join", 1) in [(k, w) for k, w in joins]
+
+
+def test_autoscaler_surge_cycles_keep_ring_bounded():
+    """Scale out -> drain back -> scale out again: the second surge recycles
+    the drained slots, so the ring never outgrows max_replicas."""
+    def gen(req):
+        time.sleep(0.003)
+        return {"ok": True}
+
+    pool = ServePool(
+        [Replica("r0", gen)],
+        autoscale=AutoscaleConfig(
+            factory=lambda wid: Replica(f"s{wid}", gen),
+            min_replicas=1, max_replicas=3,
+            high_pending_per_replica=3.0, idle_ticks_to_retire=2,
+            interval=0.005,
+        ),
+    )
+    pool.start()
+    for _burst in range(2):
+        futs = pool.submit_wave([{"x": k} for k in range(40)])
+        for f in futs:
+            f.result(timeout=30)
+        deadline = time.time() + 5.0
+        while len(pool.live_replicas()) > 1 and time.time() < deadline:
+            time.sleep(0.01)
+        assert pool.live_replicas() == [0]
+    assert pool._runtime.num_workers <= 3, (
+        f"ring grew to {pool._runtime.num_workers}: drained slots "
+        "were not recycled across surges"
+    )
+    assert len(pool.replicas) <= 3
+    pool.shutdown()
+
+
+def test_add_worker_requires_started_pool_and_retire_validates():
+    pool = WorkerPool([], 2, lambda w, t: None, open_arrival=True)
+    with pytest.raises(RuntimeError):
+        pool.add_worker()
+    pool.start()
+    with pytest.raises(ValueError):
+        pool.retire_worker(7)
+    pool.retire_worker(1)
+    pool.retire_worker(1)  # idempotent
+    pool.drain()
+    pool.join()
+
+
+def test_joiner_ring_radius_recomputed():
+    """The paper's 20% radius operating point tracks the ELASTIC pool size
+    unless the caller pinned a radius explicitly."""
+    pool = WorkerPool([], 5, lambda w, t: None, policy="a2ws",
+                      open_arrival=True)
+    assert pool.radius == 1
+    pool.start()
+    for _ in range(6):
+        pool.add_worker()
+    assert pool.num_workers == 11
+    assert pool.radius == 2
+    assert pool.info.P == 11 and pool.info.R == 2
+    pool.drain()
+    pool.join()
+    pinned = WorkerPool([], 5, lambda w, t: None, policy="a2ws", radius=1,
+                        open_arrival=True)
+    pinned.start()
+    pinned.add_worker()
+    assert pinned.radius == 1
+    pinned.drain()
+    pinned.join()
+
+
+# --------------------------------------------------- simulated plane, per policy
+@pytest.mark.parametrize("policy", list(POLICIES))
+def test_sim_join_retire_closed(policy):
+    """The same policy objects under virtual time: a joiner picks up a share
+    of the closed workload, a retiree's remaining queue is drained, and the
+    task count is conserved."""
+    cfg = SimConfig(
+        speeds=np.array([4.0, 1.0, 1.0]), num_tasks=60, task_cost=1.0,
+        noise=0.0, seed=0, joins=((1.0, 4.0),), retires=((3.0, 1),),
+    )
+    res = simulate(policy, cfg)
+    assert sum(res.per_node_tasks) == 60
+    joiner = 3
+    assert res.per_node_tasks[joiner] > 0, "simulated joiner never served"
+    # the retiree freezes at whatever it finished by t=3 (its share of a
+    # 10s-scale run) — the drained queue went to the survivors
+    assert res.per_node_tasks[1] < 60 // 3
+
+
+def test_sim_retire_before_join_rejected():
+    """Review fix: a churn script retiring a node before it joins would be
+    silently dropped by the tombstone guard — reject it up front."""
+    cfg = SimConfig(
+        speeds=np.array([1.0, 1.0]), num_tasks=10,
+        joins=((10.0, 4.0),), retires=((5.0, 2),),
+    )
+    with pytest.raises(ValueError, match="precedes its join"):
+        simulate("random", cfg)
+
+
+@pytest.mark.parametrize("policy", list(POLICIES))
+def test_sim_join_retire_poisson(policy):
+    cfg = SimConfig(
+        speeds=np.array([4.0, 1.0, 1.0]), num_tasks=80, task_cost=1.0,
+        noise=0.0, seed=1, arrival="poisson", arrival_rate=0.6 * 6.0,
+        joins=((2.0, 4.0),), retires=((6.0, 1),),
+    )
+    res = simulate(policy, cfg)
+    assert sum(res.per_node_tasks) == 80
+    assert len(res.latencies) == 80
+    assert res.per_node_tasks[3] > 0
+
+
+@pytest.mark.parametrize("policy", list(POLICIES))
+def test_cross_plane_elastic_conformance(policy):
+    """Join/retire through BOTH planes on one seeded workload shape: in each
+    plane the joiner must take real work, the retiree must stop early, and
+    work must still move (steal accounting stays live under churn)."""
+    # -- simulated
+    cfg = SimConfig(
+        speeds=np.array([4.0, 1.0, 1.0, 1.0]), num_tasks=48, task_cost=0.012,
+        noise=0.0, seed=0, hop_latency=1e-4, info_poll=1e-3,
+        comm_cell_cost=0.0, steal_latency=5e-4, steal_per_task=1e-5,
+        retry_interval=1e-3, token_base=1e-4, token_per_node=0.0,
+        request_rtt=2e-4, leader_service=1e-4, leader_overhead=0.0,
+        joins=((0.02, 4.0),), retires=((0.06, 1),),
+    )
+    sim = simulate(policy, cfg)
+    assert sum(sim.per_node_tasks) == 48
+    assert sim.per_node_tasks[4] > 0
+    assert sim.moved_tasks > 0
+
+    # -- threaded (same speeds: worker 0 fast, joiner fast).  Sleep-based
+    # tasks keep the GIL out of the scheduling; the joiner enters with ~2/3
+    # of the run left, so it must serve part of the workload in any fair
+    # interleaving.
+    speeds = [4.0, 1.0, 1.0, 1.0, 4.0]
+    done, lock = [], threading.Lock()
+
+    def task_fn(wid, task):
+        time.sleep(0.012 / speeds[wid])
+        with lock:
+            done.append(task)
+
+    pool = WorkerPool(list(range(48)), 4, task_fn, policy=policy, seed=0)
+    pool.start()
+    time.sleep(0.02)
+    wid = pool.add_worker()
+    pool.retire_worker(1, drain=True)
+    stats = pool.join()
+    assert sorted(done) == list(range(48))
+    assert stats.per_worker_tasks[wid] > 0
+    assert sum(s[3] for s in stats.steals) > 0, "threaded plane never stole"
+
+
+# ----------------------------------------------------------------- ServePool
+def test_servepool_add_and_retire_replica():
+    served_by = {}
+    lock = threading.Lock()
+
+    def gen(req):
+        time.sleep(0.002)
+        with lock:
+            served_by.setdefault(req["x"], []).append(True)
+        return {"y": req["x"]}
+
+    pool = ServePool([Replica("r0", gen), Replica("r1", gen)], seed=0)
+    pool.start()
+    futs = pool.submit_wave([{"x": k} for k in range(10)])
+    wid = pool.add_replica(Replica("r2", gen))
+    assert wid == 2 and len(pool.replicas) == 3
+    futs += pool.submit_wave([{"x": k} for k in range(10, 30)])
+    for f in futs:
+        f.result(timeout=30)
+    assert any(f.worker == wid for f in futs), "new replica never served"
+    pool.retire_replica(1)
+    # Retirement is asynchronous (the replica finishes its in-flight work
+    # first) — wait for the tombstone before asserting exclusivity.
+    deadline = time.time() + 5.0
+    while not pool._runtime.dead[1] and time.time() < deadline:
+        time.sleep(0.002)
+    assert pool.live_replicas() == [0, 2]
+    futs2 = pool.submit_wave([{"x": k} for k in range(30, 40)])
+    for f in futs2:
+        f.result(timeout=30)
+    assert all(f.worker in (0, 2) for f in futs2)
+    stats = pool.shutdown()
+    assert sum(stats.per_worker_tasks) == 40
+
+
+def test_servepool_autoscaler_scales_out_and_back():
+    """A burst on a 1-replica pool scales out to max_replicas, then the
+    idle pool drains back to min_replicas."""
+    def gen(req):
+        time.sleep(0.004)
+        return {"ok": True}
+
+    pool = ServePool(
+        [Replica("r0", gen)],
+        autoscale=AutoscaleConfig(
+            factory=lambda wid: Replica(f"s{wid}", gen),
+            min_replicas=1, max_replicas=3,
+            high_pending_per_replica=3.0, idle_ticks_to_retire=2,
+            interval=0.005,
+        ),
+    )
+    pool.start()
+    futs = pool.submit_wave([{"x": k} for k in range(60)])
+    for f in futs:
+        f.result(timeout=30)
+    assert pool.peak_live == 3, f"peak {pool.peak_live}, wanted full scale-out"
+    assert sum(1 for e in pool.scale_events if e[1] == "out") >= 2
+    deadline = time.time() + 5.0
+    while len(pool.live_replicas()) > 1 and time.time() < deadline:
+        time.sleep(0.01)
+    assert pool.live_replicas() == [0], "idle pool never drained back"
+    stats = pool.shutdown()
+    assert sum(stats.per_worker_tasks) == 60

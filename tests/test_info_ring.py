@@ -2,6 +2,7 @@
 dirty-flag suppression (Table 1)."""
 
 import numpy as np
+import pytest
 
 from repro.core.info_ring import RingInfo
 
@@ -108,6 +109,57 @@ def test_view_unknown_t_falls_back_to_subsystem_mean():
     np.testing.assert_allclose(t_blank, 1.0)
 
 
+# ----------------------------------------------------------------- elasticity
+def test_grow_preserves_state_and_marks_joiners_unreported():
+    """DESIGN.md §Elasticity: growth carries every existing cell over
+    verbatim and the new positions look exactly like boot members (n=0,
+    t=NaN, version=0) so preemptive estimates cover them."""
+    r = RingInfo(4, 1)
+    r.update_local(0, 7.0, 1.5)
+    r.update_local(2, 3.0, 0.5)
+    for i in range(4):
+        r.communicate(i)
+    old_version = r.version.copy()
+    r.grow(6, 2)
+    assert r.P == 6 and r.R == 2
+    assert r.n[0, 0] == 7.0 and r.t[0, 0] == 1.5
+    assert (r.version[:4, :4] == old_version).all()
+    assert np.isnan(r.t[:, 4:]).all() and (r.n[:, 4:] == 0.0).all()
+    assert (r.version[:, 4:] == 0).all()
+    # new members participate immediately
+    r.update_local(5, 2.0, 0.25)
+    r.communicate(5)
+    assert r.n[4, 5] == 2.0  # 5's right neighbour (4... ring: 5+1=0; left=4)
+    with pytest.raises(ValueError):
+        r.grow(3)
+
+
+def test_reset_member_returns_column_to_unreported_state():
+    """Slot reuse (DESIGN.md §Elasticity): a replacement in a tombstoned
+    ring position resets everyone's cell about it to the boot state (n=0,
+    t=NaN) with a version BUMP, so preemptive estimates price the newcomer
+    and observers stay monotone."""
+    r = RingInfo(4, 1)
+    for i in range(4):
+        r.update_local(i, 5.0, 2.0)
+        r.communicate(i)
+    before = r.version[:, 1].copy()
+    r.reset_member(1)
+    assert (r.n[:, 1] == 0.0).all() and np.isnan(r.t[:, 1]).all()
+    assert (r.version[:, 1] == before + 1).all()
+    # the replacement's FIRST report propagates normally from the bumped base
+    r.update_local(1, 3.0, 0.5)
+    r.communicate(1)
+    assert r.n[0, 1] == 3.0 and r.t[0, 1] == 0.5  # left neighbour heard it
+
+
+def test_grow_same_size_only_updates_radius():
+    r = RingInfo(6, 1)
+    r.update_local(1, 9.0, 1.0)
+    r.grow(6, 2)
+    assert r.P == 6 and r.R == 2 and r.n[1, 1] == 9.0
+
+
 # --------------------------------------------------- concurrency properties
 from _hypo import given, settings, st  # noqa: E402
 
@@ -162,3 +214,45 @@ def test_version_monotonic_under_concurrent_communicate(p, radius, rounds, seed)
             if k == 0 or plans[i][k - 1] != (n_i, t_i)
         )
         assert r.version[i, i] == expected
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    p0=st.integers(min_value=2, max_value=6),
+    radius=st.integers(min_value=1, max_value=3),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    script=st.lists(
+        st.sampled_from(["update", "communicate", "record", "grow"]),
+        min_size=5, max_size=40,
+    ),
+)
+def test_grow_preserves_version_monotonicity(p0, radius, seed, script):
+    """Elasticity property (ISSUE 3): interleaving ``grow`` with local
+    updates, thief records and ring propagation NEVER moves a version
+    counter backwards for any pre-existing cell, never lets a view run
+    ahead of the owner (staleness >= 0 with owner-only writes), and every
+    growth leaves the old board block intact."""
+    rng = np.random.default_rng(seed)
+    r = RingInfo(p0, radius)
+    prev = r.version.copy()
+    for op in script:
+        if op == "update":
+            i = int(rng.integers(0, r.P))
+            r.update_local(i, float(rng.integers(0, 30)), float(rng.random() + 0.1))
+        elif op == "communicate":
+            r.communicate(int(rng.integers(0, r.P)))
+        elif op == "record":
+            i, j = rng.integers(0, r.P, size=2)
+            r.record_remote(int(i), int(j), float(rng.integers(0, 30)), 1.0)
+        else:
+            r.grow(r.P + int(rng.integers(1, 3)))
+        common = prev.shape[0]
+        assert (r.version[:common, :common] >= prev).all(), (
+            "a version counter moved backwards across " + op
+        )
+        prev = r.version.copy()
+    truth = r.version.diagonal().copy()
+    # record_remote legitimately advances a thief's cell past the owner's
+    # (first-hand knowledge); owner-only scripts keep staleness >= 0.
+    if "record" not in script:
+        assert (r.staleness(truth) >= 0).all()

@@ -9,7 +9,8 @@ import time
 import numpy as np
 import pytest
 
-from repro.core.a2ws import A2WSRuntime
+from repro.core.a2ws import A2WSRuntime, PoolCollapsed, WorkerPool
+from repro.core.policy import SchedPolicy
 from repro.core.simulator import SimConfig, simulate, table2_speeds
 from repro.core.steal import tail_steal_amount
 from repro.serve.engine import Replica, ServePool
@@ -151,6 +152,105 @@ def test_closed_mode_has_no_latency_stats():
     rt = A2WSRuntime(list(range(8)), 2, lambda w, t: None)
     stats = rt.run()
     assert stats.latency_percentiles() == {}
+
+
+class _IdleGatePolicy(SchedPolicy):
+    """Worker 1's post-get_task idle boundaries sleep ``hold`` seconds so the
+    test can land a submit() inside the window between its empty-deque check
+    and its backoff wait; nobody ever steals."""
+
+    name = "idle-gate"
+
+    def __init__(self, hold: float = 0.15) -> None:
+        self.hold = hold
+        self.calls = 0
+        self.in_idle_boundary = threading.Event()
+
+    def on_boundary(self, view):
+        if view.worker == 1 and view.idle:
+            self.calls += 1
+            if self.calls % 2 == 0:  # the idle-branch call AFTER get_task
+                self.in_idle_boundary.set()
+                time.sleep(self.hold)
+                self.in_idle_boundary.clear()
+        return None
+
+
+def test_submit_wakes_backoff_sleeper_promptly():
+    """Bugfix regression (lost submit wakeup): with ONE shared wake event, a
+    busy worker's event-clear at its loop top could erase a submit()'s set()
+    aimed at an idle sleeper that had already checked its deque — costing a
+    full idle_backoff_max of tail latency.  With per-worker events the
+    submitted task must complete far sooner than the 0.5 s backoff cap."""
+    pol = _IdleGatePolicy(hold=0.15)
+    exec_t = {}
+
+    def task_fn(wid, task):
+        if task == "probe":
+            exec_t["probe"] = time.perf_counter()
+        else:
+            time.sleep(0.001)
+
+    pool = WorkerPool([], 2, task_fn, policy=pol, open_arrival=True,
+                      idle_backoff=0.5, idle_backoff_max=0.5)
+    pool.start()
+    # 300 ms of backlog pinned to worker 0: it cycles its loop top (where
+    # the shared event used to be cleared) every millisecond with NO further
+    # submits to re-set the event.
+    pool.submit_many(["w0"] * 300, worker=0)
+    assert pol.in_idle_boundary.wait(5.0), "worker 1 never reached idle gate"
+    t0 = time.perf_counter()
+    pool.submit("probe", worker=1)  # lands AFTER worker 1's deque check
+    deadline = time.time() + 5.0
+    while "probe" not in exec_t and time.time() < deadline:
+        time.sleep(0.005)
+    pool.drain()
+    pool.join()
+    assert "probe" in exec_t, "probe task never executed"
+    latency = exec_t["probe"] - t0
+    assert latency < 0.35, (
+        f"sleeper woke after {latency:.3f}s — submit wakeup was lost "
+        f"(idle backoff cap is 0.5s)"
+    )
+
+
+def test_submit_into_collapsed_pool_raises():
+    """Bugfix regression (submit-vs-collapse race): once every worker has
+    died, submit() must raise PoolCollapsed instead of round-robining onto a
+    dead deque nobody will ever drain (the silent strand of the old code)."""
+
+    def die(wid, task):
+        raise RuntimeError("boom")
+
+    pool = WorkerPool([], 2, die, policy="random", open_arrival=True)
+    pool.start()
+    pool.submit_many(["a", "b"])  # both workers pick one up and die
+    deadline = time.time() + 5.0
+    while pool.alive.load() > 0 and time.time() < deadline:
+        time.sleep(0.001)
+    assert pool.alive.load() == 0
+    with pytest.raises(PoolCollapsed):
+        pool.submit("stranded")
+    pool.drain()
+    pool.join()  # must return promptly, nothing hangs
+
+
+def test_servepool_kill_all_replicas_while_submitting():
+    """Bugfix regression: hammer submits while every replica dies — each
+    future must resolve (with an error), whether it was accepted before the
+    collapse, swept by the collapse hook, or rejected after it."""
+
+    def bad(req):
+        raise RuntimeError("replica crashed")
+
+    pool = ServePool([Replica("b0", bad), Replica("b1", bad)])
+    pool.start()
+    futs = [pool.submit({"x": k}) for k in range(40)]
+    for f in futs:
+        with pytest.raises(RuntimeError):
+            f.result(timeout=10)
+    stats = pool.shutdown()
+    assert sum(stats.per_worker_tasks) == 0
 
 
 # ------------------------------------------------------------------ tail rule

@@ -6,8 +6,9 @@ import time
 
 import pytest
 
-from repro.core.a2ws import A2WSRuntime, partition_tasks
+from repro.core.a2ws import A2WSRuntime, WorkerPool, partition_tasks
 from repro.core.baselines import CTWSRuntime, LWRuntime
+from repro.core.policy import StealPlan
 
 
 def _busy(seconds: float) -> None:
@@ -88,6 +89,45 @@ def test_a2ws_worker_failure_tasks_survive():
     assert sorted(done) == list(range(n))
     assert len(rt.errors) >= 1
     assert stats.per_worker_tasks[2] == 0
+
+
+def _correction_pool(clock_now):
+    """3-worker closed-mode pool with a hand-set info state.
+
+    The thief (worker 0) believes the victim (worker 1) has n=8 TOTAL tasks
+    at t=2.0 s each; the thief's elapsed wall clock is 10 s, so the §2.2.1
+    estimate says the victim has executed min(10/2, 8) = 5 of them — a
+    queued estimate of 3.  ``done_est`` for the Table 1 reconciliation is
+    therefore 5.
+    """
+    pool = WorkerPool([], 3, lambda w, t: None, policy="a2ws", radius=1,
+                      clock=lambda: clock_now[0])
+    pool.info.record_remote(0, 1, 8.0, 2.0)
+    return pool
+
+
+def test_closed_failed_steal_correction_keeps_done_estimate():
+    """Bugfix regression: a failed steal on a DRAINED victim must reconcile
+    its total to done_est + observed queue (5 + 0), not leave the stale full
+    n=8 in place (the old ``n_view - observed_left`` rule)."""
+    clock_now = [10.0]
+    pool = _correction_pool(clock_now)
+    pool.policy.on_boundary = lambda view: StealPlan(1, 1)
+    assert not pool._policy_boundary(0)  # victim deque is empty -> failure
+    assert pool.info.n[0, 1] == pytest.approx(5.0)
+
+
+def test_closed_successful_steal_reconciles_total_from_snapshot():
+    """Bugfix regression: after a successful steal the victim's total is
+    done_est + observed remaining queue (5 + 1), not the stale-view
+    ``n_view - got`` (7) — the get-accumulate snapshot is ground truth for
+    the queued part."""
+    clock_now = [10.0]
+    pool = _correction_pool(clock_now)
+    pool.workers[1].deque.push(["a", "b"])  # ground truth: 2 queued
+    pool.policy.on_boundary = lambda view: StealPlan(1, 1)
+    assert pool._policy_boundary(0)
+    assert pool.info.n[0, 1] == pytest.approx(6.0)
 
 
 def test_a2ws_single_worker_degenerates():
