@@ -64,6 +64,7 @@ def main() -> None:
         sched_micro,
         table3_lw,
         table4_ctws,
+        weighted,
     )
 
     benches = {
@@ -77,6 +78,7 @@ def main() -> None:
         "open_arrival": lambda: open_arrival.run(seeds=seeds),
         "policy_matrix": lambda: policy_matrix.run(seeds=seeds, fast=args.fast),
         "elastic": lambda: elastic.run(seeds=seeds, fast=args.fast),
+        "weighted": lambda: weighted.run(seeds=seeds, fast=args.fast),
         "roofline": lambda: roofline.run(),
     }
     only = set(args.only.split(",")) if args.only else None

@@ -42,6 +42,7 @@ Algorithm 1 mapping (line numbers from the paper; policy = A2WSPolicy):
 
 from __future__ import annotations
 
+import math
 import threading
 import time
 from dataclasses import dataclass, field
@@ -52,6 +53,7 @@ import numpy as np
 from .deque import AtomicInt64, TaskDeque
 from .info_ring import RingInfo
 from .policy import PolicyView, SchedPolicy, make_policy
+from .steal import weighted_overlay
 
 __all__ = [
     "WorkerPool",
@@ -150,16 +152,25 @@ def partition_tasks(tasks: Sequence, num_workers: int) -> list[list]:
 class _WorkerState:
     __slots__ = (
         "deque", "executed", "runtime_sum", "ran_any", "start_time", "rng",
-        "wake", "retiring", "drain_on_retire",
+        "wake", "retiring", "drain_on_retire", "class_t", "nc_cache",
     )
 
-    def __init__(self, deque: TaskDeque, seed: int) -> None:
+    def __init__(
+        self, deque: TaskDeque, seed: int, num_classes: int = 1
+    ) -> None:
         self.deque = deque
         self.executed = 0
         self.runtime_sum = 0.0
         self.ran_any = False
         self.start_time = 0.0
         self.rng = np.random.default_rng(seed)
+        # Per-cost-class EWMA runtime estimates t̂[c] (NaN = never ran one);
+        # written only by the owner thread, published via the info ring.
+        self.class_t = np.full(num_classes, np.nan, dtype=np.float64)
+        # (mutations, headtail word) -> cached queue-composition scan; the
+        # scan is O(queue) under a lock and sits on the per-boundary hot
+        # path, so it must only re-run when the deque actually changed.
+        self.nc_cache: tuple[tuple[int, int], np.ndarray] | None = None
         # Per-worker wake event: a submit()/drain()/death sets EVERY event,
         # but each worker clears only its OWN — a busy worker's clear can
         # therefore never erase a wakeup meant for an idle sleeper (the
@@ -186,6 +197,9 @@ class WorkerPool:
         idle_backoff_max: float | None = None,
         clock: Callable[[], float] = time.perf_counter,
         open_arrival: bool = False,
+        cost_class_fn: Callable[[object], int] | None = None,
+        num_classes: int = 1,
+        ewma_alpha: float = 0.25,
     ) -> None:
         """``task_fn(worker_id, task) -> result`` runs the task on a worker.
 
@@ -207,6 +221,16 @@ class WorkerPool:
         miss up to the cap (default 50× the base) — long-lived open-arrival
         pools must not spin at full speed between request waves.  A
         ``submit()`` wakes sleepers immediately.
+
+        ``cost_class_fn`` / ``num_classes`` / ``ewma_alpha``: work-weighted
+        stealing (DESIGN.md §Work-weighted stealing).  ``cost_class_fn(task)
+        -> int`` tags every payload with a cost class in ``[0, num_classes)``
+        (clamped; a raising classifier falls back to class 0 — never let
+        accounting kill a worker).  Workers then track per-class EWMA
+        runtimes (smoothing ``ewma_alpha``), publish per-class queue counts
+        through the info ring, and ring policies price queues in estimated
+        work-seconds.  Without a classifier the pool runs the count-based
+        degenerate case — bit-for-bit the old behaviour.
         """
         self.num_workers = num_workers
         self.task_fn = task_fn
@@ -222,15 +246,22 @@ class WorkerPool:
         )
         self.clock = clock
         self.open_arrival = open_arrival
+        if num_classes < 1:
+            raise ValueError("num_classes must be >= 1")
+        self.cost_class_fn = cost_class_fn
+        self.num_classes = num_classes if cost_class_fn is not None else 1
+        self.ewma_alpha = ewma_alpha
         parts = self.policy.partition(tasks, num_workers)
         self.workers = [
-            _WorkerState(TaskDeque(parts[w]), seed * 1009 + w)
+            _WorkerState(TaskDeque(parts[w]), seed * 1009 + w, self.num_classes)
             for w in range(num_workers)
         ]
         # The §2.1 information board exists only for ring policies; central
         # or probe-based policies (LW, CTWS, random) pay no cell traffic.
         self.info = (
-            RingInfo(num_workers, self.radius) if self.policy.uses_ring else None
+            RingInfo(num_workers, self.radius, self.num_classes)
+            if self.policy.uses_ring
+            else None
         )
         self.done_counter = AtomicInt64(0)
         # Tasks ever made visible to the runtime (seed partition + submits).
@@ -452,14 +483,17 @@ class WorkerPool:
             if wid < len(self.workers):
                 # Replacement: fresh run state, inherited deque (orphans on
                 # the tombstone become the joiner's backlog).
-                w = _WorkerState(self.workers[wid].deque, self.seed * 1009 + wid)
+                w = _WorkerState(
+                    self.workers[wid].deque, self.seed * 1009 + wid,
+                    self.num_classes,
+                )
                 w.start_time = now
                 self.workers[wid] = w
                 if self.info is not None:
                     self.info.reset_member(wid)  # back to the unreported state
                 self.dead[wid] = False
             else:
-                w = _WorkerState(TaskDeque([]), self.seed * 1009 + wid)
+                w = _WorkerState(TaskDeque([]), self.seed * 1009 + wid, self.num_classes)
                 w.start_time = now  # preemptive-estimate baseline = NOW
                 # Append order matters for lock-free readers: the worker and
                 # its tombstone slot exist BEFORE any count admits id wid.
@@ -682,6 +716,8 @@ class WorkerPool:
             w.executed += 1
             w.runtime_sum += end - start
             w.ran_any = True
+            if self.weighted:
+                self._observe_class_time(w, task, end - start)
             with self._log_lock:
                 stamps = self._arrivals.get(id(task))
                 arrival = stamps.pop(0) if stamps else float("nan")
@@ -696,6 +732,53 @@ class WorkerPool:
                 self.info.communicate(i)  # line 13
 
     # ----------------------------------------------------------------- helpers
+    @property
+    def weighted(self) -> bool:
+        """Work-weighted accounting active.  Requires a classifier AND at
+        least two classes: a single class carries no composition information
+        and its per-class EWMA would differ from the arithmetic-mean t the
+        count plan prices with — the degenerate case must stay bit-for-bit
+        count-based (tests/test_weighted.py)."""
+        return self.cost_class_fn is not None and self.num_classes > 1
+
+    def _task_class(self, task) -> int:
+        """Clamped cost class of a payload; a raising classifier maps to
+        class 0 — accounting must never take a worker down."""
+        try:
+            c = int(self.cost_class_fn(task))  # type: ignore[misc]
+        except Exception:  # noqa: BLE001 — user classifier, defensive
+            return 0
+        return min(max(c, 0), self.num_classes - 1)
+
+    def _class_counts(self, tasks) -> np.ndarray:
+        counts = np.zeros(self.num_classes, dtype=np.float64)
+        for task in tasks:
+            counts[self._task_class(task)] += 1.0
+        return counts
+
+    def _queue_classes(self, w: _WorkerState) -> np.ndarray:
+        """Cached composition scan of a worker's own deque: re-scans only
+        when the deque's mutation hint moved.  The returned array is never
+        mutated in place (always replaced), so sharing it with the info
+        board is safe."""
+        key = (w.deque.mutations, w.deque.headtail.load())
+        cached = w.nc_cache
+        if cached is not None and cached[0] == key:
+            return cached[1]
+        counts = self._class_counts(w.deque.snapshot_tasks())
+        w.nc_cache = (key, counts)
+        return counts
+
+    def _observe_class_time(self, w: _WorkerState, task, dt: float) -> None:
+        """Owner-side EWMA update t̂[c] ← α·dt + (1−α)·t̂[c] on completion."""
+        c = self._task_class(task)
+        prev = w.class_t[c]
+        if prev != prev:  # first observation of this class
+            w.class_t[c] = dt
+        else:
+            a = self.ewma_alpha
+            w.class_t[c] = a * dt + (1.0 - a) * prev
+
     def _update_info(self, i: int) -> None:
         """Closed: n_i = executed + queued (paper §2.2).  Open-arrival:
         n_i = instantaneous queue depth — cumulative totals are meaningless
@@ -711,20 +794,43 @@ class WorkerPool:
             t_i = w.runtime_sum / w.executed
         else:
             t_i = max(self.clock() - w.start_time, 1e-9)
-        self.info.update_local(i, float(n_i), float(t_i))
+        if self.weighted:
+            # Per-class payload: own queue composition (ground-truth scan of
+            # the own deque) + per-class EWMA estimates, same cell version.
+            self.info.update_local(
+                i, float(n_i), float(t_i),
+                nc_i=self._queue_classes(w),
+                tc_i=w.class_t.copy(),
+            )
+        else:
+            self.info.update_local(i, float(n_i), float(t_i))
 
-    def _ring_view(self, i: int) -> tuple[np.ndarray, np.ndarray, np.ndarray, list[int]]:
+    def _ring_view(
+        self, i: int
+    ) -> tuple[
+        np.ndarray, np.ndarray, np.ndarray, list[int],
+        np.ndarray | None, np.ndarray | None, np.ndarray | None,
+        np.ndarray | None,
+    ]:
         """A2WS information model: what thief ``i`` may believe (§2.1/§2.2.1).
 
         Estimates use ONLY the thief's information vector (plus the elapsed
         wall time for preemptive estimates, §2.2.1) — never ground-truth
         reads of remote state.  Over/under-estimates are absorbed by the
         Fig. 3b atomic adjust-and-correct protocol, exactly as in the paper.
+
+        Returns ``(n, t, queued, window, unit, qtasks, rel, ntasks)``; the
+        last four are the work-weighted overlay (None in count mode).  In weighted
+        ``n``/``queued`` are measured in equivalent reference-class tasks
+        (DESIGN.md §Work-weighted stealing) while ``qtasks`` keeps the task
+        counts for integrality guards and the Fig. 3b clamp.
         """
         w = self.workers[i]
         # One board epoch for rows + window: a concurrent grow() can never
         # produce a window index outside the copied rows.
-        n_view, t_view, raw_t, window = self.info.view_window(i)
+        n_view, t_view, raw_t, window, nc_view, tc_view = (
+            self.info.view_window_classes(i)
+        )
         now = self.clock()
         elapsed = max(now - w.start_time, 1e-9)
         queued = np.zeros(len(n_view))
@@ -760,12 +866,36 @@ class WorkerPool:
                 # Estimated executed count from speed; remaining = n_j - done.
                 done_est = min(elapsed / max(t_view[j], 1e-9), n_view[j])
                 queued[j] = max(n_view[j] - done_est, 0.0)
-        return n_view, t_view, queued, window
+        if not self.weighted:
+            return n_view, t_view, queued, window, None, None, None, None
+        # ---- work-weighted overlay (DESIGN.md §Work-weighted stealing) ----
+        # Ground-truth compositions where the thief may read them: its own
+        # deque, and tombstoned deques (already ground-truth counted above).
+        nc_view[i] = self._queue_classes(w)
+        tc_view[i] = w.class_t
+        for j in window:
+            if j != i and self.dead[j]:
+                nc_view[j] = self._queue_classes(self.workers[j])
+        # Shared re-pricing (steal.weighted_overlay — ONE implementation for
+        # both planes): tombstones are frozen at their ~0-speed price.
+        frozen = np.fromiter(
+            (self.dead[j] for j in range(len(n_view))), dtype=bool,
+            count=len(n_view),
+        )
+        n_w, t_w, queued_w, unit, qtasks, rel = weighted_overlay(
+            n_view, t_view, queued, nc_view, tc_view, frozen=frozen
+        )
+        # n_view stays the COUNT estimate (n_w is a fresh array): the Fig. 3b
+        # reconciliation writes the board's count-denominated n from it.
+        return n_w, t_w, queued_w, window, unit, qtasks, rel, n_view
 
     def _make_view(self, i: int) -> PolicyView:
         w = self.workers[i]
+        unit = qtasks = rel = ntasks = None
         if self.info is not None:
-            n_view, t_view, queued, window = self._ring_view(i)
+            n_view, t_view, queued, window, unit, qtasks, rel, ntasks = (
+                self._ring_view(i)
+            )
             num_workers = len(n_view)  # the board epoch's ring size
         else:
             n_view = t_view = queued = None
@@ -787,6 +917,10 @@ class WorkerPool:
             n_view=n_view,
             t_view=t_view,
             queued=queued,
+            unit=unit,
+            qtasks=qtasks,
+            rel=rel,
+            ntasks=ntasks,
         )
 
     def _policy_boundary(self, i: int) -> bool:
@@ -809,7 +943,20 @@ class WorkerPool:
                     break
                 time.sleep(min(remaining, 1e-3))
         victim = self.workers[plan.victim]
-        result = victim.deque.steal(plan.amount)  # Fig. 3b protocol
+        if self.weighted and plan.work > 0.0 and view.rel is not None:
+            # Work-greedy loot (DESIGN.md §Work-weighted stealing): claim
+            # tail slots until the plan's work target is covered, pricing
+            # each candidate by its class — the count `amount` is only the
+            # mean-unit estimate and over/under-shoots under tail skew.
+            rel = view.rel
+            result = victim.deque.steal_by_work(
+                plan.work,
+                lambda task: float(rel[self._task_class(task)]),
+                max_tasks=max(plan.amount, int(math.ceil(2.0 * plan.work))),
+                take_first=view.idle,  # idle thieves stay work-conserving
+            )
+        else:
+            result = victim.deque.steal(plan.amount)  # Fig. 3b protocol
         # The get-accumulate snapshot tells the thief the victim's exact
         # remaining queue; fold it into the information vector (Table 1).
         observed_left = max(result.observed_tail - result.observed_head, 0)
@@ -824,9 +971,15 @@ class WorkerPool:
         # left a drained victim at its stale full n and under-counted a
         # loaded one.)
         if self.info is not None and not self.open_arrival:
+            # COUNT units throughout: the board's n is count-denominated, so
+            # in weighted mode the executed estimate must come from the
+            # pre-overlay count vectors (n_w - queued_w is executed work in
+            # reference units — writing that into n would double-scale on
+            # the next view's re-pricing).
+            base_n = view.ntasks if view.ntasks is not None else view.n_view
+            base_q = view.qtasks if view.qtasks is not None else view.queued
             done_est = max(
-                float(view.n_view[plan.victim]) - float(view.queued[plan.victim]),
-                0.0,
+                float(base_n[plan.victim]) - float(base_q[plan.victim]), 0.0
             )
         if not result:
             self._failed_steals += 1
@@ -837,9 +990,15 @@ class WorkerPool:
                     corrected_n = float(observed_left)
                 else:
                     corrected_n = done_est + float(observed_left)
+                nc_corr = None
+                if self.weighted and observed_left == 0:
+                    # The snapshot proved the queue empty: the stale class
+                    # profile goes with it.
+                    nc_corr = np.zeros(self.num_classes, dtype=np.float64)
                 self.info.record_remote(
                     i, plan.victim, float(corrected_n),
                     self.info.t[i, plan.victim],
+                    nc_j=nc_corr,
                 )
             self.policy.on_steal_result(view, plan, 0, left)
             return False
@@ -855,11 +1014,22 @@ class WorkerPool:
                 # moved queued tasks, the victim's executed count is
                 # untouched, and `left` is the observed remaining queue.
                 victim_n_new = done_est + float(left)
+            nc_corr = None
+            if self.weighted:
+                # The thief saw the classes of the loot first-hand: subtract
+                # them from the victim's published profile (clamped — the
+                # profile may have been stale already).
+                nc_corr = np.maximum(
+                    self.info.nc[i, plan.victim]
+                    - self._class_counts(result.tasks),
+                    0.0,
+                )
             # Table 1 row 2: thief refreshes its own and the victim's cells.
             self._update_info(i)
             self.info.record_remote(
                 i, plan.victim, float(victim_n_new),
                 self.info.t[i, plan.victim],
+                nc_j=nc_corr,
             )
         self.policy.on_steal_result(view, plan, got, left)
         return True

@@ -170,6 +170,11 @@ class TaskDeque:
         self.steals_suffered = 0
         self.corrections = 0
         self._telemetry_lock = threading.Lock()
+        # Content-change hint for accounting caches (work-weighted queue
+        # composition): bumped on every successful pop/push/steal.  Plain
+        # int — a racy lost increment merely risks one stale accounting
+        # read, which the next publish corrects.
+        self.mutations = 0
 
     # ------------------------------------------------------------------ owner
     def get_task(self):
@@ -192,6 +197,7 @@ class TaskDeque:
                 if not self.headtail.compare_exchange(word, pack(head + 1, tail)):
                     continue  # a thief moved the tail under us: retry
                 task = self._slots.pop(head)
+                self.mutations += 1
             finally:
                 self.body.release_shared()
             return task
@@ -213,6 +219,7 @@ class TaskDeque:
                     break
             for off, task in enumerate(tasks):
                 self._slots[new_head + off] = task
+            self.mutations += 1
         finally:
             self.body.release_exclusive()
 
@@ -250,13 +257,114 @@ class TaskDeque:
         self.body.acquire_shared()
         try:
             stolen = [self._slots.pop(tail - take + off) for off in range(take)]
+            self.mutations += 1
         finally:
             self.body.release_shared()
         with self._telemetry_lock:
             self.steals_suffered += 1
         return StealResult(stolen, k, take, corrected, head, tail)
 
+    def steal_by_work(
+        self, work_target: float, work_of, max_tasks: int,
+        take_first: bool = False,
+    ) -> StealResult:
+        """Work-greedy theft (DESIGN.md §Work-weighted stealing): claim tail
+        slots ONE Fig. 3b get-accumulate at a time, pricing each candidate
+        with ``work_of(task)``, until the cumulative stolen work is nearest
+        ``work_target``.
+
+        Each candidate is *peeked* (an extra one-sided Get under the shared
+        body lock) before it is claimed: a task whose work would overshoot
+        the target by more than the remaining deficit is refused — a slow
+        thief planning to take one light-task's worth must never ingest a
+        heavy task 8x its fair share, which is exactly the failure mode of
+        counting loot by head-count.  With homogeneous work (``work_of`` ≡ 1
+        and an integer target) this takes exactly ``work_target`` tasks —
+        the count-based degenerate case.
+
+        ``take_first``: accept the first candidate even when it overshoots —
+        an IDLE thief executing an approved plan must stay work-conserving
+        (the victim is loaded, the thief has nothing; leaving the task to
+        rot because its class is heavier than the victim's stale mean unit
+        is a latency disaster under open arrivals).  Refusal still applies
+        from the second candidate on.
+
+        The returned ``StealResult`` synthesizes a single-op pre-image so
+        ``observed_tail - observed_head - len(tasks)`` is the queue actually
+        left behind, matching the contract of :meth:`steal`.
+        """
+        taken: list = []
+        cum = 0.0
+        corrected = False
+        claimed_any = False
+        left_after = 0
+        while len(taken) < max_tasks:
+            nxt = self.peek_tail()
+            if nxt is None:
+                break
+            w = max(float(work_of(nxt)), 0.0)
+            if cum + w - work_target > work_target - cum + 1e-12 and not (
+                take_first and not taken
+            ):
+                break  # overshoot beyond the deficit: worse than stopping
+            r = self.steal(1)
+            corrected |= r.corrected
+            claimed_any = True
+            left_after = max(r.observed_tail - r.observed_head, 0) - len(r.tasks)
+            if not r.tasks:
+                break
+            task = r.tasks[0]  # may differ from the peek under thief races
+            taken.append(task)
+            cum += max(float(work_of(task)), 0.0)
+        got = len(taken)
+        if not claimed_any:
+            head, tail = self.snapshot()
+            return StealResult([], 0, 0, False, head, tail)
+        left_after = max(left_after, 0)
+        return StealResult(
+            taken, max_tasks, got, corrected, 0, left_after + got
+        )
+
     # ------------------------------------------------------------- inspection
+    def peek_tail(self):
+        """One-sided read of the task a thief would claim next (the slot at
+        ``tail - 1``) WITHOUT claiming it — the pricing Get of
+        :meth:`steal_by_work`.  Returns None when the deque is empty or the
+        slot was concurrently claimed; purely advisory (a racing thief may
+        take the peeked slot first)."""
+        self.body.acquire_shared()
+        try:
+            head, tail = unpack(self.headtail.load())
+            if tail <= head:
+                return None
+            missing = object()
+            task = self._slots.get(tail - 1, missing)
+            return None if task is missing else task
+        finally:
+            self.body.release_shared()
+
+    def snapshot_tasks(self) -> list:
+        """Best-effort copy of the queued payloads in ``[head, tail)``.
+
+        Owner-side accounting read for the work-weighted information vector
+        (the owner prices its own queue composition — DESIGN.md
+        §Work-weighted stealing).  Taken under a shared body lock; a
+        concurrent thief may have claimed tail slots already, so missing
+        slots are skipped — the estimate self-corrects at the next publish.
+        """
+        self.body.acquire_shared()
+        try:
+            head, tail = unpack(self.headtail.load())
+            missing = object()
+            out = []
+            for k in range(head, tail):
+                task = self._slots.get(k, missing)
+                if task is not missing:
+                    out.append(task)
+            return out
+        finally:
+            self.body.release_shared()
+
     def __len__(self) -> int:
         head, tail = unpack(self.headtail.load())
         return max(tail - head, 0)

@@ -49,14 +49,26 @@ class RingInfo:
     board and per-cell versions stay monotone across growth.
     """
 
-    def __init__(self, num_procs: int, radius: int) -> None:
+    def __init__(
+        self, num_procs: int, radius: int, num_classes: int = 1
+    ) -> None:
         if num_procs < 1:
             raise ValueError("num_procs must be >= 1")
+        if num_classes < 1:
+            raise ValueError("num_classes must be >= 1")
         self.P = num_procs
         self.R = int(max(0, min(radius, num_procs // 2)))
+        self.C = num_classes
         # board[i, j] = what process i currently believes about process j.
         self.n = np.zeros((self.P, self.P), dtype=np.float64)
         self.t = np.full((self.P, self.P), np.nan, dtype=np.float64)
+        # Work-weighted extension (DESIGN.md §Work-weighted stealing): each
+        # cell also carries the per-class queue counts nc[c] and per-class
+        # EWMA runtime estimates t̂[c] of the subject process.  The payload
+        # rides the SAME per-cell version counters — one Put moves the whole
+        # cell, so (n, t, nc, tc) stay mutually consistent per §2.1 writer.
+        self.nc = np.zeros((self.P, self.P, self.C), dtype=np.float64)
+        self.tc = np.full((self.P, self.P, self.C), np.nan, dtype=np.float64)
         self.version = np.zeros((self.P, self.P), dtype=np.int64)
         # last_sent[d][i, j]: newest version of cell j that i pushed toward
         # direction d (0 = to left neighbour i-1, 1 = to right neighbour i+1).
@@ -90,13 +102,18 @@ class RingInfo:
             old = self.P
             n = np.zeros((num_procs, num_procs), dtype=np.float64)
             t = np.full((num_procs, num_procs), np.nan, dtype=np.float64)
+            nc = np.zeros((num_procs, num_procs, self.C), dtype=np.float64)
+            tc = np.full((num_procs, num_procs, self.C), np.nan, dtype=np.float64)
             version = np.zeros((num_procs, num_procs), dtype=np.int64)
             last_sent = np.zeros((2, num_procs, num_procs), dtype=np.int64)
             n[:old, :old] = self.n
             t[:old, :old] = self.t
+            nc[:old, :old] = self.nc
+            tc[:old, :old] = self.tc
             version[:old, :old] = self.version
             last_sent[:, :old, :old] = self.last_sent
             self.n, self.t = n, t
+            self.nc, self.tc = nc, tc
             self.version, self.last_sent = version, last_sent
             self.P, self.R = num_procs, new_r
 
@@ -109,29 +126,63 @@ class RingInfo:
         with self._epoch:
             self.n[:, k] = 0.0
             self.t[:, k] = np.nan
+            self.nc[:, k, :] = 0.0
+            self.tc[:, k, :] = np.nan
             self.version[:, k] += 1
 
     # ------------------------------------------------------------ local write
-    def update_local(self, i: int, n_i: float, t_i: float) -> None:
-        """Alg. 1 lines 2/11: p_i refreshes its own cell (Table 1 row 1)."""
+    def update_local(
+        self,
+        i: int,
+        n_i: float,
+        t_i: float,
+        nc_i: np.ndarray | None = None,
+        tc_i: np.ndarray | None = None,
+    ) -> None:
+        """Alg. 1 lines 2/11: p_i refreshes its own cell (Table 1 row 1).
+
+        ``nc_i``/``tc_i``: optional per-class queue counts and EWMA runtime
+        estimates (work-weighted mode); they share the cell's version, so a
+        class-profile change alone is enough to mark the cell dirty.
+        """
         with self._epoch:
-            if (self.n[i, i] != n_i) or not _feq(self.t[i, i], t_i):
+            changed = (self.n[i, i] != n_i) or not _feq(self.t[i, i], t_i)
+            if nc_i is not None and not np.array_equal(self.nc[i, i], nc_i):
+                self.nc[i, i] = nc_i
+                changed = True
+            if tc_i is not None and not np.array_equal(
+                self.tc[i, i], tc_i, equal_nan=True
+            ):
+                self.tc[i, i] = tc_i
+                changed = True
+            if changed:
                 self.n[i, i] = n_i
                 self.t[i, i] = t_i
                 self.version[i, i] += 1
 
-    def record_remote(self, i: int, j: int, n_j: float, t_j: float) -> None:
+    def record_remote(
+        self,
+        i: int,
+        j: int,
+        n_j: float,
+        t_j: float,
+        nc_j: np.ndarray | None = None,
+    ) -> None:
         """Thief-side knowledge injection (Table 1 rows 2-3).
 
         After (attempting) a steal, the thief p_i learned the victim's new
         queue state first-hand (it moved the tail itself), so it writes the
         victim's cell in its OWN vector and bumps the version so the news
-        propagates outward from the thief.
+        propagates outward from the thief.  ``nc_j``: the victim's corrected
+        per-class queue profile (the thief saw the classes of the loot it
+        took); the victim's t̂[c] estimates are NOT the thief's to correct.
         """
         with self._epoch:
             self.n[i, j] = n_j
             if t_j == t_j:  # not NaN
                 self.t[i, j] = t_j
+            if nc_j is not None:
+                self.nc[i, j] = nc_j
             self.version[i, j] += 1
 
     # ------------------------------------------------------- ring propagation
@@ -179,6 +230,8 @@ class RingInfo:
             if ver > self.version[dst, j]:
                 self.n[dst, j] = self.n[src, j]
                 self.t[dst, j] = self.t[src, j]
+                self.nc[dst, j] = self.nc[src, j]
+                self.tc[dst, j] = self.tc[src, j]
                 self.version[dst, j] = ver
             self.puts += 1
             return 1
@@ -209,9 +262,23 @@ class RingInfo:
         """``view(i)`` plus the raw-t row and radius window, all from ONE
         board epoch — a concurrent ``grow`` can never hand a caller a window
         sized for a bigger ring than the rows it just copied."""
+        n, t, raw_t, window, _nc, _tc = self.view_window_classes(i, default_t)
+        return n, t, raw_t, window
+
+    def view_window_classes(
+        self, i: int, default_t: float | None = None
+    ) -> tuple[
+        np.ndarray, np.ndarray, np.ndarray, list[int], np.ndarray, np.ndarray
+    ]:
+        """``view_window(i)`` plus the (P, C) per-class rows — queue counts
+        ``nc`` and EWMA runtime estimates ``tc`` (NaN = unreported) — all
+        copied under the same board epoch so the work-weighted overlay can
+        never mix ring sizes with the scalar rows."""
         with self._epoch:
             n = self.n[i].copy()
             raw_t = self.t[i].copy()
+            nc = self.nc[i].copy()
+            tc = self.tc[i].copy()
             window = neighborhood(i, self.P, self.R)
         t = raw_t.copy()
         mask = np.isnan(t)
@@ -222,7 +289,7 @@ class RingInfo:
                 known = t[~mask]
                 fill = float(known.mean()) if known.size else 1.0
             t[mask] = fill
-        return n, t, raw_t, window
+        return n, t, raw_t, window, nc, tc
 
     def window(self, i: int) -> list[int]:
         return neighborhood(i, self.P, self.R)

@@ -74,12 +74,18 @@ class StealPlan:
     the thief's deque (LW's leader round-trip).  0.0 means "use the plane's
     default transport cost" (none in the threaded plane, ``steal_latency`` in
     the simulator).
+
+    ``work``: loot target in equivalent reference-class tasks (work-weighted
+    mode, DESIGN.md §Work-weighted stealing) — a weighted substrate then
+    executes the steal greedily by work, ``amount`` acting as the count
+    estimate.  0.0 = count mode: take exactly ``amount`` tasks.
     """
 
     victim: int
     amount: int
     criterion: str = ""
     delay: float = 0.0
+    work: float = 0.0
 
 
 @dataclass
@@ -113,6 +119,23 @@ class PolicyView:
     n_view: np.ndarray | None = None
     t_view: np.ndarray | None = None
     queued: np.ndarray | None = None
+    #: work-weighted overlay (DESIGN.md §Work-weighted stealing): when the
+    #: substrate runs with cost classes, ``n_view``/``queued`` are measured
+    #: in equivalent reference-class tasks, ``unit[j]`` is the mean work per
+    #: queued task at j and ``qtasks[j]`` the actual task-count estimate
+    #: (γ-rounding integrality + the Fig. 3b clamp).  None = count mode —
+    #: the degenerate single-class case, bit-for-bit the old behaviour.
+    unit: np.ndarray | None = None
+    qtasks: np.ndarray | None = None
+    #: pre-overlay n estimates in TASK COUNTS (weighted mode only) — the
+    #: info board's n field is count-denominated, so Fig. 3b reconciliation
+    #: must derive its executed estimate from these, never from the
+    #: work-repriced ``n_view``
+    ntasks: np.ndarray | None = None
+    #: per-class relative costs ``rel[c]`` behind the overlay (weighted mode
+    #: only) — the substrate prices individual loot with it when executing a
+    #: plan greedily by work
+    rel: np.ndarray | None = None
     #: tasks already stolen/granted but still in transit to THIS worker —
     #: nonzero only under the simulator (threaded transfers are synchronous);
     #: one-request-at-a-time policies gate on it to avoid duplicate requests
@@ -192,6 +215,13 @@ class A2WSPolicy(SchedPolicy):
     idle thief whose view went stale fires one speculative single-task steal
     per idle tick (DESIGN.md §Open-arrival); the get-accumulate doubles as a
     ground-truth depth read either way.
+
+    Work-weighted when the substrate provides the overlay (``view.unit`` /
+    ``view.qtasks`` non-None): Eq. 5, victim selection and γ-rounding then
+    price queues in estimated work-seconds rather than task counts
+    (DESIGN.md §Work-weighted stealing).  CTWS/LW/random deliberately stay
+    count-based — they are the paper's baselines, and none of them consults
+    the information ring the class estimates travel on.
     """
 
     name = "a2ws"
@@ -209,10 +239,14 @@ class A2WSPolicy(SchedPolicy):
         decision = plan_steal(
             view.rng, view.worker, view.n_view, view.t_view, view.queued,
             view.radius, idle=near_idle, open_arrival=view.open_arrival,
+            unit=view.unit, qtasks=view.qtasks,
         )
         if decision is None:
             return self._probe(view)
-        return StealPlan(decision.victim, decision.amount, decision.criterion)
+        return StealPlan(
+            decision.victim, decision.amount, decision.criterion,
+            work=decision.work,
+        )
 
     def on_worker_join(self, worker: int, now: float) -> None:
         """Nothing to grow: A2WS decision state lives in the information

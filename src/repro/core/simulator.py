@@ -53,7 +53,7 @@ import numpy as np
 
 from .a2ws import latency_percentiles
 from .policy import PolicyView, SchedPolicy, make_policy
-from .steal import neighborhood
+from .steal import neighborhood, weighted_overlay
 
 __all__ = [
     "SimConfig",
@@ -145,6 +145,25 @@ class SimConfig:
     #          nodes, and its ring position is tombstoned.
     joins: tuple[tuple[float, float], ...] = ()
     retires: tuple[tuple[float, int], ...] = ()
+    # --- work-weighted cost classes (DESIGN.md §Work-weighted stealing) ---
+    # class_cost:  per-class task-duration multipliers (variable-cost
+    #              workloads, e.g. bimodal seismic shots: (1.0, 8.0)).
+    #              () = the paper's homogeneous tasks — nothing changes,
+    #              not even the rng stream.
+    # class_probs: workload mix (must sum to 1; () = uniform over classes).
+    # class_trace: explicit per-task class assignment (len == num_tasks;
+    #              overrides class_probs) — clustered-cost workloads, e.g. a
+    #              deep-shot survey line landing in one partition block.
+    # weighted:    publish per-class queue counts + EWMA t̂[c] through the
+    #              info plane so ring policies price queues in work-seconds;
+    #              False keeps the info plane count-based while tasks still
+    #              COST class_cost — the ablation baseline.
+    # ewma_alpha:  smoothing of the per-class runtime estimates.
+    class_cost: tuple[float, ...] = ()
+    class_probs: tuple[float, ...] = ()
+    class_trace: tuple[int, ...] = ()
+    weighted: bool = True
+    ewma_alpha: float = 0.25
     # --- CTWS ---
     token_base: float = 2e-3
     token_per_node: float = 2.5e-4
@@ -199,23 +218,51 @@ class SimResult:
 
 
 class _History:
-    """Append-only (time, n, t) history per node for delayed views."""
+    """Append-only (time, n, t[, nc, tc]) history per node for delayed views.
 
-    __slots__ = ("times", "ns", "ts")
+    ``num_classes > 0`` additionally records the per-class queue counts and
+    EWMA runtime estimates published at each report (work-weighted mode) —
+    a remote reader sees the class profile from the SAME report as the
+    scalars, i.e. one consistent ring cell."""
 
-    def __init__(self) -> None:
+    __slots__ = ("times", "ns", "ts", "ncs", "tcs")
+
+    def __init__(self, num_classes: int = 0) -> None:
         self.times: list[float] = [0.0]
         self.ns: list[float] = [0.0]
         self.ts: list[float] = [float("nan")]
+        if num_classes > 0:
+            self.ncs: list[np.ndarray] | None = [np.zeros(num_classes)]
+            self.tcs: list[np.ndarray] | None = [
+                np.full(num_classes, float("nan"))
+            ]
+        else:
+            self.ncs = self.tcs = None
 
-    def append(self, time: float, n: float, t: float) -> None:
+    def append(
+        self,
+        time: float,
+        n: float,
+        t: float,
+        nc: np.ndarray | None = None,
+        tc: np.ndarray | None = None,
+    ) -> None:
         self.times.append(time)
         self.ns.append(n)
         self.ts.append(t)
+        if self.ncs is not None:
+            self.ncs.append(self.ncs[-1] if nc is None else nc)
+            self.tcs.append(self.tcs[-1] if tc is None else tc)
 
     def at(self, time: float) -> tuple[float, float]:
         k = bisect_right(self.times, time) - 1
         return self.ns[k], self.ts[k]
+
+    def at_classes(
+        self, time: float
+    ) -> tuple[float, float, np.ndarray, np.ndarray]:
+        k = bisect_right(self.times, time) - 1
+        return self.ns[k], self.ts[k], self.ncs[k], self.tcs[k]
 
 
 def _ring_dist(i: int, j: int, p: int) -> int:
@@ -290,34 +337,91 @@ def simulate(policy: str | SchedPolicy, cfg: SimConfig) -> SimResult:
     open_mode = cfg.arrival != "closed"
     uses_ring = pol.uses_ring
 
-    # Per-node queues hold ARRIVAL STAMPS (the simulator's task identity —
-    # enough for latency accounting).  Head = left (owner pops, new arrivals
-    # land), tail = right (thieves claim the oldest waiters), matching the
-    # TaskDeque discipline of the threaded runtime.  Initial placement is the
-    # policy's (static block split by default, the central queue for LW).
+    # Work-weighted cost classes: every task is a ``(arrival, class)`` tuple
+    # (class 0 when the workload is homogeneous — the legacy float stamp
+    # generalised, same rng stream when class_cost is unset).  ``winfo``
+    # gates the per-class INFO plane: tasks cost class_cost either way, the
+    # flag only decides whether ring policies get to see the classes.
+    costs = np.asarray(cfg.class_cost or (1.0,), np.float64)
+    ncls = len(costs)
+    has_classes = bool(cfg.class_cost)
+    # (ncls > 1: a single class carries no composition information and must
+    # stay bit-for-bit count-based — the degenerate-case guarantee.)
+    winfo = cfg.weighted and has_classes and ncls > 1 and uses_ring
+
+    # Per-node queues hold (arrival stamp, class) task tuples — stamps are
+    # the simulator's task identity (enough for latency accounting).
+    # Head = left (owner pops, new arrivals land), tail = right (thieves
+    # claim the oldest waiters), matching the TaskDeque discipline of the
+    # threaded runtime.  Initial placement is the policy's (static block
+    # split by default, the central queue for LW).
     queues: list[_deque] = [_deque() for _ in range(pmax)]
     if open_mode:
         arrivals = _arrival_times(cfg, rng)
         total_tasks = len(arrivals)
     else:
-        for i, part in enumerate(pol.partition([0.0] * cfg.num_tasks, p0)):
-            queues[i].extend(part)
         arrivals = np.empty(0)
         total_tasks = cfg.num_tasks
+    if has_classes:
+        if cfg.class_trace:
+            if len(cfg.class_trace) != total_tasks:
+                raise ValueError("class_trace must assign every task a class")
+            task_cls = np.asarray(cfg.class_trace, np.int64)
+            if task_cls.min() < 0 or task_cls.max() >= ncls:
+                raise ValueError("class_trace entries outside [0, num_classes)")
+        else:
+            if cfg.class_probs:
+                if len(cfg.class_probs) != ncls:
+                    raise ValueError("class_probs must match class_cost length")
+                probs = np.asarray(cfg.class_probs, np.float64)
+            else:
+                probs = np.full(ncls, 1.0 / ncls)
+            task_cls = rng.choice(ncls, size=total_tasks, p=probs)
+    else:
+        task_cls = np.zeros(total_tasks, np.int64)
+    if not open_mode:
+        tasks = [(0.0, int(task_cls[k])) for k in range(total_tasks)]
+        for i, part in enumerate(pol.partition(tasks, p0)):
+            queues[i].extend(part)
 
     def depth(i: int) -> int:
         return len(queues[i])
 
+    # Per-queue class counts, maintained INCREMENTALLY at every queue
+    # mutation (the O(depth) rescan per published report would make weighted
+    # open-arrival runs quadratic in backlog — the threaded plane caches the
+    # same scan behind a deque-mutation key).
+    qcls = np.zeros((pmax, ncls), np.float64)
+    for i, q in enumerate(queues):
+        for task in q:
+            qcls[i, task[1]] += 1.0
+
+    def q_pop(i: int, left: bool = False):
+        task = queues[i].popleft() if left else queues[i].pop()
+        qcls[i, task[1]] -= 1.0
+        return task
+
+    def q_classes(i: int) -> np.ndarray:
+        return qcls[i].copy()
+
     executed = np.zeros(pmax, np.int64)
     runtime_sum = np.zeros(pmax, np.float64)
     busy = np.zeros(pmax, np.float64)
-    hist = [_History() for _ in range(pmax)]
+    class_t = np.full((pmax, ncls), np.nan)  # per-class EWMA runtimes
+    hist = [_History(ncls if winfo else 0) for _ in range(pmax)]
+
+    def cls_payload(i: int) -> dict:
+        """Per-class cell payload published alongside every (n, t) report."""
+        if not winfo:
+            return {}
+        return {"nc": q_classes(i), "tc": class_t[i].copy()}
+
     if uses_ring:
         for i in range(p0):
-            hist[i].append(0.0, float(depth(i)), float("nan"))
+            hist[i].append(0.0, float(depth(i)), float("nan"), **cls_payload(i))
     cur_t = np.full(pmax, np.nan)  # latest own estimate (for relay pacing)
     pending_dur = np.zeros(pmax, np.float64)  # duration of the task in flight
-    pending_arr = np.zeros(pmax, np.float64)  # arrival stamp of that task
+    pending_task: list = [None] * pmax  # the (arrival, class) task in flight
     idle_since = np.full(pmax, -1.0)
     in_transit = np.zeros(pmax, np.int64)  # loot scheduled but not yet received
     arrived = 0 if open_mode else total_tasks
@@ -363,8 +467,9 @@ def simulate(policy: str | SchedPolicy, cfg: SimConfig) -> SimResult:
             idle_since[i] = now
             push_event(now + cfg.retry_interval, "retry", i, 0)
             return
-        pending_arr[i] = queues[i].popleft()
-        dur = cfg.task_cost / speeds[i]
+        task = q_pop(i, left=True)
+        pending_task[i] = task
+        dur = cfg.task_cost * float(costs[task[1]]) / speeds[i]
         if cfg.noise:
             dur *= float(rng.lognormal(0.0, cfg.noise))
         dur *= pol.task_multiplier(i)  # LW: co-located leader slows worker 0
@@ -381,11 +486,20 @@ def simulate(policy: str | SchedPolicy, cfg: SimConfig) -> SimResult:
             return runtime_sum[i] / executed[i]
         return max(now - born[i], 1e-9)  # elapsed since the node joined
 
-    def ring_view(i: int, now: float) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
-        """Delayed (n, t, queued-estimate) views of the window around i."""
+    def ring_view(
+        i: int, now: float
+    ) -> tuple[
+        np.ndarray, np.ndarray, np.ndarray,
+        np.ndarray | None, np.ndarray | None, np.ndarray | None,
+    ]:
+        """Delayed (n, t, queued-estimate) views of the window around i,
+        plus the ``(unit, qtasks, rel)`` work-weighted overlay (None in
+        count mode) — the simulator's mirror of ``WorkerPool._ring_view``."""
         n_view = np.zeros(p)
         t_view = np.ones(p)
         queued = np.zeros(p)
+        nc_view = np.zeros((p, ncls)) if winfo else None
+        tc_view = np.full((p, ncls), np.nan) if winfo else None
         # Relay pacing: per-hop delay = link latency + half the relay's poll
         # interval (relays forward mid-task, §2.1 — capped by poll period,
         # never by the 60 s task duration).
@@ -398,6 +512,11 @@ def simulate(policy: str | SchedPolicy, cfg: SimConfig) -> SimResult:
                 n_view[j] = reported_n(i)
                 t_view[j] = _own_t(i, now)
                 queued[j] = depth(i)
+                if winfo:
+                    # Own row is ground truth: actual queue composition +
+                    # own EWMA estimates (mirrors the threaded plane).
+                    nc_view[j] = q_classes(i)
+                    tc_view[j] = class_t[i]
                 continue
             if not alive_sim[j]:
                 # Tombstoned member: frozen cells; count the orphaned queue
@@ -405,6 +524,8 @@ def simulate(policy: str | SchedPolicy, cfg: SimConfig) -> SimResult:
                 queued[j] = depth(j)
                 t_view[j] = 1e12
                 n_view[j] = queued[j] if open_mode else executed[j] + queued[j]
+                if winfo:
+                    nc_view[j] = q_classes(j)  # orphans: ground-truth scan
                 continue
             d = _ring_dist(i, j, p)
             step = 1 if off > 0 else -1
@@ -414,7 +535,12 @@ def simulate(policy: str | SchedPolicy, cfg: SimConfig) -> SimResult:
                 delay += cfg.hop_latency + 0.5 * min(
                     t_relay[relay], cfg.info_poll
                 )
-            n_j, t_j = hist[j].at(max(now - delay, 0.0))
+            if winfo:
+                n_j, t_j, nc_j, tc_j = hist[j].at_classes(max(now - delay, 0.0))
+                nc_view[j] = nc_j
+                tc_view[j] = tc_j
+            else:
+                n_j, t_j = hist[j].at(max(now - delay, 0.0))
             if t_j != t_j:  # no report yet: preemptive wall-time estimate
                 t_j = max(now - born[i], 1e-9)  # the THIEF's elapsed time
             n_view[j] = n_j
@@ -427,11 +553,20 @@ def simulate(policy: str | SchedPolicy, cfg: SimConfig) -> SimResult:
             else:
                 done_est = min(now / max(t_j, 1e-9), n_j)
                 queued[j] = max(n_j - done_est, 0.0)
-        return n_view, t_view, queued
+        if not winfo:
+            return n_view, t_view, queued, None, None, None
+        # ---- work-weighted overlay (DESIGN.md §Work-weighted stealing) ----
+        # steal.weighted_overlay is the ONE shared re-pricing for both
+        # planes; tombstones are frozen at their ~0-speed price.
+        n_w, t_w, queued_w, unit, qtasks, rel = weighted_overlay(
+            n_view, t_view, queued, nc_view, tc_view, frozen=~alive_sim[:p]
+        )
+        return n_w, t_w, queued_w, unit, qtasks, rel
 
     def make_view(i: int, now: float) -> PolicyView:
+        unit = qtasks = rel = None
         if uses_ring:
-            n_view, t_view, queued = ring_view(i, now)
+            n_view, t_view, queued, unit, qtasks, rel = ring_view(i, now)
             window = neighborhood(i, p, radius)
         else:
             n_view = t_view = queued = None
@@ -453,6 +588,9 @@ def simulate(policy: str | SchedPolicy, cfg: SimConfig) -> SimResult:
             n_view=n_view,
             t_view=t_view,
             queued=queued,
+            unit=unit,
+            qtasks=qtasks,
+            rel=rel,
             inflight=lambda: int(in_transit[i]),
         )
 
@@ -467,14 +605,36 @@ def simulate(policy: str | SchedPolicy, cfg: SimConfig) -> SimResult:
             return False
         v = plan.victim
         avail = depth(v)  # get-accumulate ground truth at the victim
-        take = min(plan.amount, avail)
+        if plan.work > 0.0 and view.rel is not None:
+            # Work-greedy loot: pop tail tasks until the plan's work target
+            # is covered, refusing a candidate whose work would overshoot
+            # the target by more than the remaining deficit (mirrors
+            # TaskDeque.steal_by_work in the threaded plane).  The cap
+            # bounds tasks by ~2x the work target, NOT by the count
+            # estimate: a lighter-than-expected tail may take more than
+            # plan.amount tasks to fill the planned work.
+            rel_v = view.rel
+            cap = max(plan.amount, int(np.ceil(2.0 * plan.work)))
+            stamps = []
+            cum = 0.0
+            while queues[v] and len(stamps) < cap:
+                w_next = float(rel_v[queues[v][-1][1]])
+                if cum + w_next - plan.work > plan.work - cum + 1e-12 and not (
+                    view.idle and not stamps  # idle: stay work-conserving
+                ):
+                    break
+                stamps.append(q_pop(v))
+                cum += w_next
+            take = len(stamps)
+        else:
+            take = min(plan.amount, avail)
+            stamps = [q_pop(v) for _ in range(take)]  # tail: oldest waiters
         if take <= 0:
             stats["failed"] += 1
             pol.on_steal_result(view, plan, 0, avail)
             return False
-        stamps = [queues[v].pop() for _ in range(take)]  # tail: oldest waiters
         if uses_ring:
-            hist[v].append(now, reported_n(v), _own_t(v, now))
+            hist[v].append(now, reported_n(v), _own_t(v, now), **cls_payload(v))
         # Transport: policy-priced dispatch (LW leader round-trip) or the
         # plane's default steal cost.
         if plan.delay > 0.0:
@@ -491,8 +651,12 @@ def simulate(policy: str | SchedPolicy, cfg: SimConfig) -> SimResult:
     def land(node: int, stamps, now: float) -> None:
         """Queue stamps head-side on ``node`` and wake it if idle."""
         queues[node].extendleft(stamps)
+        for s in stamps:
+            qcls[node, s[1]] += 1.0
         if uses_ring:
-            hist[node].append(now, reported_n(node), _own_t(node, now))
+            hist[node].append(
+                now, reported_n(node), _own_t(node, now), **cls_payload(node)
+            )
         if idle_since[node] >= 0.0:
             idle_since[node] = -1.0
             start_task(node, now)
@@ -502,8 +666,10 @@ def simulate(policy: str | SchedPolicy, cfg: SimConfig) -> SimResult:
     # ARRIVAL time (policy central queue, else live round-robin) — the ring
     # may have grown or shrunk since the trace was generated.  Membership
     # events are scheduled alongside.
-    for t_arr in arrivals:
-        push_event(float(t_arr), "arrive", -1, float(t_arr))
+    for k, t_arr in enumerate(arrivals):
+        push_event(
+            float(t_arr), "arrive", -1, (float(t_arr), int(task_cls[k]))
+        )
     for k, (t_join, _speed) in enumerate(joins):
         push_event(float(t_join), "join", p0 + k)
     for t_ret, node in cfg.retires:
@@ -528,13 +694,26 @@ def simulate(policy: str | SchedPolicy, cfg: SimConfig) -> SimResult:
             executed[i] += 1
             stats["done"] += 1
             runtime_sum[i] += pending_dur[i]
+            task = pending_task[i]
+            if has_classes:
+                # Owner-side EWMA t̂[c] on completion — same update rule as
+                # WorkerPool._observe_class_time, in virtual time.
+                c = task[1]
+                prev = class_t[i, c]
+                if prev != prev:  # first observation of this class
+                    class_t[i, c] = pending_dur[i]
+                else:
+                    class_t[i, c] = (
+                        cfg.ewma_alpha * pending_dur[i]
+                        + (1.0 - cfg.ewma_alpha) * prev
+                    )
             if open_mode:
-                latencies.append(now - pending_arr[i])
+                latencies.append(now - task[0])
             makespan = max(makespan, now)
             if uses_ring:
                 # Update own info + history (Alg. 1 line 11 + communicate).
                 cur_t[i] = runtime_sum[i] / executed[i]
-                hist[i].append(now, reported_n(i), cur_t[i])
+                hist[i].append(now, reported_n(i), cur_t[i], **cls_payload(i))
             # Smart stealing right after finishing a task (preemptive);
             # a node retired mid-task completes it, then leaves the loop.
             boundary(i, now)
@@ -550,7 +729,7 @@ def simulate(policy: str | SchedPolicy, cfg: SimConfig) -> SimResult:
                     f"arrival at t={now:.3f} but every node has retired; "
                     "fix the churn script (cfg.retires/joins)"
                 )
-            land(target, [float(payload)], now)
+            land(target, [payload], now)
         elif kind == "receive":
             in_transit[i] -= len(payload)
             if not alive_sim[i]:
@@ -597,8 +776,11 @@ def simulate(policy: str | SchedPolicy, cfg: SimConfig) -> SimResult:
             # (the threaded plane's retire_worker(drain=True) semantics).
             stamps = list(queues[i])
             queues[i].clear()
+            qcls[i, :] = 0.0
             if uses_ring:
-                hist[i].append(now, reported_n(i), _own_t(i, now))
+                hist[i].append(
+                    now, reported_n(i), _own_t(i, now), **cls_payload(i)
+                )
             if stamps and not alive_sim[:p].any():
                 raise RuntimeError(
                     f"retiring the last live node at t={now:.3f} with "

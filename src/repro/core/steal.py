@@ -20,6 +20,27 @@ Note on Eq. 6: the paper prints ``U(S) = (n_k + S)/t_k`` but defines speed as
 ``(n_k + S) * t_k``.  We implement the dimensionally-consistent product and
 flag the discrepancy here; every downstream property (γ-rounding minimises the
 pairwise makespan) only makes sense with the product form.
+
+Work-weighted generalisation (DESIGN.md §Work-weighted stealing)
+----------------------------------------------------------------
+Eqs. 2-10 assume homogeneous tasks, so "queue depth" and "queued work" are
+the same number.  Under variable task cost (seismic shots with different
+``nt``/model sizes) every formula here generalises by measuring queues in
+**equivalent reference-class tasks** instead of head counts:
+
+* ``rel[c]``   — relative cost of class c vs the reference class
+                 (:func:`class_relatives`; within one worker the speed
+                 cancels, so its own per-class EWMA ratios estimate it).
+* ``w_j``      — queued work ``Σ_c n_j[c]·rel[c]`` replaces the count.
+* ``unit_j``   — mean work per queued task at j (:func:`queue_units`);
+                 converts an Eq. 5/7 work amount back to an integer TASK
+                 count for the Fig. 3b protocol.
+
+``plan_steal`` takes the work vectors through the SAME ``(n, t, queued)``
+parameters plus ``unit``/``qtasks`` keywords; with one class ``rel ≡ 1``,
+``unit ≡ 1`` and ``qtasks ≡ queued``, every operation multiplies or divides
+by exactly 1.0 — the count-based plan falls out bit-for-bit (property-tested
+in ``tests/test_weighted.py``).
 """
 
 from __future__ import annotations
@@ -42,15 +63,26 @@ __all__ = [
     "victim_weights",
     "select_victim",
     "neighborhood",
+    "class_relatives",
+    "queue_units",
+    "weighted_overlay",
 ]
 
 _EPS = 1e-12
 
 
 def ideal_runtime(n: Sequence[float], t: Sequence[float]) -> float:
-    """Eq. 2: t_ideal = N / T with N = sum(n_j) and T = sum(1/t_j)."""
+    """Eq. 2: t_ideal = N / T with N = sum(n_j) and T = sum(1/t_j).
+
+    Non-finite runtimes (``t̂ = NaN``: a neighbour that has never reported,
+    e.g. at open-arrival boot) poison the harmonic sum ``T``; the guard
+    returns NaN explicitly so callers treat it as "no information" rather
+    than receiving an arbitrary NaN/inf arithmetic artefact.
+    """
     n = np.asarray(n, dtype=np.float64)
     t = np.asarray(t, dtype=np.float64)
+    if not np.isfinite(t).all():
+        return float("nan")
     big_n = float(n.sum())
     big_t = float((1.0 / np.maximum(t, _EPS)).sum())
     return big_n / max(big_t, _EPS)
@@ -79,10 +111,18 @@ def neighborhood(i: int, num_procs: int, radius: int) -> list[int]:
 def steal_rate_radius(
     i: int, n: Sequence[float], t: Sequence[float], radius: int
 ) -> float:
-    """Eq. 5: the steal rate computed only over the radius-R subsystem."""
+    """Eq. 5: the steal rate computed only over the radius-R subsystem.
+
+    Returns NaN when any in-window runtime is non-finite (unreported
+    neighbours at boot) — there is no basis for a fair share, and callers
+    (``plan_steal``) must translate NaN into "no steal" instead of letting
+    it corrupt victim probabilities downstream.
+    """
     n = np.asarray(n, dtype=np.float64)
     t = np.asarray(t, dtype=np.float64)
     idx = neighborhood(i, len(n), radius)
+    if not np.isfinite(t[idx]).all():
+        return float("nan")
     sub_n = float(n[idx].sum())
     sub_t = float((1.0 / np.maximum(t[idx], _EPS)).sum())
     return sub_n / (max(float(t[i]), _EPS) * max(sub_t, _EPS)) - float(n[i])
@@ -114,14 +154,27 @@ def gamma(
 
 
 def round_steal_rate(
-    s: float, n_thief: float, t_thief: float, n_victim: float, t_victim: float
+    s: float,
+    n_thief: float,
+    t_thief: float,
+    n_victim: float,
+    t_victim: float,
+    unit: float = 1.0,
 ) -> int:
-    """Eq. 7: round fractional S to the integer minimising γ (pair makespan)."""
-    lo, hi = math.floor(s), math.ceil(s)
+    """Eq. 7: round fractional S to the integer minimising γ (pair makespan).
+
+    ``unit``: mean work per victim task (work-weighted mode).  ``s`` and the
+    ``n`` arguments are then in work units while the returned amount stays an
+    integer TASK count — γ is evaluated at ``k·unit`` work moved.  The
+    default ``unit=1.0`` multiplies by exactly 1.0 everywhere, so the
+    homogeneous path is unchanged bit-for-bit.
+    """
+    s_tasks = s / max(unit, _EPS)
+    lo, hi = math.floor(s_tasks), math.ceil(s_tasks)
     if lo == hi:
         return int(lo)
-    g_lo = gamma(lo, n_thief, t_thief, n_victim, t_victim)
-    g_hi = gamma(hi, n_thief, t_thief, n_victim, t_victim)
+    g_lo = gamma(lo * unit, n_thief, t_thief, n_victim, t_victim)
+    g_hi = gamma(hi * unit, n_thief, t_thief, n_victim, t_victim)
     return int(lo) if g_lo < g_hi else int(hi)
 
 
@@ -195,13 +248,123 @@ def select_victim(
     return int(rng.choice(cand, p=w)), crit
 
 
+def class_relatives(tc: np.ndarray) -> np.ndarray:
+    """Relative per-class costs ``rel[c]`` from a (P, C) matrix of per-worker
+    per-class EWMA runtimes (NaN = that worker never ran that class).
+
+    Within ONE worker the speed cancels: ``t̂_j[c]/t̂_j[a] = κ[c]/κ[a]``
+    exactly under the separable cost model (duration = class cost / worker
+    speed), so the primary estimator is the mean of own-worker ratios
+    against the anchor class ``a`` (the lowest class anyone reported).
+    Fallback when no worker reported both ``c`` and ``a``: the ratio of
+    pool means (biased by which speeds saw which class, but better than
+    nothing); a class nobody reported prices at 1.0 — the count-based
+    degenerate value, so unknown classes never poison the plan.
+    """
+    tc = np.asarray(tc, dtype=np.float64)
+    if tc.ndim != 2:
+        raise ValueError("tc must be (num_workers, num_classes)")
+    p, c = tc.shape
+    rel = np.ones(c, dtype=np.float64)
+    known = np.isfinite(tc)
+    reported = known.any(axis=0)
+    if not reported.any():
+        return rel
+    # Fully vectorised — this runs on every weighted ring view, a hot path.
+    anchor = int(np.argmax(reported))  # lowest class with any report
+    base = tc[:, anchor]
+    known_a = known[:, anchor]
+    both = known_a[:, None] & known  # (P, C): worker knows anchor AND class
+    ratios = np.divide(
+        tc, base[:, None], out=np.ones_like(tc), where=both
+    )
+    n_both = both.sum(axis=0)
+    with np.errstate(invalid="ignore"):
+        rel_ratio = np.where(both, ratios, 0.0).sum(axis=0) / n_both
+    # Pool-mean fallback for classes no worker reported alongside the anchor.
+    col_cnt = known.sum(axis=0)
+    with np.errstate(invalid="ignore"):
+        col_mean = np.where(known, tc, 0.0).sum(axis=0) / col_cnt
+    anchor_mean = col_mean[anchor]
+    use_ratio = n_both > 0
+    use_pool = (~use_ratio) & reported & (anchor_mean > 0.0)
+    rel = np.where(use_ratio, rel_ratio, rel)
+    rel = np.where(use_pool, col_mean / max(anchor_mean, _EPS), rel)
+    rel[~reported] = 1.0
+    rel[anchor] = 1.0
+    return np.maximum(rel, _EPS)
+
+
+def queue_units(nc: np.ndarray, rel: np.ndarray) -> np.ndarray:
+    """Mean work per queued task, per worker: ``unit_j = Σ_c nc_j[c]·rel[c]
+    / Σ_c nc_j[c]`` from a (P, C) matrix of per-class queue counts.  Workers
+    with no class information (empty or unreported queue) price at 1.0 —
+    the count-based degenerate value."""
+    nc = np.asarray(nc, dtype=np.float64)
+    rel = np.asarray(rel, dtype=np.float64)
+    tot = nc.sum(axis=1)
+    work = nc @ rel
+    return np.where(tot > 0.0, work / np.maximum(tot, _EPS), 1.0)
+
+
+def weighted_overlay(
+    n: np.ndarray,
+    t: np.ndarray,
+    queued: np.ndarray,
+    nc: np.ndarray,
+    tc: np.ndarray,
+    frozen: np.ndarray | None = None,
+) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """The work-weighted re-pricing shared by BOTH planes (DESIGN.md
+    §Work-weighted stealing): from count-denominated view rows ``(n, t,
+    queued)`` and the per-class board rows ``(nc, tc)``, derive
+
+    * ``rel``/``unit`` — class relatives and mean work per queued task,
+    * ``t_w``        — seconds per REFERENCE task (``t̂[c]/rel[c]`` mean;
+      the per-task mean conflates speed with queue mix).  Rows with no
+      class report, and rows masked by ``frozen`` (tombstones priced at
+      ~0 speed), keep their scalar estimate,
+    * ``queued_w``/``n_w`` — queue and total in equivalent reference-class
+      tasks (executed history converts by ``t/t_w``),
+    * ``qtasks``     — the original count estimates (integrality guards and
+      the Fig. 3b clamp).
+
+    Returns ``(n_w, t_w, queued_w, unit, qtasks, rel)``.  One
+    implementation on purpose: the threaded runtime and the simulator must
+    price identically or cross-plane conformance is meaningless.
+    """
+    rel = class_relatives(tc)
+    unit = queue_units(nc, rel)
+    with np.errstate(invalid="ignore"):
+        ref_t = tc / rel
+    finite = np.isfinite(ref_t)
+    rows = finite.any(axis=1)
+    if frozen is not None:
+        rows &= ~np.asarray(frozen, dtype=bool)
+    t_w = t.copy()
+    for j in np.nonzero(rows)[0]:
+        t_w[j] = float(ref_t[j][finite[j]].mean())
+    qtasks = queued
+    queued_w = queued * unit
+    exec_est = np.maximum(n - queued, 0.0)
+    n_w = exec_est * (t / np.maximum(t_w, 1e-12)) + queued_w
+    return n_w, t_w, queued_w, unit, qtasks, rel
+
+
 @dataclass(frozen=True)
 class StealDecision:
-    """A fully-resolved steal: victim and integer task count."""
+    """A fully-resolved steal: victim and integer task count.
+
+    ``work``: the plan's loot target in equivalent reference-class tasks
+    (``amount × unit_victim``) — 0.0 in count mode.  A weighted substrate
+    executes the steal greedily by work (``TaskDeque.steal_by_work``), so
+    the amount actually moved tracks the planned work-seconds even when the
+    victim's tail composition differs from its mean unit."""
 
     victim: int
     amount: int
     criterion: str
+    work: float = 0.0
 
 
 def tail_steal_amount(
@@ -211,6 +374,8 @@ def tail_steal_amount(
     t_victim: float,
     *,
     open_arrival: bool = False,
+    unit_victim: float = 1.0,
+    thief_tasks: float | None = None,
 ) -> int:
     """γ-optimal steal count on REMAINING work (the §2.2 'final stages' rule).
 
@@ -229,23 +394,40 @@ def tail_steal_amount(
     per-task latency loss.  An idle (q_i = 0) thief therefore accepts ties
     (k ≥ 1 whenever γ(k) ≤ γ(0)), which is what keeps freshly injected tasks
     from being stranded on a busy worker's deque.
+
+    Work-weighted mode: ``q_victim`` stays the victim's TASK count while
+    ``q_thief`` is the thief's queued WORK and ``unit_victim`` the mean work
+    per victim task, so γ compares drain times of heterogeneous queues but
+    ``k`` remains an integer task count for the Fig. 3b protocol.
+    ``thief_tasks`` is the thief's task count for the idle tie rule
+    (defaults to ``q_thief`` — identical in the homogeneous case).  Any
+    non-finite input means "no information": return 0 (no steal) instead of
+    propagating NaN into ``int()``.
     """
+    if not all(
+        math.isfinite(v) for v in (q_thief, t_thief, q_victim, t_victim)
+    ):
+        return 0
     if q_victim < 1.0:
         return 0
-    k_star = (q_victim * t_victim - q_thief * t_thief) / max(
-        t_thief + t_victim, _EPS
+    u = max(unit_victim, _EPS)
+    if thief_tasks is None:
+        thief_tasks = q_thief
+    w_victim = q_victim * u
+    k_star = (w_victim * t_victim - q_thief * t_thief) / max(
+        u * (t_thief + t_victim), _EPS
     )
-    best_k, best_g = 0, max(q_victim * t_victim, q_thief * t_thief)
+    best_k, best_g = 0, max(w_victim * t_victim, q_thief * t_thief)
     for k in {math.floor(k_star), math.ceil(k_star), 1}:
         k = int(min(max(k, 0), q_victim))
-        g = max((q_victim - k) * t_victim, (q_thief + k) * t_thief)
+        g = max((w_victim - k * u) * t_victim, (q_thief + k * u) * t_thief)
         if g < best_g - 1e-12 or (g == best_g and k < best_k):
             best_k, best_g = k, g
-    if open_arrival and best_k == 0 and q_thief < 1.0:
+    if open_arrival and best_k == 0 and thief_tasks < 1.0:
         # Accept a tie: one task moves to the idle thief if that does not
         # strictly worsen the pair bound (it starts immediately instead of
         # queueing behind the victim's in-flight task).
-        g1 = max((q_victim - 1.0) * t_victim, (q_thief + 1.0) * t_thief)
+        g1 = max((w_victim - u) * t_victim, (q_thief + u) * t_thief)
         if g1 <= best_g + 1e-12:
             return 1
     return best_k
@@ -260,6 +442,9 @@ def plan_steal(
     radius: int,
     idle: bool = False,
     open_arrival: bool = False,
+    *,
+    unit: Sequence[float] | None = None,
+    qtasks: Sequence[float] | None = None,
 ) -> StealDecision | None:
     """End-to-end smart-stealing decision for thief ``i`` (Alg. 1 lines 4-6).
 
@@ -284,17 +469,36 @@ def plan_steal(
     must then pass reported depths via ``queued`` (no elapsed-time
     extrapolation — depth both drains and refills under arrivals) and the
     tail rule runs in its latency-oriented tie-accepting form.
+
+    ``unit``/``qtasks``: work-weighted mode (DESIGN.md §Work-weighted
+    stealing).  ``n``/``queued`` are then measured in equivalent
+    reference-class tasks (``w_j = Σ_c n_j[c]·rel[c]``), ``unit[j]`` is the
+    mean work per queued task at j (converts Eq. 5/7 work amounts back to
+    integer task counts) and ``qtasks[j]`` the actual queued task count
+    (integrality guards and the Fig. 3b clamp).  Defaults (``None``) are the
+    homogeneous identities — every operation multiplies by exactly 1.0, so
+    the count-based plan is reproduced bit-for-bit, rng stream included.
     """
     n = np.asarray(n, dtype=np.float64)
     t = np.asarray(t, dtype=np.float64)
     queued = np.asarray(queued, dtype=np.float64)
+    weighted = unit is not None
+    unit = (
+        np.ones_like(queued)
+        if unit is None
+        else np.maximum(np.asarray(unit, dtype=np.float64), _EPS)
+    )
+    qtasks = queued if qtasks is None else np.asarray(qtasks, dtype=np.float64)
     if open_arrival:
         # Fair-share balance on remaining work: depths replace totals in
         # Eqs. 4-8; the γ-rounding already operates on "work after the
         # steal", which is exactly the depth semantics.
         n = queued
     s_i = steal_rate_radius(i, n, t, radius)
-    if s_i > 0.0:
+    # NaN guard: an all-unreported window (open-arrival boot, every t̂ NaN)
+    # yields a NaN steal rate — no basis for Eq. 5, so no preemptive plan
+    # (the tail rule below still works against reported victims).
+    if math.isfinite(s_i) and s_i > 0.0:
         victim, crit = select_victim(rng, i, n, t, queued, radius)
         if victim is not None:
             if crit == "in-pair":
@@ -305,11 +509,15 @@ def plan_steal(
                 s = min(s_i, -steal_rate_radius(victim, n, t, radius))
             if s > 0.0:
                 amount = round_steal_rate(
-                    s, float(n[i]), float(t[i]), float(n[victim]), float(t[victim])
+                    s, float(n[i]), float(t[i]), float(n[victim]), float(t[victim]),
+                    unit=float(unit[victim]),
                 )
-                amount = int(min(amount, queued[victim]))
+                amount = int(min(amount, qtasks[victim]))
                 if amount >= 1:
-                    return StealDecision(victim=victim, amount=amount, criterion=crit)
+                    return StealDecision(
+                        victim=victim, amount=amount, criterion=crit,
+                        work=amount * float(unit[victim]) if weighted else 0.0,
+                    )
 
     # Tail rule: γ on remaining (queued) work against a probabilistically
     # chosen loaded victim.  This is the "final stages" behaviour of §2.2 —
@@ -326,17 +534,28 @@ def plan_steal(
     window = [j for j in neighborhood(i, len(n), radius) if j != i]
     loaded = [
         j for j in window
-        if math.floor(queued[j]) >= 1 and (idle or t[i] <= t[j])
+        if math.floor(qtasks[j]) >= 1
+        and (idle or t[i] <= t[j])
+        and math.isfinite(t[j])
+        and math.isfinite(queued[j])
     ]
     if not loaded:
         return None
     w = np.array([queued[j] * t[j] for j in loaded], dtype=np.float64)
-    victim = int(rng.choice(loaded, p=w / w.sum()))
+    w_sum = float(w.sum())
+    if not math.isfinite(w_sum) or w_sum <= 0.0:
+        return None  # degenerate weights (NaN boot state / zero work)
+    victim = int(rng.choice(loaded, p=w / w_sum))
     amount = tail_steal_amount(
         float(queued[i]), float(t[i]),
-        float(math.floor(queued[victim])), float(t[victim]),
+        float(math.floor(qtasks[victim])), float(t[victim]),
         open_arrival=open_arrival,
+        unit_victim=float(unit[victim]),
+        thief_tasks=float(qtasks[i]),
     )
     if amount < 1:
         return None
-    return StealDecision(victim=victim, amount=amount, criterion="tail")
+    return StealDecision(
+        victim=victim, amount=amount, criterion="tail",
+        work=amount * float(unit[victim]) if weighted else 0.0,
+    )

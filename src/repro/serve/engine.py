@@ -57,6 +57,8 @@ __all__ = [
     "ServeFuture",
     "ServePool",
     "AutoscaleConfig",
+    "request_size",
+    "shape_cost_classifier",
 ]
 
 
@@ -233,6 +235,44 @@ def jit_decode_step(
 
 
 # -------------------------------------------------------------- host serving
+def request_size(request: dict) -> float:
+    """Scalar work proxy read off a request's SHAPE (DESIGN.md
+    §Work-weighted stealing).
+
+    Checked in order: an explicit step/length scalar (``nt`` — seismic shot
+    time steps, ``steps``, ``max_new_tokens``, ``new_tokens``), then the
+    length of a sized payload (``tokens``, ``prompt``, ``inputs``,
+    ``receivers``).  Unrecognisable requests size to 1.0, which lands them
+    in the lowest cost class — never an error: sizing is an accounting hint,
+    not validation.
+    """
+    for key in ("nt", "steps", "max_new_tokens", "new_tokens"):
+        v = request.get(key)
+        if isinstance(v, (int, float)) and not isinstance(v, bool):
+            return float(v)
+    for key in ("tokens", "prompt", "inputs", "receivers"):
+        v = request.get(key)
+        if v is not None and hasattr(v, "__len__"):
+            return float(len(v))
+    return 1.0
+
+
+def shape_cost_classifier(bounds: Sequence[float]) -> Callable[[dict], int]:
+    """Cost-class inference from request shape: class = number of ``bounds``
+    the request's :func:`request_size` exceeds (so ``bounds=(100,)`` gives
+    two classes: ≤100 → 0, >100 → 1).  This is what ``ServePool`` installs
+    when given ``cost_class_bounds`` — replicas then publish per-class EWMA
+    service times through the scheduler's information ring and queues are
+    priced in estimated work-seconds rather than request counts."""
+    edges = sorted(float(b) for b in bounds)
+
+    def classify(request: dict) -> int:
+        s = request_size(request)
+        return sum(1 for e in edges if s > e)
+
+    return classify
+
+
 @dataclass
 class Replica:
     """One model replica (device slice / pod) with a relative speed."""
@@ -326,6 +366,17 @@ class ServePool:
     "a2ws" (default), "ctws", "lw", "random", or a ``SchedPolicy`` instance
     — so the paper's baselines are benchmarkable head-to-head on latency
     percentiles under identical serving traffic.
+
+    **Work-weighted serving** (DESIGN.md §Work-weighted stealing): variable-
+    cost requests (long vs short generations, deep vs shallow shots) break
+    count-based balancing — a queue of 3 heavy requests is "shorter" than a
+    queue of 4 light ones.  ``cost_class_bounds=(100,)`` infers a cost class
+    from each request's shape (:func:`request_size` thresholds — here ≤100 →
+    class 0, >100 → class 1) and the scheduler prices replica queues in
+    estimated work-seconds from per-class EWMA service times.  For payloads
+    the shape heuristic cannot size, pass an explicit ``cost_class_fn``
+    (request dict -> class index) with ``num_classes``.  Neither given →
+    count-based scheduling, bit-for-bit the old behaviour.
     """
 
     def __init__(
@@ -336,12 +387,34 @@ class ServePool:
         seed: int = 0,
         policy: str | SchedPolicy = "a2ws",
         autoscale: AutoscaleConfig | None = None,
+        cost_class_bounds: Sequence[float] | None = None,
+        cost_class_fn: Callable[[dict], int] | None = None,
+        num_classes: int | None = None,
     ):
         self.replicas = replicas
         self.radius = radius
         self.seed = seed
         self.policy = policy
         self.autoscale = autoscale
+        if cost_class_bounds is not None and cost_class_fn is not None:
+            raise ValueError(
+                "cost_class_bounds and cost_class_fn are mutually exclusive"
+            )
+        if cost_class_bounds is not None:
+            self.cost_class_fn: Callable[[dict], int] | None = (
+                shape_cost_classifier(cost_class_bounds)
+            )
+            self.num_classes = len(cost_class_bounds) + 1
+        elif cost_class_fn is not None:
+            if num_classes is None or num_classes < 2:
+                raise ValueError(
+                    "an explicit cost_class_fn needs num_classes >= 2"
+                )
+            self.cost_class_fn = cost_class_fn
+            self.num_classes = num_classes
+        else:
+            self.cost_class_fn = None
+            self.num_classes = 1
         #: (wall time, "out" | "in", worker id, pending at decision)
         self.scale_events: list[tuple[float, str, int, int]] = []
         self.peak_live = len(replicas)
@@ -379,6 +452,9 @@ class ServePool:
             fut.end_t = time.perf_counter()
             fut._done.set()
 
+        # The pool's tasks are ServeFutures: classify through the wrapped
+        # request so user classifiers keep their dict-in/int-out signature.
+        classify = self.cost_class_fn
         rt = WorkerPool(
             [],
             len(self.replicas),
@@ -387,6 +463,11 @@ class ServePool:
             radius=self.radius,
             seed=self.seed,
             open_arrival=True,
+            cost_class_fn=(
+                None if classify is None
+                else lambda fut: classify(fut.request)
+            ),
+            num_classes=self.num_classes,
         )
         # If the LAST replica dies, nothing will ever serve the queued
         # requests — fail their futures immediately instead of letting
