@@ -57,6 +57,7 @@ def main() -> None:
         fig4_radius,
         fig5_tasks,
         kernel_fd3d,
+        limplock,
         open_arrival,
         placement_ablation,
         policy_matrix,
@@ -79,6 +80,7 @@ def main() -> None:
         "policy_matrix": lambda: policy_matrix.run(seeds=seeds, fast=args.fast),
         "elastic": lambda: elastic.run(seeds=seeds, fast=args.fast),
         "weighted": lambda: weighted.run(seeds=seeds, fast=args.fast),
+        "limplock": lambda: limplock.run(seeds=seeds, fast=args.fast),
         "roofline": lambda: roofline.run(),
     }
     only = set(args.only.split(",")) if args.only else None

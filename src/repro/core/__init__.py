@@ -5,6 +5,7 @@ Layers:
   info_ring    radius-R bidirectional ring information vector (§2.1)
   deque        packed head/tail asynchronous-theft deque (§2.3, Fig. 2/3b)
   policy       pluggable SchedPolicy layer (A2WS, CTWS, LW, random-WS)
+  limp         straggler plane: slowdown fault injection + limp detection
   a2ws         policy-parametric threaded WorkerPool substrate (Algorithm 1)
   baselines    LW (leader-workers) and CTWS (cyclic token) policy shims
   simulator    discrete-event virtual-time plane driving the same policies
@@ -15,6 +16,7 @@ from .a2ws import A2WSRuntime, RunStats, WorkerPool, partition_tasks
 from .baselines import CTWSRuntime, LWRuntime
 from .deque import AtomicInt64, StealResult, TaskDeque
 from .info_ring import RingInfo
+from .limp import LimpConfig, LimpState, SlowdownEvent, SlowdownSchedule
 from .policy import (
     POLICIES,
     A2WSPolicy,
@@ -61,6 +63,10 @@ __all__ = [
     "StealResult",
     "TaskDeque",
     "RingInfo",
+    "LimpConfig",
+    "LimpState",
+    "SlowdownEvent",
+    "SlowdownSchedule",
     "SimConfig",
     "SimResult",
     "simulate",

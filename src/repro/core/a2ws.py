@@ -52,6 +52,7 @@ import numpy as np
 
 from .deque import AtomicInt64, TaskDeque
 from .info_ring import RingInfo
+from .limp import LimpConfig, LimpState, SlowdownSchedule, normalize_duration
 from .policy import PolicyView, SchedPolicy, make_policy
 from .steal import weighted_overlay
 
@@ -153,10 +154,15 @@ class _WorkerState:
     __slots__ = (
         "deque", "executed", "runtime_sum", "ran_any", "start_time", "rng",
         "wake", "retiring", "drain_on_retire", "class_t", "nc_cache",
+        "limp_state", "slow_mult",
     )
 
     def __init__(
-        self, deque: TaskDeque, seed: int, num_classes: int = 1
+        self,
+        deque: TaskDeque,
+        seed: int,
+        num_classes: int = 1,
+        limp_cfg: LimpConfig | None = None,
     ) -> None:
         self.deque = deque
         self.executed = 0
@@ -164,6 +170,11 @@ class _WorkerState:
         self.ran_any = False
         self.start_time = 0.0
         self.rng = np.random.default_rng(seed)
+        # Straggler plane (DESIGN.md §Straggler plane): owner-side limp
+        # detector (None = detection off) and the manually injected live
+        # slowdown multiplier (set_worker_slowdown — fault injection).
+        self.limp_state = LimpState(limp_cfg) if limp_cfg is not None else None
+        self.slow_mult = 1.0
         # Per-cost-class EWMA runtime estimates t̂[c] (NaN = never ran one);
         # written only by the owner thread, published via the info ring.
         self.class_t = np.full(num_classes, np.nan, dtype=np.float64)
@@ -200,6 +211,8 @@ class WorkerPool:
         cost_class_fn: Callable[[object], int] | None = None,
         num_classes: int = 1,
         ewma_alpha: float = 0.25,
+        slowdown: SlowdownSchedule | None = None,
+        limp: LimpConfig | None = None,
     ) -> None:
         """``task_fn(worker_id, task) -> result`` runs the task on a worker.
 
@@ -231,6 +244,17 @@ class WorkerPool:
         through the info ring, and ring policies price queues in estimated
         work-seconds.  Without a classifier the pool runs the count-based
         degenerate case — bit-for-bit the old behaviour.
+
+        ``slowdown`` / ``limp``: the straggler plane (DESIGN.md §Straggler
+        plane).  ``slowdown`` is a scripted :class:`SlowdownSchedule` of
+        degraded-but-alive faults — each worker's task execution stalls by
+        the scheduled multiplier (wall-clock, sleep-paced so the GIL stays
+        fair), times measured from ``start()``; ``set_worker_slowdown``
+        injects a live multiplier on top.  ``limp`` enables the owner-side
+        limp DETECTOR (:class:`LimpConfig`): a flagged worker re-prices its
+        published t so thieves strip its queue, stops initiating steals,
+        and ``submit()`` stops routing new work to it.  ``limp=None`` keeps
+        every policy bit-for-bit blind to stragglers.
         """
         self.num_workers = num_workers
         self.task_fn = task_fn
@@ -251,9 +275,19 @@ class WorkerPool:
         self.cost_class_fn = cost_class_fn
         self.num_classes = num_classes if cost_class_fn is not None else 1
         self.ewma_alpha = ewma_alpha
+        self.slowdown = slowdown
+        self.limp_cfg = limp
+        # Owner-written limp flags (one bool per ring slot; plain list —
+        # CPython element writes are atomic, readers tolerate staleness).
+        self._limping: list[bool] = [False] * num_workers
+        #: (time, worker, flagged) limp-detector transition telemetry
+        self.limp_log: list[tuple[float, int, bool]] = []
         parts = self.policy.partition(tasks, num_workers)
         self.workers = [
-            _WorkerState(TaskDeque(parts[w]), seed * 1009 + w, self.num_classes)
+            _WorkerState(
+                TaskDeque(parts[w]), seed * 1009 + w, self.num_classes,
+                limp_cfg=limp,
+            )
             for w in range(num_workers)
         ]
         # The §2.1 information board exists only for ring policies; central
@@ -328,17 +362,36 @@ class WorkerPool:
                 worker = central
             else:
                 num = self.num_workers
+                fallback = None
                 for _ in range(num):
                     cand = self._rr.get_accumulate(1) % num
                     if self._routable(cand):
-                        worker = cand
-                        break
+                        # Straggler response: keep fresh submits OFF a
+                        # flagged-limping worker (its collapsed speed would
+                        # bake straight into the task's latency) — unless
+                        # every routable worker is limping, where serving
+                        # slowly beats not serving at all.  Exception: the
+                        # probation canaries — every Nth diverted task still
+                        # lands on the flagged worker, the only completions
+                        # that can ever clear its flag.
+                        if not self._limping[cand]:
+                            worker = cand
+                            break
+                        st = self.workers[cand].limp_state
+                        if st is not None and st.should_probe():
+                            worker = cand  # probation canary
+                            break
+                        if fallback is None:
+                            fallback = cand
                 else:
-                    # Every worker died/retired between the alive check and
-                    # the scan — never settle on a dead deque.
-                    raise PoolCollapsed(
-                        "submit() into a collapsed pool (no live workers)"
-                    )
+                    if fallback is not None:
+                        worker = fallback
+                    else:
+                        # Every worker died/retired between the alive check
+                        # and the scan — never settle on a dead deque.
+                        raise PoolCollapsed(
+                            "submit() into a collapsed pool (no live workers)"
+                        )
         elif not 0 <= worker < self.num_workers:
             # Validate BEFORE touching the quiescence counter: a failed push
             # after the accumulate would leave `submitted` permanently ahead
@@ -485,20 +538,25 @@ class WorkerPool:
                 # the tombstone become the joiner's backlog).
                 w = _WorkerState(
                     self.workers[wid].deque, self.seed * 1009 + wid,
-                    self.num_classes,
+                    self.num_classes, limp_cfg=self.limp_cfg,
                 )
                 w.start_time = now
                 self.workers[wid] = w
+                self._limping[wid] = False  # the ghost's flag dies with it
                 if self.info is not None:
                     self.info.reset_member(wid)  # back to the unreported state
                 self.dead[wid] = False
             else:
-                w = _WorkerState(TaskDeque([]), self.seed * 1009 + wid, self.num_classes)
+                w = _WorkerState(
+                    TaskDeque([]), self.seed * 1009 + wid, self.num_classes,
+                    limp_cfg=self.limp_cfg,
+                )
                 w.start_time = now  # preemptive-estimate baseline = NOW
                 # Append order matters for lock-free readers: the worker and
                 # its tombstone slot exist BEFORE any count admits id wid.
                 self.workers.append(w)
                 self.dead.append(False)
+                self._limping.append(False)
                 self._slot_threads.append(None)
                 self.num_workers = len(self.workers)
                 if not self._radius_explicit:
@@ -712,12 +770,22 @@ class WorkerPool:
             mult = self.policy.task_multiplier(i)
             if mult > 1.0:
                 _busy_wait((self.clock() - start) * (mult - 1.0), self.clock)
+            slow = self._slow_factor(i, w, start)
+            if slow > 1.0:
+                # Degraded-but-alive fault injection: stretch the task's
+                # wall time by the scripted/injected multiplier.  Sleep-
+                # paced (not a busy wait) — a throttled or IO-stalled node
+                # yields its cycles, and on a CI box a spinning straggler
+                # would starve the very threads that should out-run it.
+                _sleep_stall((self.clock() - start) * (slow - 1.0), self.clock)
             end = self.clock()
             w.executed += 1
             w.runtime_sum += end - start
             w.ran_any = True
             if self.weighted:
                 self._observe_class_time(w, task, end - start)
+            if w.limp_state is not None:
+                self._observe_limp(i, w, task, end - start)
             with self._log_lock:
                 stamps = self._arrivals.get(id(task))
                 arrival = stamps.pop(0) if stamps else float("nan")
@@ -730,6 +798,61 @@ class WorkerPool:
             if self.info is not None:
                 self._update_info(i)
                 self.info.communicate(i)  # line 13
+
+    # ------------------------------------------------------- straggler plane
+    def set_worker_slowdown(self, worker: int, factor: float) -> None:
+        """Live fault injection: multiply ``worker``'s task execution time
+        by ``factor`` from its next task on (1.0 restores native speed).
+        Composes multiplicatively with any scripted ``slowdown`` schedule.
+        Thread-safe: a single float store, read once per task boundary."""
+        if not 0 <= worker < self.num_workers:
+            raise ValueError(
+                f"worker {worker} out of range 0..{self.num_workers - 1}"
+            )
+        if not math.isfinite(factor) or factor <= 0.0:
+            raise ValueError(f"slowdown factor {factor} must be finite > 0")
+        self.workers[worker].slow_mult = float(factor)
+
+    def limping(self, worker: int) -> bool:
+        """Current owner-side limp verdict for ``worker`` (False when
+        detection is disabled)."""
+        return self._limping[worker]
+
+    def _slow_factor(self, i: int, w: _WorkerState, now: float) -> float:
+        """Combined slowdown multiplier for a task that started at ``now``
+        (clock units): manual injection x the scripted schedule, evaluated
+        at task start — mirroring the simulator's ``start_task``."""
+        f = w.slow_mult
+        if self.slowdown is not None and self._t0 is not None:
+            f *= self.slowdown.factor_at(i, now - self._t0)
+        return f
+
+    def _observe_limp(self, i: int, w: _WorkerState, task, dt: float) -> None:
+        """Owner-side limp detection on a completed task (the only signal
+        the owner can actually observe — DESIGN.md §Straggler plane caveat:
+        a fully wedged worker never reaches this line)."""
+        st = w.limp_state
+        cls = self._task_class(task) if self.weighted else 0
+        st.observe(
+            normalize_duration(dt, cls, w.class_t if self.weighted else None)
+        )
+        peer = float("nan")
+        if st.samples < st.cfg.min_samples and self.info is not None:
+            # Boot-limped fallback: the own baseline is not trusted yet, so
+            # reference the median published t of the live window peers.
+            raw = self.info.t[i]
+            vals = [
+                float(raw[j])
+                for j in self.info.window(i)
+                if j != i and not self.dead[j] and raw[j] == raw[j]
+            ]
+            if vals:
+                peer = float(np.median(vals))
+        flagged = st.evaluate(peer)
+        if flagged != self._limping[i]:
+            self._limping[i] = flagged
+            with self._log_lock:
+                self.limp_log.append((self.clock(), i, flagged))
 
     # ----------------------------------------------------------------- helpers
     @property
@@ -794,6 +917,16 @@ class WorkerPool:
             t_i = w.runtime_sum / w.executed
         else:
             t_i = max(self.clock() - w.start_time, 1e-9)
+        limping = self._limping[i]
+        if limping:
+            # Adaptive RE-PRICING (DESIGN.md §Straggler plane): a flagged
+            # limper publishes its collapsed fast-EWMA instead of the slow-
+            # moving cumulative mean, so the existing fair-share mathematics
+            # (Eq. 5) immediately marks it massively surplus and thieves
+            # strip its queue through the ordinary steal path.
+            recent = w.limp_state.recent
+            if recent == recent:
+                t_i = max(t_i, recent)
         if self.weighted:
             # Per-class payload: own queue composition (ground-truth scan of
             # the own deque) + per-class EWMA estimates, same cell version.
@@ -801,17 +934,12 @@ class WorkerPool:
                 i, float(n_i), float(t_i),
                 nc_i=self._queue_classes(w),
                 tc_i=w.class_t.copy(),
+                limp_i=limping,
             )
         else:
-            self.info.update_local(i, float(n_i), float(t_i))
+            self.info.update_local(i, float(n_i), float(t_i), limp_i=limping)
 
-    def _ring_view(
-        self, i: int
-    ) -> tuple[
-        np.ndarray, np.ndarray, np.ndarray, list[int],
-        np.ndarray | None, np.ndarray | None, np.ndarray | None,
-        np.ndarray | None,
-    ]:
+    def _ring_view(self, i: int) -> tuple:
         """A2WS information model: what thief ``i`` may believe (§2.1/§2.2.1).
 
         Estimates use ONLY the thief's information vector (plus the elapsed
@@ -819,18 +947,24 @@ class WorkerPool:
         reads of remote state.  Over/under-estimates are absorbed by the
         Fig. 3b atomic adjust-and-correct protocol, exactly as in the paper.
 
-        Returns ``(n, t, queued, window, unit, qtasks, rel, ntasks)``; the
-        last four are the work-weighted overlay (None in count mode).  In weighted
-        ``n``/``queued`` are measured in equivalent reference-class tasks
-        (DESIGN.md §Work-weighted stealing) while ``qtasks`` keeps the task
-        counts for integrality guards and the Fig. 3b clamp.
+        Returns ``(n, t, queued, window, unit, qtasks, rel, ntasks, limp)``;
+        ``unit``/``qtasks``/``rel``/``ntasks`` are the work-weighted overlay
+        (None in count mode).  In weighted mode ``n``/``queued`` are measured
+        in equivalent reference-class tasks (DESIGN.md §Work-weighted
+        stealing) while ``qtasks`` keeps the task counts for integrality
+        guards and the Fig. 3b clamp.  ``limp`` is the delayed limp-flag row
+        (None when detection is off).
         """
         w = self.workers[i]
         # One board epoch for rows + window: a concurrent grow() can never
         # produce a window index outside the copied rows.
-        n_view, t_view, raw_t, window, nc_view, tc_view = (
-            self.info.view_window_classes(i)
+        n_view, t_view, raw_t, window, nc_view, tc_view, limp_row = (
+            self.info.view_window_all(i)
         )
+        if self.limp_cfg is not None:
+            limp_row[i] = self._limping[i]  # own flag: ground truth, no lag
+        else:
+            limp_row = None
         now = self.clock()
         elapsed = max(now - w.start_time, 1e-9)
         queued = np.zeros(len(n_view))
@@ -867,7 +1001,7 @@ class WorkerPool:
                 done_est = min(elapsed / max(t_view[j], 1e-9), n_view[j])
                 queued[j] = max(n_view[j] - done_est, 0.0)
         if not self.weighted:
-            return n_view, t_view, queued, window, None, None, None, None
+            return n_view, t_view, queued, window, None, None, None, None, limp_row
         # ---- work-weighted overlay (DESIGN.md §Work-weighted stealing) ----
         # Ground-truth compositions where the thief may read them: its own
         # deque, and tombstoned deques (already ground-truth counted above).
@@ -887,13 +1021,13 @@ class WorkerPool:
         )
         # n_view stays the COUNT estimate (n_w is a fresh array): the Fig. 3b
         # reconciliation writes the board's count-denominated n from it.
-        return n_w, t_w, queued_w, window, unit, qtasks, rel, n_view
+        return n_w, t_w, queued_w, window, unit, qtasks, rel, n_view, limp_row
 
     def _make_view(self, i: int) -> PolicyView:
         w = self.workers[i]
-        unit = qtasks = rel = ntasks = None
+        unit = qtasks = rel = ntasks = limp_row = None
         if self.info is not None:
-            n_view, t_view, queued, window, unit, qtasks, rel, ntasks = (
+            n_view, t_view, queued, window, unit, qtasks, rel, ntasks, limp_row = (
                 self._ring_view(i)
             )
             num_workers = len(n_view)  # the board epoch's ring size
@@ -921,6 +1055,7 @@ class WorkerPool:
             qtasks=qtasks,
             rel=rel,
             ntasks=ntasks,
+            limp=limp_row,
         )
 
     def _policy_boundary(self, i: int) -> bool:
@@ -1033,6 +1168,21 @@ class WorkerPool:
             )
         self.policy.on_steal_result(view, plan, got, left)
         return True
+
+
+def _sleep_stall(duration: float, clock: Callable[[], float]) -> None:
+    """Stall for ``duration`` clock seconds while YIELDING the core (models
+    throttled/IO-stalled stragglers; contrast ``_busy_wait``, which models a
+    co-located compute thief).  Clock-deadline paced so virtual clocks see
+    the same stall that was priced."""
+    if duration <= 0:
+        return
+    deadline = clock() + duration
+    while True:
+        remaining = deadline - clock()
+        if remaining <= 0.0:
+            return
+        time.sleep(min(remaining, 1e-3))
 
 
 def _busy_wait(duration: float, clock: Callable[[], float]) -> None:

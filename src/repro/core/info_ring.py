@@ -69,6 +69,11 @@ class RingInfo:
         # cell, so (n, t, nc, tc) stay mutually consistent per §2.1 writer.
         self.nc = np.zeros((self.P, self.P, self.C), dtype=np.float64)
         self.tc = np.full((self.P, self.P, self.C), np.nan, dtype=np.float64)
+        # Straggler plane (DESIGN.md §Straggler plane): the subject's
+        # self-reported limping flag.  One boolean riding the SAME per-cell
+        # version counters — it moves with (n, t) in one Put, so a thief
+        # never sees a re-priced t without the flag that explains it.
+        self.limp = np.zeros((self.P, self.P), dtype=bool)
         self.version = np.zeros((self.P, self.P), dtype=np.int64)
         # last_sent[d][i, j]: newest version of cell j that i pushed toward
         # direction d (0 = to left neighbour i-1, 1 = to right neighbour i+1).
@@ -104,16 +109,19 @@ class RingInfo:
             t = np.full((num_procs, num_procs), np.nan, dtype=np.float64)
             nc = np.zeros((num_procs, num_procs, self.C), dtype=np.float64)
             tc = np.full((num_procs, num_procs, self.C), np.nan, dtype=np.float64)
+            limp = np.zeros((num_procs, num_procs), dtype=bool)
             version = np.zeros((num_procs, num_procs), dtype=np.int64)
             last_sent = np.zeros((2, num_procs, num_procs), dtype=np.int64)
             n[:old, :old] = self.n
             t[:old, :old] = self.t
             nc[:old, :old] = self.nc
             tc[:old, :old] = self.tc
+            limp[:old, :old] = self.limp
             version[:old, :old] = self.version
             last_sent[:, :old, :old] = self.last_sent
             self.n, self.t = n, t
             self.nc, self.tc = nc, tc
+            self.limp = limp
             self.version, self.last_sent = version, last_sent
             self.P, self.R = num_procs, new_r
 
@@ -128,6 +136,7 @@ class RingInfo:
             self.t[:, k] = np.nan
             self.nc[:, k, :] = 0.0
             self.tc[:, k, :] = np.nan
+            self.limp[:, k] = False
             self.version[:, k] += 1
 
     # ------------------------------------------------------------ local write
@@ -138,15 +147,21 @@ class RingInfo:
         t_i: float,
         nc_i: np.ndarray | None = None,
         tc_i: np.ndarray | None = None,
+        limp_i: bool = False,
     ) -> None:
         """Alg. 1 lines 2/11: p_i refreshes its own cell (Table 1 row 1).
 
         ``nc_i``/``tc_i``: optional per-class queue counts and EWMA runtime
         estimates (work-weighted mode); they share the cell's version, so a
         class-profile change alone is enough to mark the cell dirty.
+        ``limp_i``: the owner-side limp-detector verdict (DESIGN.md
+        §Straggler plane) — a flag flip alone also dirties the cell.
         """
         with self._epoch:
             changed = (self.n[i, i] != n_i) or not _feq(self.t[i, i], t_i)
+            if bool(self.limp[i, i]) != limp_i:
+                self.limp[i, i] = limp_i
+                changed = True
             if nc_i is not None and not np.array_equal(self.nc[i, i], nc_i):
                 self.nc[i, i] = nc_i
                 changed = True
@@ -232,6 +247,7 @@ class RingInfo:
                 self.t[dst, j] = self.t[src, j]
                 self.nc[dst, j] = self.nc[src, j]
                 self.tc[dst, j] = self.tc[src, j]
+                self.limp[dst, j] = self.limp[src, j]
                 self.version[dst, j] = ver
             self.puts += 1
             return 1
@@ -274,11 +290,23 @@ class RingInfo:
         ``nc`` and EWMA runtime estimates ``tc`` (NaN = unreported) — all
         copied under the same board epoch so the work-weighted overlay can
         never mix ring sizes with the scalar rows."""
+        n, t, raw_t, window, nc, tc, _limp = self.view_window_all(i, default_t)
+        return n, t, raw_t, window, nc, tc
+
+    def view_window_all(
+        self, i: int, default_t: float | None = None
+    ) -> tuple[
+        np.ndarray, np.ndarray, np.ndarray, list[int],
+        np.ndarray, np.ndarray, np.ndarray,
+    ]:
+        """``view_window_classes(i)`` plus the delayed limp-flag row
+        (DESIGN.md §Straggler plane), under the same board epoch."""
         with self._epoch:
             n = self.n[i].copy()
             raw_t = self.t[i].copy()
             nc = self.nc[i].copy()
             tc = self.tc[i].copy()
+            limp = self.limp[i].copy()
             window = neighborhood(i, self.P, self.R)
         t = raw_t.copy()
         mask = np.isnan(t)
@@ -289,7 +317,7 @@ class RingInfo:
                 known = t[~mask]
                 fill = float(known.mean()) if known.size else 1.0
             t[mask] = fill
-        return n, t, raw_t, window, nc, tc
+        return n, t, raw_t, window, nc, tc, limp
 
     def window(self, i: int) -> list[int]:
         return neighborhood(i, self.P, self.R)

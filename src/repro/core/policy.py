@@ -136,6 +136,13 @@ class PolicyView:
     #: only) — the substrate prices individual loot with it when executing a
     #: plan greedily by work
     rel: np.ndarray | None = None
+    #: delayed limp-flag plane (DESIGN.md §Straggler plane): ``limp[j]`` is
+    #: True when worker j has FLAGGED ITSELF as limping (owner-side detector)
+    #: and the flag has propagated to this worker's view — same delay model
+    #: as the (n, t) cells it rides with.  None = detection disabled (the
+    #: count-based ablation) — every policy then behaves bit-for-bit as
+    #: before this plane existed.
+    limp: np.ndarray | None = None
     #: tasks already stolen/granted but still in transit to THIS worker —
     #: nonzero only under the simulator (threaded transfers are synchronous);
     #: one-request-at-a-time policies gate on it to avoid duplicate requests
@@ -236,6 +243,14 @@ class A2WSPolicy(SchedPolicy):
             # Preemptive stealing starts at the first completed task
             # (Alg. 1 lines 3-9 gate); idle workers always try.
             return None
+        if view.limp is not None and view.limp[view.worker]:
+            # A flagged-limping worker never INITIATES steals: its collapsed
+            # published t already blocks the loaded-victim tail rule, but
+            # idle thieves are exempt from that rule (§2.1 relay) and the
+            # probe path ignores t entirely — loot it pulled would execute
+            # at the collapsed speed, the exact inversion of what the
+            # re-pricing is draining.  Stolen-FROM it stays fully legal.
+            return None
         decision = plan_steal(
             view.rng, view.worker, view.n_view, view.t_view, view.queued,
             view.radius, idle=near_idle, open_arrival=view.open_arrival,
@@ -269,6 +284,14 @@ class A2WSPolicy(SchedPolicy):
         ]
         if not candidates:
             return None
+        if view.limp is not None:
+            # Victim of choice: a limping peer's backlog is the worst-priced
+            # work in the window — strip it first.  (The probe's uniform
+            # draw is otherwise blind to t, so without this preference the
+            # limper is probed no more often than a healthy node.)
+            limping = [j for j in candidates if view.limp[j]]
+            if limping:
+                candidates = limping
         return StealPlan(int(view.rng.choice(candidates)), 1, "probe")
 
 

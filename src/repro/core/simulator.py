@@ -52,6 +52,7 @@ from dataclasses import dataclass, field, replace
 import numpy as np
 
 from .a2ws import latency_percentiles
+from .limp import LimpConfig, LimpState, SlowdownSchedule, normalize_duration
 from .policy import PolicyView, SchedPolicy, make_policy
 from .steal import neighborhood, weighted_overlay
 
@@ -164,6 +165,15 @@ class SimConfig:
     class_trace: tuple[int, ...] = ()
     weighted: bool = True
     ewma_alpha: float = 0.25
+    # --- straggler/limplock plane (DESIGN.md §Straggler plane) ---
+    # slowdowns: scripted degraded-but-alive faults — a SlowdownSchedule (or
+    #            a bare tuple of SlowdownEvent) multiplying task durations on
+    #            the targeted nodes, the straggler analogue of joins/retires.
+    # limp:      adaptive limp DETECTION + response (LimpConfig); None keeps
+    #            the scheduler blind to stragglers — the count-based
+    #            ablation baseline, and bit-for-bit the pre-PR behaviour.
+    slowdowns: SlowdownSchedule | tuple = ()
+    limp: LimpConfig | None = None
     # --- CTWS ---
     token_base: float = 2e-3
     token_per_node: float = 2.5e-4
@@ -177,7 +187,57 @@ class SimConfig:
         return len(self.speeds)
 
     def with_(self, **kw) -> "SimConfig":
-        return replace(self, **kw)
+        new = replace(self, **kw)
+        # Fail fast on a mis-scripted fault plan (mirrors the simulate()-time
+        # retire-before-join rejection): with_() is how benchmark grids and
+        # tests derive scenario configs, so a bad slowdown script should blow
+        # up where it is WRITTEN, not runs later inside the event loop.
+        validate_slowdowns(new)
+        return new
+
+
+def slowdown_schedule(cfg: "SimConfig") -> SlowdownSchedule:
+    """Normalise ``cfg.slowdowns`` (schedule or bare event tuple)."""
+    s = cfg.slowdowns
+    if isinstance(s, SlowdownSchedule):
+        return s
+    return SlowdownSchedule(tuple(s))
+
+
+def validate_slowdowns(cfg: "SimConfig") -> SlowdownSchedule:
+    """Reject slowdown events that target never-joined or already-retired
+    workers — a fault script slowing a ghost would be silently inert (the
+    tombstone guard drops its effect), exactly the failure mode PR 3's
+    retire-before-join rejection closed for churn scripts."""
+    sched = slowdown_schedule(cfg)
+    if not sched.events:
+        return sched
+    p0 = cfg.P
+    joins = sorted(cfg.joins)
+    pmax = p0 + len(joins)
+    first_retire: dict[int, float] = {}
+    for t_ret, node in cfg.retires:
+        t_prev = first_retire.get(node)
+        if t_prev is None or t_ret < t_prev:
+            first_retire[node] = t_ret
+    for ev in sched.events:
+        if ev.worker >= pmax:
+            raise ValueError(
+                f"slowdown target {ev.worker} outside the ring "
+                f"0..{pmax - 1}: that worker never joins"
+            )
+        if ev.worker >= p0 and ev.start < joins[ev.worker - p0][0]:
+            raise ValueError(
+                f"slowdown of node {ev.worker} at t={ev.start} precedes "
+                f"its join at t={joins[ev.worker - p0][0]}"
+            )
+        t_ret = first_retire.get(ev.worker)
+        if t_ret is not None and ev.start >= t_ret:
+            raise ValueError(
+                f"slowdown of node {ev.worker} at t={ev.start} targets a "
+                f"worker already retired at t={t_ret}"
+            )
+    return sched
 
 
 @dataclass
@@ -192,6 +252,8 @@ class SimResult:
     # records: (node, start, end) per task, for Fig. 5 style plots
     latencies: list[float] = field(default_factory=list)
     # per-task arrival-to-completion sojourn times (open-arrival modes only)
+    limp_events: list[tuple[float, int, bool]] = field(default_factory=list)
+    # (time, node, flagged) limp-detector transitions (cfg.limp runs only)
 
     def latency_percentiles(
         self, qs: tuple[float, ...] = (50.0, 95.0, 99.0)
@@ -225,12 +287,13 @@ class _History:
     a remote reader sees the class profile from the SAME report as the
     scalars, i.e. one consistent ring cell."""
 
-    __slots__ = ("times", "ns", "ts", "ncs", "tcs")
+    __slots__ = ("times", "ns", "ts", "ncs", "tcs", "limps")
 
     def __init__(self, num_classes: int = 0) -> None:
         self.times: list[float] = [0.0]
         self.ns: list[float] = [0.0]
         self.ts: list[float] = [float("nan")]
+        self.limps: list[bool] = [False]
         if num_classes > 0:
             self.ncs: list[np.ndarray] | None = [np.zeros(num_classes)]
             self.tcs: list[np.ndarray] | None = [
@@ -246,10 +309,12 @@ class _History:
         t: float,
         nc: np.ndarray | None = None,
         tc: np.ndarray | None = None,
+        limp: bool = False,
     ) -> None:
         self.times.append(time)
         self.ns.append(n)
         self.ts.append(t)
+        self.limps.append(limp)
         if self.ncs is not None:
             self.ncs.append(self.ncs[-1] if nc is None else nc)
             self.tcs.append(self.tcs[-1] if tc is None else tc)
@@ -263,6 +328,11 @@ class _History:
     ) -> tuple[float, float, np.ndarray, np.ndarray]:
         k = bisect_right(self.times, time) - 1
         return self.ns[k], self.ts[k], self.ncs[k], self.tcs[k]
+
+    def limp_at(self, time: float) -> bool:
+        """Delayed limp flag — rides the same report stream as (n, t)."""
+        k = bisect_right(self.times, time) - 1
+        return self.limps[k]
 
 
 def _ring_dist(i: int, j: int, p: int) -> int:
@@ -314,6 +384,14 @@ def simulate(policy: str | SchedPolicy, cfg: SimConfig) -> SimResult:
     pol = sim_policy(policy, cfg)
     p0 = cfg.P
     rng = np.random.default_rng(cfg.seed)
+
+    # Straggler plane: scripted slowdown faults (always honoured) and the
+    # adaptive limp detector (opt-in via cfg.limp; when None the `limping`
+    # mask stays all-False and every downstream branch is inert — the
+    # count-based ablation is bit-for-bit the pre-straggler behaviour).
+    sched = validate_slowdowns(cfg)
+    has_slow = bool(sched.events)
+    detect = cfg.limp is not None
 
     # Elastic membership: every join appends one ring position, so all
     # per-node state is sized for the FINAL ring up front; `p` is the
@@ -409,6 +487,9 @@ def simulate(policy: str | SchedPolicy, cfg: SimConfig) -> SimResult:
     busy = np.zeros(pmax, np.float64)
     class_t = np.full((pmax, ncls), np.nan)  # per-class EWMA runtimes
     hist = [_History(ncls if winfo else 0) for _ in range(pmax)]
+    limping = np.zeros(pmax, bool)
+    limp_states = [LimpState(cfg.limp) for _ in range(pmax)] if detect else None
+    limp_events: list[tuple[float, int, bool]] = []
 
     def cls_payload(i: int) -> dict:
         """Per-class cell payload published alongside every (n, t) report."""
@@ -433,15 +514,28 @@ def simulate(policy: str | SchedPolicy, cfg: SimConfig) -> SimResult:
     def route(prefer_central: bool = True) -> int:
         """Pick a LIVE landing node (arrival spray / retirement drain) —
         membership changes mean targets must resolve at event time, not at
-        trace-generation time."""
+        trace-generation time.  Flagged-limping nodes are skipped (routing a
+        fresh submit onto a collapsed node bakes its slowdown straight into
+        that task's latency) unless every live node is limping, in which
+        case degrade gracefully rather than drop the task — EXCEPT for the
+        probation canaries: every Nth diverted task still lands on the
+        flagged node, the only completions that can ever clear its flag
+        (LimpConfig.probation_every)."""
         central = pol.central if prefer_central else None
         if central is not None and alive_sim[central]:
             return central
+        fallback = -1
         for _ in range(p):
             rr_state[0] = (rr_state[0] + 1) % p
-            if alive_sim[rr_state[0]]:
-                return rr_state[0]
-        return -1  # nobody is alive
+            j = rr_state[0]
+            if alive_sim[j]:
+                if not limping[j]:
+                    return j
+                if limp_states is not None and limp_states[j].should_probe():
+                    return j  # probation canary
+                if fallback < 0:
+                    fallback = j
+        return fallback  # only limping nodes left (or nobody at all: -1)
 
     # Event heap: (time, seq, kind, node, payload)
     heap: list[tuple[float, int, str, int, object]] = []
@@ -473,6 +567,10 @@ def simulate(policy: str | SchedPolicy, cfg: SimConfig) -> SimResult:
         if cfg.noise:
             dur *= float(rng.lognormal(0.0, cfg.noise))
         dur *= pol.task_multiplier(i)  # LW: co-located leader slows worker 0
+        if has_slow:
+            # Straggler fault injection: the scripted multiplier, sampled at
+            # task START (the threaded plane stalls the same wall-clock way).
+            dur *= sched.factor_at(i, now)
         # Sender-side info-communication overhead at the task boundary: the
         # dirty part of the window goes to both neighbours (≤ R cells each).
         overhead = cfg.comm_cell_cost * 2 * radius if uses_ring else 0.0
@@ -486,18 +584,49 @@ def simulate(policy: str | SchedPolicy, cfg: SimConfig) -> SimResult:
             return runtime_sum[i] / executed[i]
         return max(now - born[i], 1e-9)  # elapsed since the node joined
 
-    def ring_view(
-        i: int, now: float
-    ) -> tuple[
-        np.ndarray, np.ndarray, np.ndarray,
-        np.ndarray | None, np.ndarray | None, np.ndarray | None,
-    ]:
+    def _pub_t(i: int, now: float) -> float:
+        """What node i PUBLISHES as its mean task time: the cumulative mean,
+        except that a flagged-limping node publishes its collapsed fast-EWMA
+        instead — the adaptive RE-PRICING.  Pushing the honest (slow) t_i
+        through the ring makes the existing fair-share mathematics (Eq. 5)
+        mark the limper as massively surplus, so thieves strip it through
+        the ordinary steal path; no new steal rule is needed."""
+        t = _own_t(i, now)
+        if limping[i]:
+            recent = limp_states[i].recent
+            if recent == recent:
+                t = max(t, recent)
+        return t
+
+    def publish(j: int, now: float) -> None:
+        """Append node j's current cell to its report history."""
+        hist[j].append(
+            now, reported_n(j), _pub_t(j, now),
+            limp=bool(limping[j]), **cls_payload(j)
+        )
+
+    def _peer_ref(i: int, now: float) -> float:
+        """Median published t among i's live window peers — the detector's
+        reference of last resort for a node limping before it has its own
+        baseline (min_samples).  NaN when no peer has reported."""
+        vals = [
+            float(cur_t[j])
+            for j in neighborhood(i, p, radius)
+            if j != i and alive_sim[j] and cur_t[j] == cur_t[j]
+        ]
+        if not vals:
+            return float("nan")
+        return float(np.median(vals))
+
+    def ring_view(i: int, now: float) -> tuple:
         """Delayed (n, t, queued-estimate) views of the window around i,
         plus the ``(unit, qtasks, rel)`` work-weighted overlay (None in
-        count mode) — the simulator's mirror of ``WorkerPool._ring_view``."""
+        count mode) and the delayed limp-flag plane — the simulator's
+        mirror of ``WorkerPool._ring_view``."""
         n_view = np.zeros(p)
         t_view = np.ones(p)
         queued = np.zeros(p)
+        limp_view = np.zeros(p, bool) if detect else None
         nc_view = np.zeros((p, ncls)) if winfo else None
         tc_view = np.full((p, ncls), np.nan) if winfo else None
         # Relay pacing: per-hop delay = link latency + half the relay's poll
@@ -510,8 +639,10 @@ def simulate(policy: str | SchedPolicy, cfg: SimConfig) -> SimResult:
             j = (i + off) % p
             if j == i:
                 n_view[j] = reported_n(i)
-                t_view[j] = _own_t(i, now)
+                t_view[j] = _pub_t(i, now)  # own row: re-priced when limping
                 queued[j] = depth(i)
+                if detect:
+                    limp_view[j] = bool(limping[i])
                 if winfo:
                     # Own row is ground truth: actual queue composition +
                     # own EWMA estimates (mirrors the threaded plane).
@@ -541,6 +672,8 @@ def simulate(policy: str | SchedPolicy, cfg: SimConfig) -> SimResult:
                 tc_view[j] = tc_j
             else:
                 n_j, t_j = hist[j].at(max(now - delay, 0.0))
+            if detect:
+                limp_view[j] = hist[j].limp_at(max(now - delay, 0.0))
             if t_j != t_j:  # no report yet: preemptive wall-time estimate
                 t_j = max(now - born[i], 1e-9)  # the THIEF's elapsed time
             n_view[j] = n_j
@@ -554,19 +687,23 @@ def simulate(policy: str | SchedPolicy, cfg: SimConfig) -> SimResult:
                 done_est = min(now / max(t_j, 1e-9), n_j)
                 queued[j] = max(n_j - done_est, 0.0)
         if not winfo:
-            return n_view, t_view, queued, None, None, None
+            return n_view, t_view, queued, None, None, None, limp_view
         # ---- work-weighted overlay (DESIGN.md §Work-weighted stealing) ----
         # steal.weighted_overlay is the ONE shared re-pricing for both
-        # planes; tombstones are frozen at their ~0-speed price.
+        # planes; tombstones are frozen at their ~0-speed price.  A limping
+        # node's collapsed t feeds the overlay like any other estimate, so
+        # its queue prices in (slow) work-seconds automatically.
         n_w, t_w, queued_w, unit, qtasks, rel = weighted_overlay(
             n_view, t_view, queued, nc_view, tc_view, frozen=~alive_sim[:p]
         )
-        return n_w, t_w, queued_w, unit, qtasks, rel
+        return n_w, t_w, queued_w, unit, qtasks, rel, limp_view
 
     def make_view(i: int, now: float) -> PolicyView:
-        unit = qtasks = rel = None
+        unit = qtasks = rel = limp_view = None
         if uses_ring:
-            n_view, t_view, queued, unit, qtasks, rel = ring_view(i, now)
+            n_view, t_view, queued, unit, qtasks, rel, limp_view = ring_view(
+                i, now
+            )
             window = neighborhood(i, p, radius)
         else:
             n_view = t_view = queued = None
@@ -591,6 +728,7 @@ def simulate(policy: str | SchedPolicy, cfg: SimConfig) -> SimResult:
             unit=unit,
             qtasks=qtasks,
             rel=rel,
+            limp=limp_view,
             inflight=lambda: int(in_transit[i]),
         )
 
@@ -634,7 +772,7 @@ def simulate(policy: str | SchedPolicy, cfg: SimConfig) -> SimResult:
             pol.on_steal_result(view, plan, 0, avail)
             return False
         if uses_ring:
-            hist[v].append(now, reported_n(v), _own_t(v, now), **cls_payload(v))
+            publish(v, now)
         # Transport: policy-priced dispatch (LW leader round-trip) or the
         # plane's default steal cost.
         if plan.delay > 0.0:
@@ -654,9 +792,7 @@ def simulate(policy: str | SchedPolicy, cfg: SimConfig) -> SimResult:
         for s in stamps:
             qcls[node, s[1]] += 1.0
         if uses_ring:
-            hist[node].append(
-                now, reported_n(node), _own_t(node, now), **cls_payload(node)
-            )
+            publish(node, now)
         if idle_since[node] >= 0.0:
             idle_since[node] = -1.0
             start_task(node, now)
@@ -710,10 +846,32 @@ def simulate(policy: str | SchedPolicy, cfg: SimConfig) -> SimResult:
             if open_mode:
                 latencies.append(now - task[0])
             makespan = max(makespan, now)
+            if detect:
+                # Owner-side limp detection on the completed duration (the
+                # only thing the owner can actually observe — DESIGN.md
+                # §Straggler plane caveat), normalised to average-class
+                # terms so heavy tasks don't read as a slowdown.
+                st = limp_states[i]
+                st.observe(
+                    normalize_duration(
+                        pending_dur[i], task[1],
+                        class_t[i] if has_classes else None,
+                    )
+                )
+                flagged = st.evaluate(
+                    peer_ref=(
+                        _peer_ref(i, now)
+                        if st.samples < cfg.limp.min_samples
+                        else float("nan")
+                    )
+                )
+                if flagged != bool(limping[i]):
+                    limping[i] = flagged
+                    limp_events.append((now, i, flagged))
             if uses_ring:
                 # Update own info + history (Alg. 1 line 11 + communicate).
                 cur_t[i] = runtime_sum[i] / executed[i]
-                hist[i].append(now, reported_n(i), cur_t[i], **cls_payload(i))
+                publish(i, now)
             # Smart stealing right after finishing a task (preemptive);
             # a node retired mid-task completes it, then leaves the loop.
             boundary(i, now)
@@ -778,9 +936,7 @@ def simulate(policy: str | SchedPolicy, cfg: SimConfig) -> SimResult:
             queues[i].clear()
             qcls[i, :] = 0.0
             if uses_ring:
-                hist[i].append(
-                    now, reported_n(i), _own_t(i, now), **cls_payload(i)
-                )
+                publish(i, now)
             if stamps and not alive_sim[:p].any():
                 raise RuntimeError(
                     f"retiring the last live node at t={now:.3f} with "
@@ -801,4 +957,5 @@ def simulate(policy: str | SchedPolicy, cfg: SimConfig) -> SimResult:
         moved_tasks=stats["moved"],
         records=records,
         latencies=latencies,
+        limp_events=limp_events,
     )

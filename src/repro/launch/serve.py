@@ -21,6 +21,18 @@ baselines, head-to-head on the same Poisson trace and latency metric.
 ``--autoscale-max N`` makes the pool ELASTIC (DESIGN.md §Elasticity): a
 threshold autoscaler boots surge replicas up to N while the backlog
 exceeds its per-replica bound and drains them back once traffic quiets.
+
+``--limp-slowdown F`` injects a STRAGGLER fault (DESIGN.md §Straggler
+plane): ``--limp-replica`` limps to F× its normal service time
+``--limp-after`` seconds into the run.  ``--limp-factor`` (default on)
+arms the adaptive limp detector — the pool re-prices the limping
+replica's queue so the others strip it, stops routing new requests to
+it, and reports the detector's flag transitions:
+
+    PYTHONPATH=src python -m repro.launch.serve --arch phi4-mini-3.8b \
+        --requests 24 --prompt-len 16 --new-tokens 8 \
+        --open-arrival --rate 8 --replicas 3 --slow-factor 1 \
+        --limp-slowdown 16 --limp-after 0.5
 """
 
 from __future__ import annotations
@@ -33,6 +45,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ARCH_IDS, get_smoke
+from repro.core.limp import LimpConfig, SlowdownEvent, SlowdownSchedule
 from repro.core.policy import POLICIES
 from repro.models import lm
 from repro.serve.engine import AutoscaleConfig, Replica, ServePool
@@ -112,9 +125,24 @@ def _open_main(cfg, params, args) -> None:
             min_replicas=args.replicas,
             max_replicas=args.autoscale_max,
         )
+    slowdown = None
+    limp = None
+    if args.limp_slowdown > 1.0:
+        # Straggler fault (DESIGN.md §Straggler plane): one replica limps
+        # mid-run; the detector (unless disabled) re-prices its queue so
+        # the healthy replicas strip it and new requests route around it.
+        if not 0 <= args.limp_replica < args.replicas:
+            raise SystemExit("--limp-replica must name a boot replica")
+        slowdown = SlowdownSchedule((
+            SlowdownEvent(args.limp_replica, args.limp_after,
+                          args.limp_slowdown),
+        ))
+        if args.limp_factor > 1.0:
+            limp = LimpConfig(limp_factor=args.limp_factor)
     pool = ServePool(replicas, seed=args.seed, policy=args.policy,
-                     autoscale=autoscale)
+                     autoscale=autoscale, slowdown=slowdown, limp=limp)
     pool.start()
+    t0 = time.perf_counter()
 
     futs = []
     for _ in range(args.requests):
@@ -133,6 +161,10 @@ def _open_main(cfg, params, args) -> None:
           f"requests/replica={per_rep} steals={len(stats.steals)}")
     if autoscale is not None:
         print(f"autoscaler: peak {peak} replicas, {scale_outs} scale-outs")
+    if slowdown is not None:
+        flips = ", ".join(f"replica{w} {'limp' if f else 'recovered'}"
+                          f" @{t - t0:.2f}s" for t, w, f in pool.limp_log)
+        print(f"limp detector: {flips or 'no transitions'}")
     print("latency p50/p95/p99 = "
           + "/".join(f"{pct[q]*1e3:.0f}ms" for q in (50.0, 95.0, 99.0)))
     print(f"sample completion: {futs[0].result()['completion'][:8]}")
@@ -159,6 +191,19 @@ def main() -> None:
                     help="elastic pool: scale out to at most this many "
                          "replicas under backlog, drain back when idle "
                          "(0 = fixed pool; open mode)")
+    ap.add_argument("--limp-slowdown", type=float, default=0.0,
+                    help="straggler fault: limp one replica to this multiple "
+                         "of its normal service time (0/1 = no fault; "
+                         "open mode)")
+    ap.add_argument("--limp-replica", type=int, default=0,
+                    help="which boot replica the straggler fault hits")
+    ap.add_argument("--limp-after", type=float, default=0.5,
+                    help="seconds after start() the straggler fault begins")
+    ap.add_argument("--limp-factor", type=float, default=4.0,
+                    help="limp detector threshold: flag a replica whose "
+                         "recent service time exceeds its baseline by this "
+                         "factor (<=1 disables detection — the count-based "
+                         "ablation)")
     args = ap.parse_args()
 
     cfg = get_smoke(args.arch)

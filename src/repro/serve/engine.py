@@ -37,6 +37,7 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core.a2ws import PoolCollapsed, RunStats, WorkerPool
+from repro.core.limp import LimpConfig, SlowdownSchedule
 from repro.core.policy import SchedPolicy
 from repro.models import lm
 from repro.models.config import ModelConfig
@@ -298,6 +299,18 @@ class AutoscaleConfig:
       consecutive samples and the pool is above ``min_replicas``: the
       highest-numbered live replica is drained back out (LIFO, so the boot
       replicas — typically the fast reserved capacity — stay).
+
+    **Straggler interaction** (DESIGN.md §Straggler plane): when the pool
+    runs with limp detection (``ServePool(limp=...)``), a flagged replica is
+    degraded capacity the backlog bound must not count on.  With
+    ``limp_scale_out`` the scale-out test divides the backlog by HEALTHY
+    replicas only (live minus limping), so a limping replica reads as load
+    and triggers a surge replica early.  Once the scheduler has stripped a
+    limping replica's deque (the re-pricing path), ``drain_limping_ticks``
+    consecutive samples of flagged-and-empty drain it out of the pool like
+    ``retire_replica(drain=True)`` — recorded as a ``"limp"`` scale event —
+    guarded by ``min_replicas``.  Both knobs are inert when limp detection
+    is off (nothing ever flags).
     """
 
     factory: Callable[[int], Replica]  # worker id -> new Replica
@@ -306,6 +319,8 @@ class AutoscaleConfig:
     high_pending_per_replica: float = 4.0
     idle_ticks_to_retire: int = 3
     interval: float = 0.02
+    limp_scale_out: bool = True
+    drain_limping_ticks: int = 3
 
 
 class ServeFuture:
@@ -390,12 +405,23 @@ class ServePool:
         cost_class_bounds: Sequence[float] | None = None,
         cost_class_fn: Callable[[dict], int] | None = None,
         num_classes: int | None = None,
+        slowdown: SlowdownSchedule | None = None,
+        limp: LimpConfig | None = None,
     ):
         self.replicas = replicas
         self.radius = radius
         self.seed = seed
         self.policy = policy
         self.autoscale = autoscale
+        # Straggler plane (DESIGN.md §Straggler plane): ``slowdown`` scripts
+        # degraded-but-alive faults into the replica runtime; ``limp``
+        # enables the owner-side detector that re-prices a limping replica's
+        # queue, stops routing submits to it, and (with autoscale) drains it.
+        self.slowdown = slowdown
+        self.limp = limp
+        #: (wall time, replica id, flagged) limp-detector transitions —
+        #: live view while serving, snapshotted across shutdown().
+        self.limp_log: list[tuple[float, int, bool]] = []
         if cost_class_bounds is not None and cost_class_fn is not None:
             raise ValueError(
                 "cost_class_bounds and cost_class_fn are mutually exclusive"
@@ -415,7 +441,7 @@ class ServePool:
         else:
             self.cost_class_fn = None
             self.num_classes = 1
-        #: (wall time, "out" | "in", worker id, pending at decision)
+        #: (wall time, "out" | "in" | "limp", worker id, pending at decision)
         self.scale_events: list[tuple[float, str, int, int]] = []
         self.peak_live = len(replicas)
         self._scale_lock = threading.Lock()
@@ -468,7 +494,12 @@ class ServePool:
                 else lambda fut: classify(fut.request)
             ),
             num_classes=self.num_classes,
+            slowdown=self.slowdown,
+            limp=self.limp,
         )
+        # Share the runtime's transition log so limp telemetry stays
+        # readable after shutdown() drops the runtime reference.
+        self.limp_log = rt.limp_log
         # If the LAST replica dies, nothing will ever serve the queued
         # requests — fail their futures immediately instead of letting
         # result() (and submit_all) hang forever.
@@ -500,6 +531,23 @@ class ServePool:
             i for i in range(rt.num_workers)
             if not rt.dead[i] and not rt.workers[i].retiring
         ]
+
+    def limping_replicas(self) -> list[int]:
+        """Ids of LIVE replicas the limp detector currently flags (always
+        empty when the pool runs without ``limp=``)."""
+        rt = self._runtime
+        if rt is None:
+            return []
+        return [i for i in self.live_replicas() if rt.limping(i)]
+
+    def set_replica_slowdown(self, replica: int, factor: float) -> None:
+        """Inject a live slowdown multiplier on one replica (fault
+        injection / chaos testing): every task it executes stalls by
+        ``factor`` on top of any scripted schedule.  ``factor=1.0``
+        restores full speed."""
+        if self._runtime is None:
+            raise RuntimeError("pool not started")
+        self._runtime.set_worker_slowdown(replica, factor)
 
     def add_replica(
         self, replica: Replica | Callable[[int], Replica]
@@ -543,6 +591,7 @@ class ServePool:
         cfg = self.autoscale
         assert cfg is not None
         idle_ticks = 0
+        limp_ticks: dict[int, int] = {}  # replica -> consecutive flagged+empty
         while not self._scale_stop.wait(cfg.interval):
             rt = self._runtime
             if rt is None:
@@ -550,8 +599,37 @@ class ServePool:
             live = self.live_replicas()
             self.peak_live = max(self.peak_live, len(live))
             pending = rt.pending()
+            limping = [i for i in live if rt.limping(i)]
+            # A limping replica that the scheduler has already stripped
+            # (empty deque) is pure drag: drain it like retire_replica
+            # once it stays flagged-and-empty long enough.  One drain per
+            # sample keeps the pool's reaction conservative.
+            limp_ticks = {
+                i: (limp_ticks.get(i, 0) + 1
+                    if len(rt.workers[i].deque) == 0 else 0)
+                for i in limping
+            }
+            ripe = [
+                i for i, t in limp_ticks.items()
+                if t >= cfg.drain_limping_ticks
+            ]
+            if ripe and len(live) > cfg.min_replicas:
+                victim = min(ripe)
+                self.retire_replica(victim, drain=True)
+                self.scale_events.append(
+                    (time.perf_counter(), "limp", victim, pending)
+                )
+                del limp_ticks[victim]
+                limping.remove(victim)
+                live.remove(victim)  # retiring now — not capacity
+            # Limping replicas are degraded capacity: with limp_scale_out
+            # the saturation bound counts healthy replicas only, so a
+            # straggler reads as backlog and pulls in a surge replica.
+            healthy = (
+                len(live) - len(limping) if cfg.limp_scale_out else len(live)
+            )
             if (
-                pending > cfg.high_pending_per_replica * max(len(live), 1)
+                pending > cfg.high_pending_per_replica * max(healthy, 1)
                 and len(live) < cfg.max_replicas
             ):
                 # The factory receives the ACTUAL slot id (recycled slots

@@ -1,0 +1,450 @@
+"""Straggler/limplock plane (DESIGN.md §Straggler plane): slowdown fault
+injection, adaptive limp detection/re-pricing, and cross-plane conformance —
+a scripted mid-run slowdown must produce the same qualitative steal-volume
+shift in the threaded WorkerPool and the discrete-event simulator, for every
+policy.  Plus the serve-plane integration (limp-aware autoscaler) and the
+acceptance scenario (adaptive vs count-based A2WS under a 16x limplock)."""
+
+import math
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from _hypo import given, settings, st
+from repro.core.a2ws import WorkerPool
+from repro.core.info_ring import RingInfo
+from repro.core.limp import (
+    LimpConfig,
+    LimpState,
+    SlowdownEvent,
+    SlowdownSchedule,
+    normalize_duration,
+)
+from repro.core.policy import POLICIES
+from repro.core.simulator import SimConfig, simulate
+from repro.core.steal import weighted_overlay
+from repro.serve.engine import AutoscaleConfig, Replica, ServePool
+
+#: calibrated virtual costs (tests/test_policy.py): scheduling overheads
+#: small vs the 12 ms task grain, so sim makespans mirror the threaded pool
+SIM_COSTS = dict(
+    hop_latency=1e-4, info_poll=1e-3, comm_cell_cost=0.0, steal_latency=5e-4,
+    steal_per_task=1e-5, retry_interval=1e-3, token_base=1e-4,
+    token_per_node=0.0, request_rtt=2e-4, leader_service=1e-4,
+    leader_overhead=0.0,
+)
+
+
+# ------------------------------------------------------------ fault primitives
+def test_slowdown_event_step_transient_ramp():
+    step = SlowdownEvent(0, 10.0, 16.0)
+    assert step.factor_at(9.999) == 1.0
+    assert step.factor_at(10.0) == 16.0
+    assert step.factor_at(1e9) == 16.0  # step faults never recover
+    trans = SlowdownEvent(0, 10.0, 16.0, duration=5.0)
+    assert trans.factor_at(12.0) == 16.0
+    assert trans.factor_at(15.0) == 1.0  # end is exclusive
+    ramp = SlowdownEvent(0, 10.0, 16.0, ramp=10.0)
+    assert ramp.factor_at(10.0) == 1.0
+    assert ramp.factor_at(15.0) == pytest.approx(8.5)  # halfway up
+    assert ramp.factor_at(20.0) == 16.0
+
+
+def test_slowdown_schedule_compounds_overlapping_events():
+    sched = SlowdownSchedule((
+        SlowdownEvent(1, 0.0, 4.0),
+        SlowdownEvent(1, 5.0, 2.0, duration=5.0),
+        SlowdownEvent(2, 0.0, 3.0),
+    ))
+    assert sched.factor_at(1, 2.0) == 4.0
+    assert sched.factor_at(1, 6.0) == 8.0  # overlapping faults multiply
+    assert sched.factor_at(1, 11.0) == 4.0
+    assert sched.factor_at(0, 6.0) == 1.0
+    assert sched.workers() == {1, 2}
+
+
+def test_slowdown_event_validation():
+    with pytest.raises(ValueError):
+        SlowdownEvent(-1, 0.0, 2.0)
+    with pytest.raises(ValueError):
+        SlowdownEvent(0, -1.0, 2.0)
+    with pytest.raises(ValueError):
+        SlowdownEvent(0, 0.0, 0.0)  # factor must be positive
+    with pytest.raises(ValueError):
+        SlowdownEvent(0, 0.0, 2.0, duration=0.0)
+    with pytest.raises(ValueError):
+        SlowdownEvent(0, 0.0, 2.0, ramp=-1.0)
+
+
+# ------------------------------------------------------------- limp detector
+def test_limp_state_flags_and_recovers_with_hysteresis():
+    st_ = LimpState(LimpConfig(limp_factor=4.0, recover_factor=2.0,
+                               recent_alpha=0.5, min_samples=1))
+    for _ in range(8):
+        st_.observe(1.0)
+    assert not st_.evaluate()
+    baseline = st_.baseline
+    # one 16x completion pushes recent to ~8.5x baseline -> flag
+    st_.observe(16.0)
+    assert st_.evaluate()
+    # the baseline FREEZES while limping: the fault must not become normal
+    st_.observe(16.0)
+    assert st_.evaluate()
+    assert st_.baseline == baseline
+    # recovery: fast completions pull recent back under recover_factor
+    for _ in range(4):
+        st_.observe(1.0)
+    assert not st_.evaluate()
+
+
+def test_limp_state_peer_fallback_before_min_samples():
+    """A worker that is limped from its very first completion has no healthy
+    baseline of its own — the peer median stands in until min_samples."""
+    st_ = LimpState(LimpConfig(min_samples=3))
+    st_.observe(16.0)
+    assert st_.evaluate(peer_ref=1.0), "boot-limped worker must flag via peers"
+    assert not LimpState(LimpConfig(min_samples=3)).evaluate(), \
+        "no samples + no peers -> verdict unchanged (healthy)"
+
+
+def test_recovery_half_life_pinned():
+    """Regression pin (DESIGN.md §Straggler plane): at recent_alpha=0.5 the
+    recent EWMA sheds half the fault's excess per completion — a transient
+    slowdown is forgiven in O(1) completions, never blacklisted forever."""
+    assert LimpConfig(recent_alpha=0.5).recovery_half_life() == pytest.approx(1.0)
+    assert LimpConfig(recent_alpha=0.25).recovery_half_life() == pytest.approx(
+        math.log(0.5) / math.log(0.75)
+    )
+    assert LimpConfig(recent_alpha=1.0).recovery_half_life() == 1.0
+
+
+def test_normalize_duration_rescales_classes():
+    class_t = np.array([1.0, 8.0])
+    mean = float(np.nanmean(class_t))
+    # a heavy-class completion is scaled DOWN so it cannot false-flag
+    assert normalize_duration(8.0, 1, class_t) == pytest.approx(8.0 * mean / 8.0)
+    assert normalize_duration(1.0, 0, class_t) == pytest.approx(1.0 * mean)
+    # degenerate cases: no class info -> identity
+    assert normalize_duration(3.0, 0, None) == 3.0
+    assert normalize_duration(3.0, 1, np.array([float("nan"), float("nan")])) == 3.0
+
+
+def test_limp_config_validation():
+    with pytest.raises(ValueError):
+        LimpConfig(limp_factor=1.0)
+    with pytest.raises(ValueError):
+        LimpConfig(recover_factor=5.0)  # must stay below limp_factor
+    with pytest.raises(ValueError):
+        LimpConfig(recent_alpha=0.0)
+    with pytest.raises(ValueError):
+        LimpConfig(min_samples=0)
+
+
+# ----------------------------------------------- scenario validators (with_())
+def test_sim_slowdown_target_never_joins_rejected():
+    cfg = SimConfig(speeds=np.ones(2), num_tasks=10)
+    with pytest.raises(ValueError, match="never joins"):
+        cfg.with_(slowdowns=(SlowdownEvent(5, 1.0, 4.0),))
+
+
+def test_sim_slowdown_before_join_rejected():
+    cfg = SimConfig(speeds=np.ones(2), num_tasks=10, joins=((10.0, 1.0),))
+    with pytest.raises(ValueError, match="precedes its join"):
+        cfg.with_(slowdowns=(SlowdownEvent(2, 5.0, 4.0),))
+    # starting AFTER the join is fine
+    cfg.with_(slowdowns=(SlowdownEvent(2, 11.0, 4.0),))
+
+
+def test_sim_slowdown_after_retire_rejected():
+    cfg = SimConfig(speeds=np.ones(3), num_tasks=10, retires=((5.0, 1),))
+    with pytest.raises(ValueError, match="already retired"):
+        cfg.with_(slowdowns=(SlowdownEvent(1, 6.0, 4.0),))
+    # the same mis-script straight through the constructor is caught at
+    # simulate() time (with_() is bypassable by construction)
+    bad = SimConfig(speeds=np.ones(3), num_tasks=10, retires=((5.0, 1),),
+                    slowdowns=(SlowdownEvent(1, 6.0, 4.0),))
+    with pytest.raises(ValueError, match="already retired"):
+        simulate("a2ws", bad)
+
+
+def test_threaded_set_worker_slowdown_validates():
+    pool = WorkerPool([], 2, lambda w, t: None, open_arrival=True)
+    with pytest.raises(ValueError):
+        pool.set_worker_slowdown(7, 2.0)
+    with pytest.raises(ValueError):
+        pool.set_worker_slowdown(0, 0.0)
+    with pytest.raises(ValueError):
+        pool.set_worker_slowdown(0, float("inf"))
+    pool.set_worker_slowdown(0, 2.0)
+    pool.set_worker_slowdown(0, 1.0)
+
+
+# ------------------------------------------- cross-plane conformance, per policy
+@pytest.mark.parametrize("policy", list(POLICIES))
+def test_cross_plane_slowdown_conformance(policy):
+    """One seeded workload shape through BOTH planes with the same scripted
+    fault: worker 1 limps to 16x early in a closed run.  In each plane the
+    limper must end up executing clearly fewer tasks than the healthy mean
+    (the steal plane routes around it) while every task still executes
+    exactly once."""
+    n, base = 48, 0.012
+
+    # -- simulated (virtual time, calibrated costs)
+    cfg = SimConfig(
+        speeds=np.ones(4), num_tasks=n, task_cost=base, noise=0.0, seed=0,
+        slowdowns=(SlowdownEvent(1, base, 16.0),), limp=LimpConfig(),
+        **SIM_COSTS,
+    )
+    sim = simulate(policy, cfg)
+    assert sum(sim.per_node_tasks) == n
+    healthy = [sim.per_node_tasks[j] for j in (0, 2, 3)]
+    assert sim.per_node_tasks[1] < np.mean(healthy), (
+        f"sim limper kept its share: {sim.per_node_tasks}"
+    )
+    assert sim.moved_tasks > 0, "sim plane never moved work off the limper"
+
+    # -- threaded (same shape; sleep-based tasks keep the GIL fair — a
+    # busy-wait straggler would starve the very threads that should
+    # out-run it)
+    done, lock = [], threading.Lock()
+
+    def task_fn(wid, task):
+        time.sleep(base)
+        with lock:
+            done.append(task)
+
+    pool = WorkerPool(
+        list(range(n)), 4, task_fn, policy=policy, seed=0,
+        slowdown=SlowdownSchedule((SlowdownEvent(1, base, 16.0),)),
+        limp=LimpConfig(),
+    )
+    stats = pool.run()
+    assert sorted(done) == list(range(n))
+    assert sum(stats.per_worker_tasks) == n
+    healthy = [stats.per_worker_tasks[j] for j in (0, 2, 3)]
+    assert stats.per_worker_tasks[1] < np.mean(healthy), (
+        f"threaded limper kept its share: {stats.per_worker_tasks}"
+    )
+    assert sum(s[3] for s in stats.steals) > 0, "threaded plane never stole"
+
+
+def test_sim_limp_detection_fires_and_reroutes_open_arrival():
+    """Open arrival + detection: the detector flags the limper (one slow
+    completion is enough at the defaults), routing skips it from then on,
+    and thieves strip its queue — it serves almost nothing post-fault."""
+    cfg = SimConfig(
+        speeds=np.ones(4), num_tasks=200, task_cost=1.0, seed=0,
+        arrival="poisson", arrival_rate=1.4,
+        slowdowns=(SlowdownEvent(1, 20.0, 16.0),), limp=LimpConfig(),
+    )
+    res = simulate("a2ws", cfg)
+    flags = [(t, w) for t, w, f in res.limp_events if f]
+    assert flags and flags[0][1] == 1
+    t_flag = flags[0][0]
+    # detection needs one slow completion: ~16x one task's service time
+    assert 20.0 < t_flag < 20.0 + 16.0 * 1.5 + 3.0
+    # post-flag the limper serves only the rate-limited probation canaries
+    # (exponential backoff: O(log T) of them), never a routed share
+    post = [1 for nd, s, _e in res.records if nd == 1 and s > t_flag]
+    assert len(post) <= 6, f"flagged limper kept serving: {len(post)} tasks"
+    healthy = [res.per_node_tasks[j] for j in (0, 2, 3)]
+    assert res.per_node_tasks[1] < np.mean(healthy) / 2
+
+
+# ------------------------------------------------- hypothesis property (ring)
+@settings(max_examples=40, deadline=None)
+@given(
+    ops=st.lists(
+        st.tuples(
+            st.integers(min_value=0, max_value=2),   # 0=publish 1=comm 2=limp
+            st.integers(min_value=0, max_value=5),   # worker
+            st.floats(min_value=0.0, max_value=64.0, allow_nan=False),
+            st.floats(min_value=1e-6, max_value=64.0, allow_nan=False),
+        ),
+        max_size=60,
+    )
+)
+def test_ring_versions_monotone_and_overlay_finite_under_limp(ops):
+    """Property (DESIGN.md §Straggler plane): under ARBITRARY interleavings
+    of publishes, ring communication and limp-flag flips — including the
+    collapsed-t re-pricing a flagged owner publishes — every per-cell
+    version stays monotonically non-decreasing and the work-weighted
+    overlay keeps producing finite, non-negative prices."""
+    P, C = 6, 2
+    ri = RingInfo(P, radius=2, num_classes=C)
+    limping = [False] * P
+    for kind, w, a, b in ops:
+        prev = ri.version.copy()
+        if kind == 0:
+            nc = np.array([a % 7, b % 7])
+            tc = np.array([b, float("nan") if a < 1.0 else a * b])
+            ri.update_local(w, a + nc.sum(), b, nc, tc, limp_i=limping[w])
+        elif kind == 1:
+            ri.communicate(w)
+        else:
+            limping[w] = not limping[w]
+            # a flagged owner re-prices: publish collapsed t (recent EWMA)
+            t_pub = max(b, 16.0 * b) if limping[w] else b
+            ri.update_local(w, a, t_pub, limp_i=limping[w])
+        assert (ri.version >= prev).all(), "a cell version went backwards"
+        n, t, _raw, _win, nc_v, tc_v, limp_v = ri.view_window_all(w)
+        assert limp_v.dtype == np.bool_
+        queued = np.maximum(n, 0.0)
+        n_w, t_w, queued_w, unit, qtasks, rel = weighted_overlay(
+            np.maximum(n, 0.0), np.maximum(t, 0.0), queued, nc_v, tc_v
+        )
+        for arr in (n_w, t_w, queued_w, unit, qtasks, rel):
+            assert np.isfinite(arr).all(), "overlay produced non-finite price"
+        assert (n_w >= 0).all() and (queued_w >= 0).all()
+        assert (unit > 0).all() and (rel > 0).all()
+
+
+# ------------------------------------------------- transient-recovery regression
+def test_sim_transient_slowdown_recovers_and_unflags():
+    """Regression: a TRANSIENT fault (recovers after `duration`) must not
+    blacklist the worker forever — the detector unflags it within a few
+    healthy completions (recovery half-life is ~1 completion at the default
+    recent_alpha=0.5) and it serves real work again."""
+    cfg = SimConfig(
+        speeds=np.ones(4), num_tasks=300, task_cost=1.0, seed=0,
+        arrival="poisson", arrival_rate=1.4,
+        slowdowns=(SlowdownEvent(1, 20.0, 16.0, duration=30.0),),
+        limp=LimpConfig(),
+    )
+    res = simulate("a2ws", cfg)
+    ev = [(t, f) for t, w, f in res.limp_events if w == 1]
+    assert [f for _, f in ev][:2] == [True, False], f"no flag/unflag cycle: {ev}"
+    t_recover = [t for t, f in ev if not f][0]
+    post = [1 for nd, s, _e in res.records if nd == 1 and s > t_recover]
+    assert len(post) >= 5, (
+        f"recovered worker permanently blacklisted: served {len(post)} after "
+        f"unflagging at t={t_recover:.1f}"
+    )
+
+
+def test_threaded_transient_slowdown_recovers():
+    """The same forgiveness on real threads: flag under an injected live
+    slowdown, unflag after it is lifted, and the worker serves again."""
+    pool = WorkerPool([], 2, lambda w, t: time.sleep(0.004),
+                      policy="a2ws", open_arrival=True, seed=0,
+                      limp=LimpConfig())
+    pool.start()
+    pool.submit_many(range(20))
+    deadline = time.time() + 5.0
+    while pool.pending() and time.time() < deadline:
+        time.sleep(0.002)
+    pool.set_worker_slowdown(1, 12.0)
+    pool.submit_many(range(20, 40))
+    deadline = time.time() + 10.0
+    while not pool.limping(1) and time.time() < deadline:
+        time.sleep(0.002)
+    assert pool.limping(1), "injected slowdown never flagged"
+    pool.set_worker_slowdown(1, 1.0)
+    # flagged workers still pop their OWN queue, so healthy completions keep
+    # arriving and the recent EWMA forgives within a few of them
+    deadline = time.time() + 10.0
+    while pool.limping(1) and time.time() < deadline:
+        pool.submit_many(range(40, 44), worker=1)
+        time.sleep(0.01)
+    assert not pool.limping(1), "recovered worker stayed blacklisted"
+    flips = [f for _t, w, f in pool.limp_log if w == 1]
+    assert flips[:2] == [True, False]
+    pool.drain()
+    stats = pool.join()
+    assert sum(stats.per_worker_tasks) == pool.done_counter.load()
+    pool_tasks = stats.per_worker_tasks
+    assert pool_tasks[1] > 0
+
+
+# ----------------------------------------------------------------- serve plane
+def test_servepool_limp_detection_and_autoscaler_drain():
+    """Tentpole serve integration: a replica limping mid-serve is flagged
+    and drained out like retire_replica(drain=True) once the scheduler has
+    stripped its queue — recorded as a 'limp' scale event.  (Scale-out and
+    idle-retire are disabled via unreachable bounds so the ONLY membership
+    change is the limp-drain under test — recycling/idle races would make
+    the accounting below ambiguous.)"""
+    def gen(req):
+        time.sleep(0.01)
+        return {"ok": True}
+
+    pool = ServePool(
+        [Replica(f"r{i}", gen) for i in range(3)],
+        seed=0,
+        slowdown=SlowdownSchedule((SlowdownEvent(1, 0.25, 16.0),)),
+        limp=LimpConfig(),
+        autoscale=AutoscaleConfig(
+            factory=lambda wid: Replica(f"s{wid}", gen),
+            min_replicas=2, max_replicas=3,
+            high_pending_per_replica=1e9, idle_ticks_to_retire=10**9,
+            drain_limping_ticks=3, interval=0.01,
+        ),
+    )
+    pool.start()
+    rng = np.random.default_rng(0)
+    futs = []
+    for _ in range(120):
+        time.sleep(float(rng.exponential(1.0 / 80.0)))
+        futs.append(pool.submit({"x": 1}))
+    for f in futs:
+        f.result(timeout=60)
+    deadline = time.time() + 5.0
+    while 1 in pool.live_replicas() and time.time() < deadline:
+        time.sleep(0.01)
+    assert any(w == 1 and f for _t, w, f in pool.limp_log), "never flagged"
+    assert any(e[1] == "limp" and e[2] == 1 for e in pool.scale_events), (
+        f"limping replica never limp-drained: {pool.scale_events}"
+    )
+    assert 1 not in pool.live_replicas()
+    stats = pool.shutdown()
+    assert sum(stats.per_worker_tasks) == 120
+    assert stats.per_worker_tasks[1] < 120 // 3, "limper kept its full share"
+
+
+def test_servepool_set_replica_slowdown_and_accessors():
+    pool = ServePool([Replica("r0", lambda r: {"ok": True}),
+                      Replica("r1", lambda r: {"ok": True})], limp=LimpConfig())
+    with pytest.raises(RuntimeError):
+        pool.set_replica_slowdown(0, 2.0)
+    assert pool.limping_replicas() == []
+    pool.start()
+    pool.set_replica_slowdown(1, 4.0)
+    with pytest.raises(ValueError):
+        pool.set_replica_slowdown(1, -1.0)
+    assert pool.limping_replicas() == []  # injected but not yet detected
+    pool.shutdown()
+
+
+# ------------------------------------------------------------ acceptance (slow)
+@pytest.mark.slow
+def test_limplock_acceptance_adaptive_vs_count():
+    """ISSUE acceptance: one worker of four limps to 16x mid-run under open
+    arrivals.  Over >= 5 seeds, adaptive re-pricing keeps the median p99
+    within ~1.5x of the no-fault baseline while the count-based ablation
+    (limp=None — bit-for-bit the pre-straggler-plane scheduler) degrades by
+    >= 3x.  The same grid is archived by benchmarks/limplock.py as
+    BENCH_limplock.json."""
+    ratios = {"adaptive": [], "count": []}
+    for seed in range(5):
+        base = SimConfig(
+            speeds=np.ones(4), num_tasks=3600, task_cost=1.0, seed=seed,
+            arrival="poisson", arrival_rate=1.4,
+            slowdowns=(SlowdownEvent(1, 60.0, 16.0),),
+        )
+        p99 = {}
+        for name, cfg in (
+            ("no_fault", base.with_(slowdowns=())),
+            ("adaptive", base.with_(limp=LimpConfig())),
+            ("count", base),
+        ):
+            res = simulate("a2ws", cfg)
+            assert sum(res.per_node_tasks) == 3600
+            p99[name] = res.latency_percentiles((99.0,))[99.0]
+        ratios["adaptive"].append(p99["adaptive"] / p99["no_fault"])
+        ratios["count"].append(p99["count"] / p99["no_fault"])
+    med_a = float(np.median(ratios["adaptive"]))
+    med_c = float(np.median(ratios["count"]))
+    assert med_a <= 1.5, f"adaptive p99 ratio {med_a:.2f} (per-seed {ratios})"
+    assert med_c >= 3.0, f"count-based p99 ratio {med_c:.2f} — limplock gone?"
