@@ -1,0 +1,99 @@
+"""Two-level hierarchy headline (DESIGN.md §Hierarchy): flat vs hierarchical
+A2WS at P = 512 in the virtual-time plane, plus the K×ρ cell-shape sweep.
+
+The regime is short tasks (task_cost = 2 s) on the tiled Table-2 C4
+heterogeneous mix: with tasks this short the info plane dominates — a flat
+ring pays O(P)-radius per-boundary communication and multi-second relay
+staleness, while cells pay O(ρ) and stay fresh, so the hierarchy wins BOTH
+makespan and per-boundary overhead.  ``headline`` records the flat-vs-hier
+pair; ``sweep`` walks K (number of cells, ρ = P/K members each) to show the
+cost bathtub — K too small re-creates the flat ring, K too large starves
+intra-cell stealing and leans on the (batched, slower) leader plane.
+
+The flat baseline is the expensive leg (its Python view loop is O(radius²)
+per boundary), so it runs once at seed 0; hierarchical legs are cheap and
+sweep K at the same config.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+import sys
+sys.path.insert(0, "src")
+from repro.core.policy import HierarchicalA2WSPolicy  # noqa: E402
+from repro.core.simulator import SimConfig, simulate, table2_speeds  # noqa: E402
+
+SIZE = 512
+TASK_COST = 2.0
+SWEEP_K = (8, 16, 23, 32, 64)
+
+
+def _leg(policy, cfg) -> dict:
+    t0 = time.perf_counter()
+    res = simulate(policy, cfg)
+    wall = time.perf_counter() - t0
+    out = {
+        "makespan": res.makespan,
+        "steals": res.steals,
+        "moved": res.moved_tasks,
+        "boundaries": res.boundaries,
+        "wall_s": wall,
+        "us_per_boundary": wall / max(res.boundaries, 1) * 1e6,
+    }
+    if isinstance(policy, HierarchicalA2WSPolicy):
+        out["num_cells"] = policy.cells.num_cells
+        out["xcell_steals"] = policy.xcell_steals
+        out["xcell_moved"] = policy.xcell_moved
+    return out
+
+
+def run(seeds: int = 1, fast: bool = False, csv: bool = True):
+    p = SIZE
+    speeds = tuple(np.tile(table2_speeds("C4"), p // 64))
+    cfg = SimConfig(
+        speeds=speeds, num_tasks=p * (4 if fast else 6), seed=0,
+        task_cost=TASK_COST,
+    )
+
+    flat = _leg("a2ws", cfg)
+    hier = _leg(HierarchicalA2WSPolicy(p), cfg)
+    headline = {
+        "P": p,
+        "task_cost": TASK_COST,
+        "num_tasks": cfg.num_tasks,
+        "flat": flat,
+        "hier": hier,
+        "makespan_gain_pct": (1.0 - hier["makespan"] / flat["makespan"]) * 100,
+        "overhead_ratio": flat["us_per_boundary"] / hier["us_per_boundary"],
+    }
+    if csv:
+        print(
+            f"hier_flat_p{p},{flat['us_per_boundary']:.1f},"
+            f"makespan={flat['makespan']:.3f}"
+        )
+        print(
+            f"hier_cells_p{p},{hier['us_per_boundary']:.1f},"
+            f"makespan={hier['makespan']:.3f}_K={hier['num_cells']}"
+        )
+        print(
+            f"hier_gain,{headline['makespan_gain_pct']:.2f},"
+            f"overhead_ratio={headline['overhead_ratio']:.1f}x"
+        )
+
+    sweep = {}
+    for k in SWEEP_K:
+        leg = _leg(HierarchicalA2WSPolicy(p, num_cells=k), cfg)
+        sweep[f"K{k}"] = leg
+        if csv:
+            print(
+                f"hier_sweep_k{k},{leg['us_per_boundary']:.1f},"
+                f"makespan={leg['makespan']:.3f}_rho={p // k}"
+            )
+    return {"headline": headline, "sweep": sweep}
+
+
+if __name__ == "__main__":
+    run()

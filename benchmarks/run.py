@@ -56,6 +56,7 @@ def main() -> None:
         elastic,
         fig4_radius,
         fig5_tasks,
+        hierarchy,
         kernel_fd3d,
         limplock,
         open_arrival,
@@ -81,6 +82,7 @@ def main() -> None:
         "elastic": lambda: elastic.run(seeds=seeds, fast=args.fast),
         "weighted": lambda: weighted.run(seeds=seeds, fast=args.fast),
         "limplock": lambda: limplock.run(seeds=seeds, fast=args.fast),
+        "hierarchy": lambda: hierarchy.run(seeds=seeds, fast=args.fast),
         "roofline": lambda: roofline.run(),
     }
     only = set(args.only.split(",")) if args.only else None

@@ -1,6 +1,15 @@
-"""Scheduler micro-benchmarks: decision latency of the smart-stealing math
-and throughput of the threaded A2WS runtime on no-op tasks (scheduling
-overhead per task)."""
+"""Scheduler micro-benchmarks: per-boundary VIEW and STEAL-PLAN cost of the
+threaded substrate, flat vs two-level hierarchical, across ring sizes.
+
+The headline scaling question (DESIGN.md §Hierarchy): a flat A2WS boundary
+builds an O(P)-row view and walks an O(P)-radius window, so its cost grows
+with the ring; a hierarchical boundary is scoped to the worker's CELL
+(ρ ≈ √P members), so at fixed ρ its cost is flat in P.  This module measures
+both sides at P ∈ {32, 128, 512, 1024} on the real ``WorkerPool`` view
+builder (weighted mode, 3 task classes — the expensive path), plus the
+legacy ``plan_steal`` decision-latency and end-to-end no-op-task overhead
+metrics.
+"""
 
 from __future__ import annotations
 
@@ -10,11 +19,51 @@ from .common import timed
 
 import sys
 sys.path.insert(0, "src")
-from repro.core.a2ws import A2WSRuntime  # noqa: E402
+from repro.core.a2ws import A2WSRuntime, WorkerPool  # noqa: E402
+from repro.core.policy import HierarchicalA2WSPolicy  # noqa: E402
 from repro.core.steal import plan_steal  # noqa: E402
+
+SIZES = (32, 128, 512, 1024)
+NUM_CLASSES = 3
+RHO = 16  # fixed cell size for the scaling sweep: cost should be flat in P
+
+
+def _pool(p: int, policy) -> WorkerPool:
+    """A constructed-but-not-started pool: ``_make_view``/``on_boundary``
+    are callable without threads (the boundary hot path, isolated)."""
+    tasks = list(range(p * 4))
+    return WorkerPool(
+        tasks, p, lambda w, t: None, policy=policy, seed=0,
+        cost_class_fn=lambda t: t % NUM_CLASSES, num_classes=NUM_CLASSES,
+    )
+
+
+def _boundary_cost(pool: WorkerPool, worker: int, iters: int) -> tuple:
+    """(view_us, plan_us) for one worker's task boundary."""
+    _, t_view = timed(lambda: pool._make_view(worker), warmup=2, iters=iters)
+    view = pool._make_view(worker)
+    _, t_plan = timed(
+        lambda: pool.policy.on_boundary(view), warmup=2, iters=iters
+    )
+    return t_view * 1e6, t_plan * 1e6
 
 
 def run(csv: bool = True):
+    result: dict = {"view_us": {}, "plan_us": {}, "rho": RHO}
+    for p in SIZES:
+        iters = max(20, 2000 // p)
+        flat = _pool(p, "a2ws")
+        fv, fp = _boundary_cost(flat, p // 2, iters)
+        hier = _pool(p, HierarchicalA2WSPolicy(p, cell_size=RHO))
+        hv, hp = _boundary_cost(hier, p // 2, iters)
+        result["view_us"][f"P{p}"] = {"flat": fv, "hier": hv}
+        result["plan_us"][f"P{p}"] = {"flat": fp, "hier": hp}
+        if csv:
+            print(f"sched_view_flat_p{p},{fv:.1f},weighted_c{NUM_CLASSES}")
+            print(f"sched_view_hier_p{p},{hv:.1f},rho={RHO}")
+            print(f"sched_plan_flat_p{p},{fp:.1f},on_boundary")
+            print(f"sched_plan_hier_p{p},{hp:.1f},on_boundary")
+
     rng = np.random.default_rng(0)
     p = 128
     n = rng.integers(1, 100, p).astype(float)
@@ -36,7 +85,9 @@ def run(csv: bool = True):
             f"sched_runtime_overhead,{per_task*1e6:.0f},"
             f"per_task_us_4workers_200tasks"
         )
-    return {"plan_steal_us": t_plan * 1e6, "per_task_us": per_task * 1e6}
+    result["plan_steal_us"] = t_plan * 1e6
+    result["per_task_us"] = per_task * 1e6
+    return result
 
 
 if __name__ == "__main__":

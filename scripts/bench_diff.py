@@ -1,0 +1,98 @@
+"""Diff freshly generated BENCH_<name>.json perf records against the
+committed ones at the repo root.
+
+Timing leaves drift run-to-run (CI machines are noisy), so the check is
+STRUCTURAL, not numeric: it fails only when
+
+  * a benchmark named in ``--names`` produced no fresh record, or
+  * a fresh record LOST keys the committed record has (a silently dropped
+    metric is how a perf trajectory goes dark).
+
+Numeric drift is printed as an informational summary — the committed
+records themselves are refreshed by re-running
+``python -m benchmarks.run --fast --out-dir .`` and committing the result.
+
+    python scripts/bench_diff.py --fresh bench-results --names hierarchy,sched_micro
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+
+def leaf_keys(obj, prefix: str = "") -> set[str]:
+    """Dotted paths of every leaf in a nested dict."""
+    if isinstance(obj, dict) and obj:
+        out: set[str] = set()
+        for k, v in obj.items():
+            out |= leaf_keys(v, f"{prefix}{k}.")
+        return out
+    return {prefix.rstrip(".")}
+
+
+def leaf_get(obj, path: str):
+    for part in path.split("."):
+        if not isinstance(obj, dict) or part not in obj:
+            return None
+        obj = obj[part]
+    return obj
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fresh", required=True, help="dir with the new records")
+    ap.add_argument(
+        "--committed", default=".", help="dir with the committed records"
+    )
+    ap.add_argument(
+        "--names", default="",
+        help="comma-separated benchmark names that MUST have fresh records",
+    )
+    args = ap.parse_args()
+    fresh_dir = Path(args.fresh)
+    committed_dir = Path(args.committed)
+    names = [n for n in args.names.split(",") if n]
+
+    failures: list[str] = []
+    for name in names:
+        fresh_path = fresh_dir / f"BENCH_{name}.json"
+        committed_path = committed_dir / f"BENCH_{name}.json"
+        if not fresh_path.exists():
+            failures.append(f"{name}: no fresh record at {fresh_path}")
+            continue
+        fresh = json.loads(fresh_path.read_text())
+        if not committed_path.exists():
+            print(f"{name}: no committed baseline yet (first record) — OK")
+            continue
+        committed = json.loads(committed_path.read_text())
+        lost = leaf_keys(committed) - leaf_keys(fresh)
+        if lost:
+            failures.append(
+                f"{name}: fresh record lost keys: {sorted(lost)[:10]}"
+            )
+            continue
+        drifts = []
+        for path in sorted(leaf_keys(committed)):
+            old, new = leaf_get(committed, path), leaf_get(fresh, path)
+            if (
+                isinstance(old, (int, float)) and isinstance(new, (int, float))
+                and not isinstance(old, bool) and old
+            ):
+                rel = (new - old) / abs(old) * 100.0
+                if abs(rel) >= 10.0:
+                    drifts.append(f"  {path}: {old:.4g} -> {new:.4g} ({rel:+.0f}%)")
+        print(f"{name}: OK ({len(leaf_keys(committed))} keys)"
+              + (f", {len(drifts)} leaves drifted >=10%:" if drifts else ""))
+        for line in drifts[:20]:
+            print(line)
+
+    for f in failures:
+        print(f"FAIL {f}", file=sys.stderr)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -15,12 +15,13 @@ Layers:
 from .a2ws import A2WSRuntime, RunStats, WorkerPool, partition_tasks
 from .baselines import CTWSRuntime, LWRuntime
 from .deque import AtomicInt64, StealResult, TaskDeque
-from .info_ring import RingInfo
+from .info_ring import CellBoard, CellDigest, CellMap, DigestBoard, RingInfo
 from .limp import LimpConfig, LimpState, SlowdownEvent, SlowdownSchedule
 from .policy import (
     POLICIES,
     A2WSPolicy,
     CTWSPolicy,
+    HierarchicalA2WSPolicy,
     LWPolicy,
     PolicyView,
     RandomWSPolicy,
@@ -55,6 +56,7 @@ __all__ = [
     "PolicyView",
     "A2WSPolicy",
     "CTWSPolicy",
+    "HierarchicalA2WSPolicy",
     "LWPolicy",
     "RandomWSPolicy",
     "POLICIES",
@@ -63,6 +65,10 @@ __all__ = [
     "StealResult",
     "TaskDeque",
     "RingInfo",
+    "CellMap",
+    "CellBoard",
+    "CellDigest",
+    "DigestBoard",
     "LimpConfig",
     "LimpState",
     "SlowdownEvent",

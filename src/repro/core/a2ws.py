@@ -51,10 +51,10 @@ from typing import Callable, Sequence
 import numpy as np
 
 from .deque import AtomicInt64, TaskDeque
-from .info_ring import RingInfo
+from .info_ring import CellBoard, RingInfo
 from .limp import LimpConfig, LimpState, SlowdownSchedule, normalize_duration
 from .policy import PolicyView, SchedPolicy, make_policy
-from .steal import weighted_overlay
+from .steal import OverlayBuffers, weighted_overlay
 
 __all__ = [
     "WorkerPool",
@@ -154,7 +154,7 @@ class _WorkerState:
     __slots__ = (
         "deque", "executed", "runtime_sum", "ran_any", "start_time", "rng",
         "wake", "retiring", "drain_on_retire", "class_t", "nc_cache",
-        "limp_state", "slow_mult",
+        "limp_state", "slow_mult", "overlay_buf",
     )
 
     def __init__(
@@ -182,6 +182,10 @@ class _WorkerState:
         # scan is O(queue) under a lock and sits on the per-boundary hot
         # path, so it must only re-run when the deque actually changed.
         self.nc_cache: tuple[tuple[int, int], np.ndarray] | None = None
+        # Preallocated weighted-overlay scratch (steal.OverlayBuffers),
+        # lazily keyed on the (view size, num_classes) this worker last saw —
+        # per-worker, so reuse never races another boundary's view.
+        self.overlay_buf: OverlayBuffers | None = None
         # Per-worker wake event: a submit()/drain()/death sets EVERY event,
         # but each worker clears only its OWN — a busy worker's clear can
         # therefore never erase a wakeup meant for an idle sleeper (the
@@ -290,13 +294,26 @@ class WorkerPool:
             )
             for w in range(num_workers)
         ]
+        # Hierarchy scoping (DESIGN.md §Hierarchy): a policy that carries a
+        # CellMap gets one sub-board per cell and CELL-scoped views; the
+        # substrate keeps speaking global ids throughout.
+        self.cells = getattr(self.policy, "cells", None)
+        if self.cells is not None and self.cells.num_workers != num_workers:
+            raise ValueError(
+                f"policy cell map covers {self.cells.num_workers} workers, "
+                f"pool has {num_workers}"
+            )
         # The §2.1 information board exists only for ring policies; central
         # or probe-based policies (LW, CTWS, random) pay no cell traffic.
-        self.info = (
-            RingInfo(num_workers, self.radius, self.num_classes)
-            if self.policy.uses_ring
-            else None
-        )
+        if not self.policy.uses_ring:
+            self.info = None
+        elif self.cells is not None:
+            self.info = CellBoard(self.cells, self.num_classes)
+            # Hand the board to the policy so leader-level member migration
+            # can re-home sub-board columns (threaded plane only).
+            self.policy.bind_board(self.info)
+        else:
+            self.info = RingInfo(num_workers, self.radius, self.num_classes)
         self.done_counter = AtomicInt64(0)
         # Tasks ever made visible to the runtime (seed partition + submits).
         # Quiescence: submitted is bumped BEFORE the task is pushed, so
@@ -561,13 +578,19 @@ class WorkerPool:
                 self.num_workers = len(self.workers)
                 if not self._radius_explicit:
                     self.radius = max(1, round(0.2 * self.num_workers))
-                if self.info is not None:
+                if self.info is not None and self.cells is None:
                     self.info.grow(self.num_workers, self.radius)
             # (No own-cell publish here: the joiner's loop does it as its
             # first action — §2.2.1 elapsed-time self-report, as at boot —
             # and until then every thief prices the NaN cell preemptively.)
             self.alive.accumulate(1)
             self.policy.on_worker_join(wid, now)
+            if self.info is not None and self.cells is not None:
+                # Hierarchy ordering: the join hook HOMED the joiner (CellMap
+                # assign), so only now can its cell's sub-board grow to cover
+                # the new local slot.  Readers that race the gap clamp their
+                # member list to the board rows they copied (_ring_view).
+                self.info.ensure(wid)
             with self._log_lock:
                 self.membership_log.append((now, "join", wid))
             if on_assign is not None:
@@ -839,12 +862,13 @@ class WorkerPool:
         peer = float("nan")
         if st.samples < st.cfg.min_samples and self.info is not None:
             # Boot-limped fallback: the own baseline is not trusted yet, so
-            # reference the median published t of the live window peers.
-            raw = self.info.t[i]
+            # reference the median published t of the live window peers
+            # (cell-scoped under a hierarchy board — a limper is judged
+            # against ITS cell, not the whole pool).
             vals = [
-                float(raw[j])
-                for j in self.info.window(i)
-                if j != i and not self.dead[j] and raw[j] == raw[j]
+                t
+                for j, t in self.info.peer_raw_t(i)
+                if not self.dead[j] and t == t
             ]
             if vals:
                 peer = float(np.median(vals))
@@ -947,13 +971,19 @@ class WorkerPool:
         reads of remote state.  Over/under-estimates are absorbed by the
         Fig. 3b atomic adjust-and-correct protocol, exactly as in the paper.
 
-        Returns ``(n, t, queued, window, unit, qtasks, rel, ntasks, limp)``;
-        ``unit``/``qtasks``/``rel``/``ntasks`` are the work-weighted overlay
-        (None in count mode).  In weighted mode ``n``/``queued`` are measured
-        in equivalent reference-class tasks (DESIGN.md §Work-weighted
-        stealing) while ``qtasks`` keeps the task counts for integrality
-        guards and the Fig. 3b clamp.  ``limp`` is the delayed limp-flag row
-        (None when detection is off).
+        Returns ``(n, t, queued, window, unit, qtasks, rel, ntasks, limp,
+        members, nc, iview, rad)``; ``unit``/``qtasks``/``rel``/``ntasks``
+        are the work-weighted overlay (None in count mode).  In weighted mode
+        ``n``/``queued`` are measured in equivalent reference-class tasks
+        (DESIGN.md §Work-weighted stealing) while ``qtasks`` keeps the task
+        counts for integrality guards and the Fig. 3b clamp.  ``limp`` is the
+        delayed limp-flag row (None when detection is off).
+
+        Hierarchy scoping (DESIGN.md §Hierarchy): under a cell-mapped policy
+        every returned array speaks LOCAL cell slots and ``members`` carries
+        the local→global mapping (``-1`` = migration hole); flat boards
+        return ``members=None`` with ``iview=i`` and the pool radius — the
+        same loop runs either way, just over a different index set.
         """
         w = self.workers[i]
         # One board epoch for rows + window: a concurrent grow() can never
@@ -961,92 +991,148 @@ class WorkerPool:
         n_view, t_view, raw_t, window, nc_view, tc_view, limp_row = (
             self.info.view_window_all(i)
         )
+        m = len(n_view)
+        if self.cells is not None:
+            cell, iview = self.cells.locate(i)
+            mem = self.cells.members(cell)
+            # Clamp to the board rows copied above: a concurrent join may
+            # have appended a member slot the sub-board has not grown to
+            # cover yet (add_worker homes, then grows).
+            if len(mem) < m:
+                mem = mem + [-1] * (m - len(mem))
+            members = np.asarray(mem[:m], dtype=np.int64)
+            rad = self.cells.radius_of(cell)
+        else:
+            members = None
+            iview = i
+            rad = self.radius
         if self.limp_cfg is not None:
-            limp_row[i] = self._limping[i]  # own flag: ground truth, no lag
+            limp_row[iview] = self._limping[i]  # own flag: ground truth, no lag
         else:
             limp_row = None
         now = self.clock()
         elapsed = max(now - w.start_time, 1e-9)
-        queued = np.zeros(len(n_view))
-        for j in window:
-            if j == i:
-                queued[j] = len(w.deque)
-                if self.open_arrival:
-                    n_view[j] = queued[j]
+        queued = np.zeros(m)
+        for jl in window:
+            g = jl if members is None else int(members[jl])
+            if g < 0:
+                # Migration hole: no member behind this slot any more —
+                # empty, priced at speed ~0 so Eq. 5 never assigns it work.
+                queued[jl] = 0.0
+                t_view[jl] = 1e12
+                n_view[jl] = 0.0
                 continue
-            if self.dead[j]:
+            if jl == iview:
+                queued[jl] = len(w.deque)
+                if self.open_arrival:
+                    n_view[jl] = queued[jl]
+                continue
+            if self.dead[g]:
                 # Tombstoned worker: its info cells are frozen garbage.  Its
                 # RMA window (deque) is still readable — count the orphaned
                 # tasks directly and report speed ~0 so the fair share never
                 # assigns it anything.
-                queued[j] = len(self.workers[j].deque)
-                t_view[j] = 1e12
-                n_view[j] = (
-                    queued[j]
+                queued[jl] = len(self.workers[g].deque)
+                t_view[jl] = 1e12
+                n_view[jl] = (
+                    queued[jl]
                     if self.open_arrival
-                    else self.workers[j].executed + queued[j]
+                    else self.workers[g].executed + queued[jl]
                 )
                 continue
-            if np.isnan(raw_t[j]):
+            if np.isnan(raw_t[jl]):
                 # No report from j yet: preemptive wall-time estimate — j
                 # looks like it has finished 0 tasks in `elapsed` seconds.
-                t_view[j] = elapsed
+                t_view[jl] = elapsed
             if self.open_arrival:
                 # n_j IS the reported depth; no elapsed-time extrapolation —
                 # depth both drains (execution) and refills (arrivals), so
                 # decaying it would systematically under-count busy victims.
-                queued[j] = max(n_view[j], 0.0)
+                queued[jl] = max(n_view[jl], 0.0)
             else:
                 # Estimated executed count from speed; remaining = n_j - done.
-                done_est = min(elapsed / max(t_view[j], 1e-9), n_view[j])
-                queued[j] = max(n_view[j] - done_est, 0.0)
+                done_est = min(elapsed / max(t_view[jl], 1e-9), n_view[jl])
+                queued[jl] = max(n_view[jl] - done_est, 0.0)
         if not self.weighted:
-            return n_view, t_view, queued, window, None, None, None, None, limp_row
+            return (
+                n_view, t_view, queued, window, None, None, None, None,
+                limp_row, members, None, iview, rad,
+            )
         # ---- work-weighted overlay (DESIGN.md §Work-weighted stealing) ----
         # Ground-truth compositions where the thief may read them: its own
         # deque, and tombstoned deques (already ground-truth counted above).
-        nc_view[i] = self._queue_classes(w)
-        tc_view[i] = w.class_t
-        for j in window:
-            if j != i and self.dead[j]:
-                nc_view[j] = self._queue_classes(self.workers[j])
+        nc_view[iview] = self._queue_classes(w)
+        tc_view[iview] = w.class_t
+        for jl in window:
+            g = jl if members is None else int(members[jl])
+            if jl != iview and g >= 0 and self.dead[g]:
+                nc_view[jl] = self._queue_classes(self.workers[g])
         # Shared re-pricing (steal.weighted_overlay — ONE implementation for
-        # both planes): tombstones are frozen at their ~0-speed price.
-        frozen = np.fromiter(
-            (self.dead[j] for j in range(len(n_view))), dtype=bool,
-            count=len(n_view),
-        )
+        # both planes): tombstones (and migration holes) are frozen at their
+        # ~0-speed price.
+        if members is None:
+            frozen = np.fromiter(
+                (self.dead[j] for j in range(m)), dtype=bool, count=m,
+            )
+        else:
+            frozen = np.fromiter(
+                (members[jl] < 0 or self.dead[members[jl]] for jl in range(m)),
+                dtype=bool, count=m,
+            )
+        # Preallocated per-worker scratch: the overlay's temporaries dominate
+        # the per-boundary hot path at scale, and a boundary fully consumes
+        # its view before the next one starts, so reuse is safe.
+        buf = OverlayBuffers.ensure(w.overlay_buf, m, self.num_classes)
+        w.overlay_buf = buf
         n_w, t_w, queued_w, unit, qtasks, rel = weighted_overlay(
-            n_view, t_view, queued, nc_view, tc_view, frozen=frozen
+            n_view, t_view, queued, nc_view, tc_view, frozen=frozen, buf=buf
         )
         # n_view stays the COUNT estimate (n_w is a fresh array): the Fig. 3b
         # reconciliation writes the board's count-denominated n from it.
-        return n_w, t_w, queued_w, window, unit, qtasks, rel, n_view, limp_row
+        return (
+            n_w, t_w, queued_w, window, unit, qtasks, rel, n_view,
+            limp_row, members, nc_view, iview, rad,
+        )
 
     def _make_view(self, i: int) -> PolicyView:
         w = self.workers[i]
-        unit = qtasks = rel = ntasks = limp_row = None
+        unit = qtasks = rel = ntasks = limp_row = members = nc_view = None
+        iview, rad = i, self.radius
         if self.info is not None:
-            n_view, t_view, queued, window, unit, qtasks, rel, ntasks, limp_row = (
-                self._ring_view(i)
-            )
+            (
+                n_view, t_view, queued, window, unit, qtasks, rel, ntasks,
+                limp_row, members, nc_view, iview, rad,
+            ) = self._ring_view(i)
             num_workers = len(n_view)  # the board epoch's ring size
         else:
             n_view = t_view = queued = None
             num_workers = self.num_workers
             window = list(range(num_workers))
+        if members is None:
+            depth = lambda j: len(self.workers[j].deque)  # noqa: E731
+            alive = lambda j: not self.dead[j]  # noqa: E731
+        else:
+            # Scoped view: the policy speaks LOCAL slot indices; translate
+            # through the member map (holes read as empty tombstones).
+            mem = members
+            depth = lambda jl: (  # noqa: E731
+                len(self.workers[mem[jl]].deque) if mem[jl] >= 0 else 0
+            )
+            alive = lambda jl: (  # noqa: E731
+                mem[jl] >= 0 and not self.dead[mem[jl]]
+            )
         return PolicyView(
-            worker=i,
+            worker=iview,
             now=self.clock(),
             idle=len(w.deque) == 0,
             ran_any=w.ran_any,
             open_arrival=self.open_arrival,
-            radius=self.radius,
+            radius=rad,
             num_workers=num_workers,
             rng=w.rng,
             window=window,
-            depth=lambda j: len(self.workers[j].deque),
-            alive=lambda j: not self.dead[j],
+            depth=depth,
+            alive=alive,
             pending=self.pending,
             n_view=n_view,
             t_view=t_view,
@@ -1056,6 +1142,8 @@ class WorkerPool:
             rel=rel,
             ntasks=ntasks,
             limp=limp_row,
+            members=members,
+            nc_view=nc_view,
         )
 
     def _policy_boundary(self, i: int) -> bool:
@@ -1066,6 +1154,19 @@ class WorkerPool:
         plan = self.policy.on_boundary(view)
         if plan is None:
             return False
+        # Plans name GLOBAL victims (hierarchy policies translate before
+        # returning).  Under a scoped view, resolve the local row for the
+        # reconciliation below; an inter-cell victim has none — its board
+        # lives in another cell, so the steal executes but no cell is
+        # reconciled (CellBoard drops cross-cell record_remote anyway).
+        vloc = plan.victim
+        xcell = False
+        if view.members is not None:
+            hits = np.nonzero(view.members == plan.victim)[0]
+            if hits.size:
+                vloc = int(hits[0])
+            else:
+                xcell = True
         if plan.delay > 0.0:
             # Policy-priced dispatch latency (LW's leader round-trip),
             # charged in CLOCK units: the policy booked its gate against
@@ -1111,11 +1212,14 @@ class WorkerPool:
             # pre-overlay count vectors (n_w - queued_w is executed work in
             # reference units — writing that into n would double-scale on
             # the next view's re-pricing).
-            base_n = view.ntasks if view.ntasks is not None else view.n_view
-            base_q = view.qtasks if view.qtasks is not None else view.queued
-            done_est = max(
-                float(base_n[plan.victim]) - float(base_q[plan.victim]), 0.0
-            )
+            if xcell:
+                done_est = 0.0  # no local row; the record is dropped anyway
+            else:
+                base_n = view.ntasks if view.ntasks is not None else view.n_view
+                base_q = view.qtasks if view.qtasks is not None else view.queued
+                done_est = max(
+                    float(base_n[vloc]) - float(base_q[vloc]), 0.0
+                )
         if not result:
             self._failed_steals += 1
             # Table 1 row 3: thief marks the victim position dirty anyway —
@@ -1132,7 +1236,7 @@ class WorkerPool:
                     nc_corr = np.zeros(self.num_classes, dtype=np.float64)
                 self.info.record_remote(
                     i, plan.victim, float(corrected_n),
-                    self.info.t[i, plan.victim],
+                    self.info.belief_t(i, plan.victim),
                     nc_j=nc_corr,
                 )
             self.policy.on_steal_result(view, plan, 0, left)
@@ -1154,16 +1258,16 @@ class WorkerPool:
                 # The thief saw the classes of the loot first-hand: subtract
                 # them from the victim's published profile (clamped — the
                 # profile may have been stale already).
-                nc_corr = np.maximum(
-                    self.info.nc[i, plan.victim]
-                    - self._class_counts(result.tasks),
-                    0.0,
-                )
+                base_nc = self.info.belief_nc(i, plan.victim)
+                if base_nc is not None:
+                    nc_corr = np.maximum(
+                        base_nc - self._class_counts(result.tasks), 0.0
+                    )
             # Table 1 row 2: thief refreshes its own and the victim's cells.
             self._update_info(i)
             self.info.record_remote(
                 i, plan.victim, float(victim_n_new),
-                self.info.t[i, plan.victim],
+                self.info.belief_t(i, plan.victim),
                 nc_j=nc_corr,
             )
         self.policy.on_steal_result(view, plan, got, left)

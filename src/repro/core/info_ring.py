@@ -33,7 +33,7 @@ import numpy as np
 
 from .steal import neighborhood
 
-__all__ = ["RingInfo"]
+__all__ = ["RingInfo", "CellMap", "CellDigest", "DigestBoard", "CellBoard"]
 
 
 class RingInfo:
@@ -322,6 +322,23 @@ class RingInfo:
     def window(self, i: int) -> list[int]:
         return neighborhood(i, self.P, self.R)
 
+    def belief_t(self, i: int, j: int) -> float:
+        """What i currently believes about j's mean task time (raw cell)."""
+        return float(self.t[i, j])
+
+    def belief_nc(self, i: int, j: int) -> np.ndarray | None:
+        """i's current belief about j's per-class queue profile (the row the
+        Fig. 3b loot correction subtracts from)."""
+        return self.nc[i, j]
+
+    def peer_raw_t(self, i: int) -> list[tuple[int, float]]:
+        """(peer id, raw believed t) over i's window, excluding i — the
+        limp detector's boot-time peer-median reference (NaN = unreported).
+        On a :class:`CellBoard` the same call returns GLOBAL ids scoped to
+        i's cell, so callers need not know which board they hold."""
+        row = self.t[i]
+        return [(j, float(row[j])) for j in self.window(i) if j != i]
+
     def staleness(self, truth_version: np.ndarray) -> np.ndarray:
         """How many versions behind each process's view is (telemetry)."""
         return truth_version[None, :] - self.version
@@ -331,3 +348,350 @@ def _feq(a: float, b: float) -> bool:
     if a != a and b != b:  # both NaN
         return True
     return a == b
+
+
+# --------------------------------------------------------------------------- #
+#                      two-level hierarchy (DESIGN.md §Hierarchy)              #
+# --------------------------------------------------------------------------- #
+
+
+class CellMap:
+    """Global worker ids grouped into K cells, each cell a small local ring.
+
+    The flat ring's O(P) per-boundary view is what tops out at production
+    pool sizes; the hierarchy replaces it with K cells of ~ρ members, each
+    running ordinary intra-cell A2WS on its own sub-board (O(ρ) views), plus
+    a K-wide leader plane (:class:`DigestBoard`) for inter-cell balancing.
+
+    Mapping invariants:
+
+    * every global id maps to exactly one ``(cell, local slot)``;
+    * local slots are APPEND-ONLY — a member that migrates away leaves a
+      hole (``-1`` in ``members``) so every other member's slot, and hence
+      its sub-board column, stays stable (the same tombstone-not-remove
+      discipline the flat ring uses for dead workers);
+    * cells are never added or removed after construction (K is the
+      topology; joiners land in the smallest live cell).
+
+    Readers are lock-free: ``members`` returns a copy taken under the lock,
+    and ``cell_of``/``local_of`` are single atomic list reads.  Mutations
+    (``assign``/``migrate``) serialise on the internal lock.
+    """
+
+    def __init__(
+        self,
+        num_workers: int,
+        num_cells: int | None = None,
+        cell_size: int | None = None,
+        radius: int | None = None,
+    ) -> None:
+        if num_workers < 1:
+            raise ValueError("num_workers must be >= 1")
+        if num_cells is None and cell_size is None:
+            # Default topology: ~sqrt(P) cells — balances the O(ρ) intra-cell
+            # view against the O(K) leader plane.
+            num_cells = max(1, int(round(float(num_workers) ** 0.5)))
+        if num_cells is None:
+            num_cells = max(1, -(-num_workers // max(int(cell_size), 1)))
+        num_cells = int(num_cells)
+        if num_cells < 1:
+            raise ValueError("num_cells must be >= 1")
+        if num_cells > num_workers:
+            num_cells = num_workers
+        self.num_cells = num_cells
+        #: explicit intra-cell Eq. 5 radius; None = full-cell window
+        #: (ρ//2 — with ρ small the leader then digests its WHOLE cell)
+        self.cell_radius = radius
+        self._lock = threading.Lock()
+        # Contiguous block split, like the flat static partition: cell k
+        # gets ~P/K consecutive ids (locality-friendly when ids are ranks).
+        self._members: list[list[int]] = [[] for _ in range(num_cells)]
+        self._cell_of: list[int] = [0] * num_workers
+        self._local_of: list[int] = [0] * num_workers
+        base, rem = divmod(num_workers, num_cells)
+        g = 0
+        for c in range(num_cells):
+            k = base + (1 if c < rem else 0)
+            for _ in range(k):
+                self._cell_of[g] = c
+                self._local_of[g] = len(self._members[c])
+                self._members[c].append(g)
+                g += 1
+        #: bumps on every assign/migrate — membership-change telemetry and
+        #: the staleness hook for remapping property tests
+        self.version = 0
+
+    @property
+    def num_workers(self) -> int:
+        return len(self._cell_of)
+
+    def cell_of(self, worker: int) -> int:
+        return self._cell_of[worker]
+
+    def local_of(self, worker: int) -> int:
+        return self._local_of[worker]
+
+    def locate(self, worker: int) -> tuple[int, int]:
+        """Consistent ``(cell, local)`` pair under the lock — a concurrent
+        ``migrate`` can never hand a caller the old cell with the new local
+        slot (the torn read the two single-field getters would allow)."""
+        with self._lock:
+            return self._cell_of[worker], self._local_of[worker]
+
+    def members(self, cell: int) -> list[int]:
+        """Global ids by local slot (``-1`` = hole left by a migration)."""
+        with self._lock:
+            return list(self._members[cell])
+
+    def slots(self, cell: int) -> int:
+        return len(self._members[cell])
+
+    def live_size(self, cell: int) -> int:
+        with self._lock:
+            return sum(1 for g in self._members[cell] if g >= 0)
+
+    def radius_of(self, cell: int) -> int:
+        """Intra-cell Eq. 5 radius: the explicit override, else the
+        full-cell window (slots//2 — ``neighborhood`` then covers every
+        slot, so the leader's digest aggregates its whole cell)."""
+        m = max(len(self._members[cell]), 1)
+        if self.cell_radius is not None:
+            return int(max(0, min(self.cell_radius, m // 2)))
+        return m // 2
+
+    def assign(self, worker: int) -> int:
+        """Home a NEW global id (elastic join) in the smallest live cell and
+        return the cell.  Idempotent for already-mapped ids (a recycled
+        tombstone slot keeps its cell — its sub-board column is reset by the
+        substrate, not re-homed)."""
+        with self._lock:
+            if worker < len(self._cell_of):
+                return self._cell_of[worker]
+            if worker != len(self._cell_of):
+                raise ValueError(
+                    f"joins must be dense: expected id {len(self._cell_of)}, "
+                    f"got {worker}"
+                )
+            sizes = [
+                sum(1 for g in mem if g >= 0) for mem in self._members
+            ]
+            cell = int(min(range(self.num_cells), key=lambda c: sizes[c]))
+            self._cell_of.append(cell)
+            self._local_of.append(len(self._members[cell]))
+            self._members[cell].append(worker)
+            self.version += 1
+            return cell
+
+    def migrate(self, worker: int, new_cell: int) -> tuple[int, int]:
+        """Re-home ``worker`` to ``new_cell`` (leader-level member
+        migration).  The old slot becomes a hole; the worker gets a fresh
+        slot appended to the new cell.  Returns ``(old_cell, new_local)``."""
+        if not 0 <= new_cell < self.num_cells:
+            raise ValueError(f"cell {new_cell} out of range 0..{self.num_cells - 1}")
+        with self._lock:
+            old_cell = self._cell_of[worker]
+            if old_cell == new_cell:
+                return old_cell, self._local_of[worker]
+            self._members[old_cell][self._local_of[worker]] = -1
+            new_local = len(self._members[new_cell])
+            self._members[new_cell].append(worker)
+            # Order matters for lock-free readers resolving (cell, local):
+            # the new slot exists before the mapping flips to it.
+            self._local_of[worker] = new_local
+            self._cell_of[worker] = new_cell
+            self.version += 1
+            return old_cell, new_local
+
+
+class CellDigest:
+    """One cell's compact self-description on the leader plane: aggregate
+    queued work-seconds, task count, live membership, optional per-class
+    mix, and the richest member (the inter-cell steal target)."""
+
+    __slots__ = (
+        "cell", "time", "work", "tasks", "live", "top_worker", "top_queued",
+        "top_work", "mix", "seq",
+    )
+
+    def __init__(
+        self,
+        cell: int,
+        time: float,
+        work: float,
+        tasks: float,
+        live: int,
+        top_worker: int,
+        top_queued: int,
+        top_work: float = 0.0,
+        mix: np.ndarray | None = None,
+        seq: int = 0,
+    ) -> None:
+        self.cell = cell
+        self.time = time
+        self.work = work
+        self.tasks = tasks
+        self.live = live
+        self.top_worker = top_worker
+        self.top_queued = top_queued
+        self.top_work = top_work
+        self.mix = mix
+        self.seq = seq
+
+
+class DigestBoard:
+    """The K-wide leader ring: one digest slot per cell.
+
+    Single writer per slot (only the cell's current leader publishes), so a
+    publish is one atomic reference swap — the same §2.1 write-partition
+    argument as the flat board, scaled down to K entries.  Readers see a
+    consistent digest or an older one, never a torn write.  Transport delay
+    on the leader plane is not modelled (K is small and digests are
+    aggregates that age gracefully) — documented in DESIGN.md §Hierarchy.
+    """
+
+    def __init__(self, num_cells: int) -> None:
+        self.slots: list[CellDigest | None] = [None] * num_cells
+        self.publishes = 0  # telemetry (racy increment; indicative only)
+
+    def publish(self, digest: CellDigest) -> None:
+        prev = self.slots[digest.cell]
+        digest.seq = (prev.seq + 1) if prev is not None else 1
+        self.slots[digest.cell] = digest  # atomic reference swap
+        self.publishes += 1
+
+    def get(self, cell: int) -> CellDigest | None:
+        return self.slots[cell]
+
+    def peers(self, cell: int) -> list[CellDigest]:
+        """Every other cell's latest digest (skips never-published slots)."""
+        return [
+            d for c, d in enumerate(self.slots) if c != cell and d is not None
+        ]
+
+    def reset(self) -> None:
+        self.slots = [None] * len(self.slots)
+
+
+class CellBoard:
+    """K per-cell :class:`RingInfo` sub-boards behind GLOBAL-id addressing.
+
+    The substrate keeps talking in global worker ids; this facade maps every
+    call through the :class:`CellMap` to ``(cell, local)`` and the cell's
+    own sub-board.  Each sub-board is an ordinary flat RingInfo over the
+    cell's local slots — view, Eq. 5 radius, weighted overlay and limp
+    re-pricing all run unchanged, just scoped to ρ members — which is the
+    whole point: K=1 IS the flat scheduler (one sub-board of size P).
+
+    Cross-cell writes (``record_remote`` after an inter-cell steal) are
+    dropped: the victim's cell is not on the thief's board, and digests —
+    not cells — carry inter-cell knowledge.
+    """
+
+    def __init__(self, cells: CellMap, num_classes: int = 1) -> None:
+        self.cells = cells
+        self.C = num_classes
+        self.boards = [
+            RingInfo(
+                max(cells.slots(c), 1), cells.radius_of(c), num_classes
+            )
+            for c in range(cells.num_cells)
+        ]
+        self.digests = DigestBoard(cells.num_cells)
+        self.dropped_remote = 0  # telemetry: cross-cell record_remote drops
+
+    # ------------------------------------------------------------ delegation
+    def _loc(self, worker: int) -> tuple["RingInfo", int]:
+        c, loc = self.cells.locate(worker)
+        return self.boards[c], loc
+
+    @property
+    def puts(self) -> int:
+        return sum(b.puts for b in self.boards)
+
+    @property
+    def rounds(self) -> int:
+        return sum(b.rounds for b in self.boards)
+
+    def update_local(self, i: int, *a, **kw) -> None:
+        board, loc = self._loc(i)
+        board.update_local(loc, *a, **kw)
+
+    def communicate(self, i: int) -> int:
+        board, loc = self._loc(i)
+        return board.communicate(loc)
+
+    def record_remote(self, i: int, j: int, *a, **kw) -> None:
+        ci, li = self.cells.locate(i)
+        cj, lj = self.cells.locate(j)
+        if ci != cj:
+            self.dropped_remote += 1  # inter-cell: no shared board
+            return
+        self.boards[ci].record_remote(li, lj, *a, **kw)
+
+    def view_window_all(self, i: int, default_t: float | None = None):
+        board, loc = self._loc(i)
+        return board.view_window_all(loc, default_t)
+
+    def window(self, i: int) -> list[int]:
+        """GLOBAL ids of i's intra-cell window (holes dropped)."""
+        c, loc = self.cells.locate(i)
+        board = self.boards[c]
+        mem = self.cells.members(c)
+        out = []
+        for jl in board.window(loc):
+            if jl < len(mem) and mem[jl] >= 0:
+                out.append(mem[jl])
+        return out
+
+    def belief_t(self, i: int, j: int) -> float:
+        """What i currently believes about j's mean task time (NaN when j is
+        outside i's cell — inter-cell victims are priced by digest)."""
+        ci, li = self.cells.locate(i)
+        cj, lj = self.cells.locate(j)
+        if ci != cj:
+            return float("nan")
+        return float(self.boards[ci].t[li, lj])
+
+    def belief_nc(self, i: int, j: int) -> np.ndarray | None:
+        """i's believed per-class queue profile of j (None when j lives in
+        another cell — there is no shared board row to correct)."""
+        ci, li = self.cells.locate(i)
+        cj, lj = self.cells.locate(j)
+        if ci != cj:
+            return None
+        return self.boards[ci].nc[li, lj]
+
+    def peer_raw_t(self, i: int) -> list[tuple[int, float]]:
+        """(GLOBAL peer id, raw believed t) over i's intra-cell window — the
+        limp detector's peer-median reference, scoped to i's cell."""
+        c, loc = self.cells.locate(i)
+        board = self.boards[c]
+        mem = self.cells.members(c)
+        row = board.t[loc]
+        out = []
+        for jl in board.window(loc):
+            if jl != loc and jl < len(mem) and mem[jl] >= 0:
+                out.append((mem[jl], float(row[jl])))
+        return out
+
+    # ------------------------------------------------------------ elasticity
+    def ensure(self, worker: int) -> None:
+        """Grow ``worker``'s cell sub-board to cover its local slot (elastic
+        join / migration landing).  The new column joins unreported —
+        preemptive §2.2.1 estimates cover it exactly like boot."""
+        c = self.cells.cell_of(worker)
+        need = self.cells.slots(c)
+        if self.boards[c].P < need:
+            self.boards[c].grow(need, self.cells.radius_of(c))
+
+    def reset_member(self, worker: int) -> None:
+        board, loc = self._loc(worker)
+        board.reset_member(loc)
+
+    def migrate(self, worker: int, new_cell: int) -> None:
+        """Board-side half of a member migration: re-home the mapping, then
+        grow the receiving sub-board to cover the fresh slot.  The old
+        cell's column stays as a hole (stable slots), masked out of views by
+        the substrate exactly like a tombstone."""
+        self.cells.migrate(worker, new_cell)
+        self.ensure(worker)

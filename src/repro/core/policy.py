@@ -51,6 +51,7 @@ from typing import Callable, Sequence
 
 import numpy as np
 
+from .info_ring import CellDigest, CellMap, DigestBoard
 from .steal import plan_steal
 
 __all__ = [
@@ -58,6 +59,7 @@ __all__ = [
     "PolicyView",
     "SchedPolicy",
     "A2WSPolicy",
+    "HierarchicalA2WSPolicy",
     "CTWSPolicy",
     "LWPolicy",
     "RandomWSPolicy",
@@ -153,6 +155,17 @@ class PolicyView:
     #: imminent).  Plane-calibrated by design — A2WS's own semantics predate
     #: the policy layer and are preserved exactly.  None = same as ``idle``.
     near_idle: bool | None = None
+    #: hierarchy scoping (DESIGN.md §Hierarchy): when the substrate scopes
+    #: this view to one CELL, ``members[local_slot]`` is the GLOBAL worker id
+    #: behind each local slot (``-1`` = migration hole) and every other field
+    #: — ``worker``, ``radius``, ``num_workers``, ``window``, the ring arrays,
+    #: the ``depth``/``alive`` wrappers — speaks LOCAL slot indices.  The
+    #: policy must translate a plan's victim back to a global id before
+    #: returning it.  None = an unscoped flat view (global ids throughout).
+    members: np.ndarray | None = None
+    #: per-class queue-count rows behind the weighted overlay (weighted mode
+    #: only) — the leader's cell digest aggregates its per-class mix from it
+    nc_view: np.ndarray | None = None
 
 
 class SchedPolicy:
@@ -164,6 +177,11 @@ class SchedPolicy:
     #: open-arrival ``submit()`` routes here when set (LW's central queue);
     #: None = the substrate's default round-robin spray
     central: int | None = None
+    #: hierarchy topology (DESIGN.md §Hierarchy): a :class:`CellMap` when the
+    #: policy wants per-cell scoping — the substrate then builds one sub-board
+    #: per cell and hands the policy CELL-scoped views (``view.members``
+    #: non-None).  None = flat: one board, global views, exactly as before.
+    cells: CellMap | None = None
 
     # ------------------------------------------------------------- lifecycle
     def partition(self, tasks: Sequence, num_workers: int) -> list[list]:
@@ -179,6 +197,13 @@ class SchedPolicy:
         """Quiescence reached: release any policy-held state (token waits,
         leader gates).  Purely a notification — the substrate's counters
         decide termination, the policy cannot veto it."""
+
+    def bind_board(self, board) -> None:
+        """The threaded substrate hands over its information board (a
+        :class:`~repro.core.info_ring.CellBoard` when ``cells`` is set) so
+        hierarchy policies can drive board-side membership changes (member
+        migration).  The simulator never calls this — it has no board, so
+        migrations there touch only the :class:`CellMap`."""
 
     # -------------------------------------------------------------- stealing
     def on_boundary(self, view: PolicyView) -> StealPlan | None:
@@ -293,6 +318,226 @@ class A2WSPolicy(SchedPolicy):
             if limping:
                 candidates = limping
         return StealPlan(int(view.rng.choice(candidates)), 1, "probe")
+
+
+class HierarchicalA2WSPolicy(SchedPolicy):
+    """Two-level A2WS (DESIGN.md §Hierarchy): K cells of ~ρ members, each
+    running ordinary intra-cell A2WS on its own sub-board, plus a leader-level
+    balancer over a K-wide digest plane.
+
+    The substrate sees ``cells`` non-None and scopes every view to the
+    worker's cell (``view.members`` carries the local→global mapping), so the
+    per-boundary cost is O(ρ), not O(P).  Inside a cell the delegate
+    :class:`A2WSPolicy` runs UNCHANGED — Eq. 5 radius, victim selection,
+    γ-rounding, weighted overlay and limp re-pricing all scoped to ρ members.
+    With ``num_cells=1`` the scoped view IS the flat view (identity mapping,
+    same radius), the delegate consumes the rng identically, and the leader
+    plane has no peers to balance against — K=1 is bit-for-bit the flat
+    scheduler (property-tested).
+
+    Leader plane: the first LIVE slot of each cell is its leader (leadership
+    fails over automatically when that member dies).  At its own boundaries
+    the leader (a) publishes a :class:`CellDigest` — aggregate queued
+    work-seconds, task count, live membership, per-class mix, richest member
+    — computed from its ordinary delayed intra-cell view, and (b) runs the
+    balancer: when the richest peer cell's digest exceeds this cell's by more
+    than ``band_hi`` × mean cell work (and this cell sits below the mean),
+    the leader fires a batched inter-cell steal against that cell's richest
+    member (half its queue, the get-accumulate clamp handles staleness).
+    ``cooldown`` leader boundaries must pass between fires (loot needs time
+    to land before re-judging), and the pressure counter resets once the gap
+    falls under ``band_lo`` × mean — a hysteresis band, so digest noise
+    cannot make leaders ping-pong loot.  When the gap persists for
+    ``patience`` consecutive fires, the leader re-homes its last live
+    follower INTO the rich cell (member migration — capacity moves to the
+    work when loot-moving alone cannot keep up).
+
+    Inter-cell loot lands on the leader's deque and is redistributed by
+    ordinary intra-cell stealing; cross-cell ``record_remote`` is dropped by
+    the :class:`~repro.core.info_ring.CellBoard` (digests, not cells, carry
+    inter-cell knowledge).
+    """
+
+    name = "ha2ws"
+    uses_ring = True
+
+    def __init__(
+        self,
+        num_workers: int,
+        num_cells: int | None = None,
+        cell_size: int | None = None,
+        cell_radius: int | None = None,
+        probe: bool = True,
+        band_hi: float = 0.5,
+        band_lo: float = 0.15,
+        cooldown: int = 3,
+        patience: int = 12,
+    ) -> None:
+        self.cells = CellMap(
+            num_workers, num_cells=num_cells, cell_size=cell_size,
+            radius=cell_radius,
+        )
+        self.inner = A2WSPolicy(probe=probe)
+        self.digests = DigestBoard(self.cells.num_cells)
+        self.band_hi = float(band_hi)
+        self.band_lo = float(band_lo)
+        self.cooldown = int(cooldown)
+        self.patience = int(patience)
+        k = self.cells.num_cells
+        self._cool = [0] * k   # leader boundaries left before the next fire
+        self._lag = [0] * k    # consecutive fires with the gap still open
+        self._lock = threading.Lock()
+        self._board = None     # threaded CellBoard (bind_board); None in sim
+        self.xcell_steals = 0  # telemetry: inter-cell steal plans fired
+        self.xcell_moved = 0   # telemetry: member migrations executed
+        self.migrations: list[tuple[float, int, int, int]] = []
+
+    # ------------------------------------------------------------- lifecycle
+    def bind_board(self, board) -> None:
+        self._board = board
+
+    def on_start(self, depths: Sequence[int], now: float) -> None:
+        with self._lock:
+            self.digests.reset()
+            k = self.cells.num_cells
+            self._cool = [0] * k
+            self._lag = [0] * k
+            self.xcell_steals = 0
+            self.xcell_moved = 0
+            self.migrations = []
+
+    def on_worker_join(self, worker: int, now: float) -> None:
+        # Home the joiner (smallest live cell); idempotent for a recycled
+        # tombstone slot, which keeps its cell.  The substrate grows the
+        # cell's sub-board AFTER this hook returns.
+        self.cells.assign(worker)
+
+    # -------------------------------------------------------------- stealing
+    def on_boundary(self, view: PolicyView) -> StealPlan | None:
+        members = view.members
+        if members is None:
+            # Unscoped substrate (defensive): degrade to flat A2WS.
+            return self.inner.on_boundary(view)
+        cell = self.cells.cell_of(int(members[view.worker]))
+        if self._leader_slot(view, members) == view.worker:
+            # Leader duties consume NO rng — K=1 stays bit-for-bit flat.
+            self._publish(view, cell, members)
+            plan = self._balance(view, cell)
+            if plan is not None:
+                return plan
+        plan = self.inner.on_boundary(view)
+        if plan is None:
+            return None
+        victim = int(members[plan.victim])
+        if victim < 0:
+            return None  # raced a migration hole: skip this boundary
+        return StealPlan(
+            victim, plan.amount, plan.criterion, plan.delay, plan.work
+        )
+
+    @staticmethod
+    def _leader_slot(view: PolicyView, members: np.ndarray) -> int:
+        for jl in range(len(members)):
+            if members[jl] >= 0 and view.alive(jl):
+                return jl
+        return -1
+
+    def _publish(
+        self, view: PolicyView, cell: int, members: np.ndarray
+    ) -> None:
+        m = len(members)
+        n, t, q = view.n_view[:m], view.t_view[:m], view.queued[:m]
+        live = np.fromiter(
+            (members[jl] >= 0 and view.alive(jl) for jl in range(m)),
+            dtype=bool, count=m,
+        )
+        # Tombstone/limp sentinels (t >= ~1e12) would explode the aggregate;
+        # price unknown/dead cells at the median known rate instead.
+        tt = np.where(np.isfinite(t) & (t < 1e11), t, np.nan)
+        known = np.isfinite(tt)
+        med = float(np.nanmedian(tt)) if known.any() else 1.0
+        tt = np.where(known, tt, med)
+        qq = np.where(live, np.maximum(q, 0.0), 0.0)
+        work_j = qq * tt
+        qt = view.qtasks[:m] if view.qtasks is not None else q
+        tasks = float(np.where(live, np.maximum(qt, 0.0), 0.0).sum())
+        top_worker, top_queued, top_work = -1, 0, 0.0
+        cand = np.nonzero(live & (np.floor(qt) >= 1.0))[0]
+        if cand.size:
+            jl = int(cand[np.argmax(work_j[cand])])
+            top_worker = int(members[jl])
+            top_queued = int(qt[jl])
+            top_work = float(qq[jl])
+        mix = None
+        if view.nc_view is not None:
+            mix = view.nc_view[:m][live].sum(axis=0)
+        self.digests.publish(CellDigest(
+            cell, view.now, float(work_j.sum()), tasks, int(live.sum()),
+            top_worker, top_queued, top_work, mix,
+        ))
+
+    @staticmethod
+    def _aged_work(d: CellDigest, now: float) -> float:
+        """A digest's work estimate decayed to ``now``: each live member
+        retires ~one second of (its own re-priced) work per second, so a
+        stale digest is discounted by ``live × age`` — without this, a peer
+        that published EARLIER always looks richer than a fresh self-digest
+        and balanced pools ping-pong loot at boot."""
+        return max(d.work - max(now - d.time, 0.0) * d.live, 0.0)
+
+    def _balance(self, view: PolicyView, cell: int) -> StealPlan | None:
+        own = self.digests.get(cell)
+        peers = self.digests.peers(cell)
+        if own is None or not peers:
+            return None  # K=1, or no peer has published yet
+        aged = [self._aged_work(d, view.now) for d in peers]
+        vals = [own.work] + aged
+        mean = sum(vals) / len(vals)
+        if mean <= 0.0:
+            return None
+        ri = max(range(len(peers)), key=lambda k: aged[k])
+        rich = peers[ri]
+        gap = aged[ri] - own.work
+        with self._lock:
+            if self._cool[cell] > 0:
+                self._cool[cell] -= 1
+            if gap <= self.band_lo * mean:
+                self._lag[cell] = 0  # gap closed: release migration pressure
+                return None
+            if gap <= self.band_hi * mean or own.work >= mean:
+                return None
+            if rich.top_worker < 0 or rich.top_queued < 1:
+                return None
+            if self._cool[cell] > 0:
+                return None
+            self._cool[cell] = self.cooldown
+            self._lag[cell] += 1
+            self.xcell_steals += 1
+            if self._lag[cell] >= self.patience:
+                self._lag[cell] = 0
+                mover = self._pick_migrant(view)
+                if mover >= 0:
+                    if self._board is not None:
+                        self._board.migrate(mover, rich.cell)
+                    else:
+                        self.cells.migrate(mover, rich.cell)
+                    self.xcell_moved += 1
+                    self.migrations.append((view.now, mover, cell, rich.cell))
+        amount = max(1, rich.top_queued // 2)
+        work = rich.top_work / 2.0 if view.unit is not None else 0.0
+        return StealPlan(rich.top_worker, amount, "x-cell", work=work)
+
+    def _pick_migrant(self, view: PolicyView) -> int:
+        """Last live follower of the leader's cell (never the leader itself
+        — the cell keeps its digest publisher), or -1 when the leader is
+        alone."""
+        members = view.members
+        for jl in range(len(members) - 1, -1, -1):
+            if jl == view.worker:
+                continue
+            if members[jl] >= 0 and view.alive(jl):
+                return int(members[jl])
+        return -1
 
 
 class CTWSPolicy(SchedPolicy):
@@ -492,7 +737,7 @@ class RandomWSPolicy(SchedPolicy):
         over ``view.num_workers``, which the substrate already bumped."""
 
 
-POLICIES = ("a2ws", "ctws", "lw", "random")
+POLICIES = ("a2ws", "ha2ws", "ctws", "lw", "random")
 
 
 def make_policy(spec: str | SchedPolicy, num_workers: int, **kw) -> SchedPolicy:
@@ -510,6 +755,8 @@ def make_policy(spec: str | SchedPolicy, num_workers: int, **kw) -> SchedPolicy:
         return spec
     if spec == "a2ws":
         return A2WSPolicy(**kw)
+    if spec == "ha2ws":
+        return HierarchicalA2WSPolicy(num_workers, **kw)
     if spec == "ctws":
         return CTWSPolicy(num_workers, **kw)
     if spec == "lw":

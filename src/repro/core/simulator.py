@@ -54,7 +54,7 @@ import numpy as np
 from .a2ws import latency_percentiles
 from .limp import LimpConfig, LimpState, SlowdownSchedule, normalize_duration
 from .policy import PolicyView, SchedPolicy, make_policy
-from .steal import neighborhood, weighted_overlay
+from .steal import OverlayBuffers, neighborhood, weighted_overlay
 
 __all__ = [
     "SimConfig",
@@ -254,6 +254,8 @@ class SimResult:
     # per-task arrival-to-completion sojourn times (open-arrival modes only)
     limp_events: list[tuple[float, int, bool]] = field(default_factory=list)
     # (time, node, flagged) limp-detector transitions (cfg.limp runs only)
+    boundaries: int = 0
+    # total policy consultations (view builds) — overhead denominator
 
     def latency_percentiles(
         self, qs: tuple[float, ...] = (50.0, 95.0, 99.0)
@@ -414,6 +416,18 @@ def simulate(policy: str | SchedPolicy, cfg: SimConfig) -> SimResult:
     radius = _radius_for(p0)
     open_mode = cfg.arrival != "closed"
     uses_ring = pol.uses_ring
+    # Hierarchy scoping (DESIGN.md §Hierarchy): a cell-mapped policy gets
+    # CELL-scoped views — O(ρ) arrays over the cell's local slots instead of
+    # O(P) over the whole ring.  The simulator has no board objects (views
+    # are rebuilt from report histories), so the CellMap alone carries the
+    # topology; joins are homed by the policy's own on_worker_join.
+    cells = getattr(pol, "cells", None) if uses_ring else None
+    if cells is not None and cells.num_workers != p0:
+        raise ValueError(
+            f"policy cell map covers {cells.num_workers} workers, "
+            f"sim boots {p0}"
+        )
+    overlay_bufs: dict[int, OverlayBuffers] = {}
 
     # Work-weighted cost classes: every task is a ``(arrival, class)`` tuple
     # (class 0 when the workload is homogeneous — the legacy float stamp
@@ -508,7 +522,7 @@ def simulate(policy: str | SchedPolicy, cfg: SimConfig) -> SimResult:
     arrived = 0 if open_mode else total_tasks
     records: list[tuple[int, float, float]] = []
     latencies: list[float] = []
-    stats = {"steals": 0, "failed": 0, "moved": 0, "done": 0}
+    stats = {"steals": 0, "failed": 0, "moved": 0, "done": 0, "boundaries": 0}
     rr_state = [0]  # round-robin router for arrivals / drain re-sprays
 
     def route(prefer_central: bool = True) -> int:
@@ -573,7 +587,13 @@ def simulate(policy: str | SchedPolicy, cfg: SimConfig) -> SimResult:
             dur *= sched.factor_at(i, now)
         # Sender-side info-communication overhead at the task boundary: the
         # dirty part of the window goes to both neighbours (≤ R cells each).
-        overhead = cfg.comm_cell_cost * 2 * radius if uses_ring else 0.0
+        # Under a hierarchy the window is the CELL radius — the whole point:
+        # per-boundary info cost scales with ρ, not P.
+        if uses_ring:
+            r_i = radius if cells is None else cells.radius_of(cells.cell_of(i))
+            overhead = cfg.comm_cell_cost * 2 * r_i
+        else:
+            overhead = 0.0
         pending_dur[i] = dur
         push_event(now + overhead + dur, "finish", i)
         busy[i] += dur
@@ -608,11 +628,25 @@ def simulate(policy: str | SchedPolicy, cfg: SimConfig) -> SimResult:
     def _peer_ref(i: int, now: float) -> float:
         """Median published t among i's live window peers — the detector's
         reference of last resort for a node limping before it has its own
-        baseline (min_samples).  NaN when no peer has reported."""
+        baseline (min_samples).  NaN when no peer has reported.  Under a
+        hierarchy the peers are i's CELL window — a limper is judged against
+        its cell, mirroring the threaded plane's peer_raw_t scoping."""
+        if cells is None:
+            peers = [j for j in neighborhood(i, p, radius) if j != i]
+        else:
+            cell, iloc = cells.locate(i)
+            mem = cells.members(cell)
+            m = len(mem)
+            rad = min(cells.radius_of(cell), m // 2)
+            peers = [
+                mem[jl]
+                for jl in neighborhood(iloc, m, rad)
+                if jl != iloc and mem[jl] >= 0
+            ]
         vals = [
             float(cur_t[j])
-            for j in neighborhood(i, p, radius)
-            if j != i and alive_sim[j] and cur_t[j] == cur_t[j]
+            for j in peers
+            if alive_sim[j] and cur_t[j] == cur_t[j]
         ]
         if not vals:
             return float("nan")
@@ -622,105 +656,154 @@ def simulate(policy: str | SchedPolicy, cfg: SimConfig) -> SimResult:
         """Delayed (n, t, queued-estimate) views of the window around i,
         plus the ``(unit, qtasks, rel)`` work-weighted overlay (None in
         count mode) and the delayed limp-flag plane — the simulator's
-        mirror of ``WorkerPool._ring_view``."""
-        n_view = np.zeros(p)
-        t_view = np.ones(p)
-        queued = np.zeros(p)
-        limp_view = np.zeros(p, bool) if detect else None
-        nc_view = np.zeros((p, ncls)) if winfo else None
-        tc_view = np.full((p, ncls), np.nan) if winfo else None
-        # Relay pacing: per-hop delay = link latency + half the relay's poll
-        # interval (relays forward mid-task, §2.1 — capped by poll period,
-        # never by the 60 s task duration).
-        t_relay = np.where(
-            np.isnan(cur_t[:p]), cfg.task_cost / speeds[:p], cur_t[:p]
-        )
-        for off in range(-radius, radius + 1):
-            j = (i + off) % p
-            if j == i:
-                n_view[j] = reported_n(i)
-                t_view[j] = _pub_t(i, now)  # own row: re-priced when limping
-                queued[j] = depth(i)
+        mirror of ``WorkerPool._ring_view``.
+
+        Under a hierarchy the board is i's CELL: rows are the cell's
+        member slots (LOCAL indices, -1 holes from migration/retirement),
+        and the relay path walks the cell ring — the O(cell)-not-O(P) hot
+        path.  Flat runs take the identical loop with the identity member
+        mapping (``g = jl``), so the arithmetic is bit-for-bit the old
+        flat builder's."""
+        if cells is None:
+            mem = None
+            m, iloc, rad = p, i, radius
+        else:
+            cell, iloc = cells.locate(i)
+            mem = cells.members(cell)
+            m = len(mem)
+            rad = min(cells.radius_of(cell), m // 2)
+        n_view = np.zeros(m)
+        t_view = np.ones(m)
+        queued = np.zeros(m)
+        limp_view = np.zeros(m, bool) if detect else None
+        nc_view = np.zeros((m, ncls)) if winfo else None
+        tc_view = np.full((m, ncls), np.nan) if winfo else None
+        frozen = np.zeros(m, bool) if winfo else None
+
+        def relay_half_t(g: int) -> float:
+            # Relay pacing: per-hop delay = link latency + half the relay's
+            # poll interval (relays forward mid-task, §2.1 — capped by poll
+            # period, never by the 60 s task duration).  A hole slot has no
+            # relay estimate: charge the poll-period cap.
+            if g < 0:
+                return 0.5 * cfg.info_poll
+            t_r = cur_t[g]
+            if t_r != t_r:
+                t_r = cfg.task_cost / speeds[g]
+            return 0.5 * min(float(t_r), cfg.info_poll)
+
+        for off in range(-rad, rad + 1):
+            jl = (iloc + off) % m
+            g = jl if mem is None else mem[jl]
+            if g < 0:
+                # Hole slot (migrated-away / compacted member): empty row,
+                # speed ~0 so no planner ever targets it.
+                t_view[jl] = 1e12
+                continue
+            if jl == iloc:
+                n_view[jl] = reported_n(i)
+                t_view[jl] = _pub_t(i, now)  # own row: re-priced when limping
+                queued[jl] = depth(i)
                 if detect:
-                    limp_view[j] = bool(limping[i])
+                    limp_view[jl] = bool(limping[i])
                 if winfo:
                     # Own row is ground truth: actual queue composition +
                     # own EWMA estimates (mirrors the threaded plane).
-                    nc_view[j] = q_classes(i)
-                    tc_view[j] = class_t[i]
+                    nc_view[jl] = q_classes(i)
+                    tc_view[jl] = class_t[i]
                 continue
-            if not alive_sim[j]:
+            if not alive_sim[g]:
                 # Tombstoned member: frozen cells; count the orphaned queue
                 # directly and report speed ~0 (mirrors the threaded plane).
-                queued[j] = depth(j)
-                t_view[j] = 1e12
-                n_view[j] = queued[j] if open_mode else executed[j] + queued[j]
+                queued[jl] = depth(g)
+                t_view[jl] = 1e12
+                n_view[jl] = (
+                    queued[jl] if open_mode else executed[g] + queued[jl]
+                )
                 if winfo:
-                    nc_view[j] = q_classes(j)  # orphans: ground-truth scan
+                    nc_view[jl] = q_classes(g)  # orphans: ground-truth scan
                 continue
-            d = _ring_dist(i, j, p)
+            d = _ring_dist(iloc, jl, m)
             step = 1 if off > 0 else -1
             delay = 0.0
             for h in range(1, d + 1):
-                relay = (i + step * h) % p
-                delay += cfg.hop_latency + 0.5 * min(
-                    t_relay[relay], cfg.info_poll
-                )
+                rl = (iloc + step * h) % m
+                rg = rl if mem is None else mem[rl]
+                delay += cfg.hop_latency + relay_half_t(rg)
             if winfo:
-                n_j, t_j, nc_j, tc_j = hist[j].at_classes(max(now - delay, 0.0))
-                nc_view[j] = nc_j
-                tc_view[j] = tc_j
+                n_j, t_j, nc_j, tc_j = hist[g].at_classes(max(now - delay, 0.0))
+                nc_view[jl] = nc_j
+                tc_view[jl] = tc_j
             else:
-                n_j, t_j = hist[j].at(max(now - delay, 0.0))
+                n_j, t_j = hist[g].at(max(now - delay, 0.0))
             if detect:
-                limp_view[j] = hist[j].limp_at(max(now - delay, 0.0))
+                limp_view[jl] = hist[g].limp_at(max(now - delay, 0.0))
             if t_j != t_j:  # no report yet: preemptive wall-time estimate
                 t_j = max(now - born[i], 1e-9)  # the THIEF's elapsed time
-            n_view[j] = n_j
-            t_view[j] = t_j
+            n_view[jl] = n_j
+            t_view[jl] = t_j
             if open_mode:
                 # n_j IS the reported depth; no elapsed-time extrapolation —
                 # depth drains AND refills under arrivals, so decaying it
                 # would systematically under-count busy victims.
-                queued[j] = max(n_j, 0.0)
+                queued[jl] = max(n_j, 0.0)
             else:
                 done_est = min(now / max(t_j, 1e-9), n_j)
-                queued[j] = max(n_j - done_est, 0.0)
+                queued[jl] = max(n_j - done_est, 0.0)
+        members = None if mem is None else np.asarray(mem, np.int64)
         if not winfo:
-            return n_view, t_view, queued, None, None, None, limp_view
+            return (n_view, t_view, queued, None, None, None, limp_view,
+                    members, None, iloc, rad)
         # ---- work-weighted overlay (DESIGN.md §Work-weighted stealing) ----
         # steal.weighted_overlay is the ONE shared re-pricing for both
         # planes; tombstones are frozen at their ~0-speed price.  A limping
         # node's collapsed t feeds the overlay like any other estimate, so
         # its queue prices in (slow) work-seconds automatically.
+        if mem is None:
+            np.logical_not(alive_sim[:p], out=frozen)
+        else:
+            for jl2, g2 in enumerate(mem):
+                frozen[jl2] = g2 < 0 or not alive_sim[g2]
+        buf = OverlayBuffers.ensure(overlay_bufs.get(m), m, ncls)
+        overlay_bufs[m] = buf
         n_w, t_w, queued_w, unit, qtasks, rel = weighted_overlay(
-            n_view, t_view, queued, nc_view, tc_view, frozen=~alive_sim[:p]
+            n_view, t_view, queued, nc_view, tc_view, frozen=frozen, buf=buf
         )
-        return n_w, t_w, queued_w, unit, qtasks, rel, limp_view
+        return (n_w, t_w, queued_w, unit, qtasks, rel, limp_view,
+                members, nc_view, iloc, rad)
 
     def make_view(i: int, now: float) -> PolicyView:
         unit = qtasks = rel = limp_view = None
+        members = nc_view = None
+        iview, m, rad = i, p, radius
         if uses_ring:
-            n_view, t_view, queued, unit, qtasks, rel, limp_view = ring_view(
-                i, now
-            )
-            window = neighborhood(i, p, radius)
+            (n_view, t_view, queued, unit, qtasks, rel, limp_view,
+             members, nc_view, iview, rad) = ring_view(i, now)
+            m = p if members is None else len(members)
+            window = neighborhood(iview, m, rad)
         else:
             n_view = t_view = queued = None
             window = list(range(p))
+        if members is None:
+            depth_f = depth
+            alive_f = lambda j: bool(alive_sim[j])
+        else:
+            mem = members
+            depth_f = lambda jl: depth(int(mem[jl])) if mem[jl] >= 0 else 0
+            alive_f = lambda jl: bool(mem[jl] >= 0 and alive_sim[mem[jl]])
         return PolicyView(
-            worker=i,
+            worker=iview,
             now=now,
             idle=depth(i) == 0,
             near_idle=depth(i) <= 1,
             ran_any=bool(executed[i] > 0),
             open_arrival=open_mode,
-            radius=radius,
-            num_workers=p,
+            radius=rad,
+            num_workers=m,
             rng=rng,
             window=window,
-            depth=depth,
-            alive=lambda j: bool(alive_sim[j]),
+            depth=depth_f,
+            alive=alive_f,
             pending=lambda: arrived - stats["done"],
             n_view=n_view,
             t_view=t_view,
@@ -730,6 +813,8 @@ def simulate(policy: str | SchedPolicy, cfg: SimConfig) -> SimResult:
             rel=rel,
             limp=limp_view,
             inflight=lambda: int(in_transit[i]),
+            members=members,
+            nc_view=nc_view,
         )
 
     def boundary(i: int, now: float) -> bool:
@@ -737,6 +822,7 @@ def simulate(policy: str | SchedPolicy, cfg: SimConfig) -> SimResult:
         simulator's analogue of WorkerPool._policy_boundary)."""
         if not alive_sim[i]:
             return False  # tombstoned members take no more boundaries
+        stats["boundaries"] += 1
         view = make_view(i, now)
         plan = pol.on_boundary(view)
         if plan is None:
@@ -958,4 +1044,5 @@ def simulate(policy: str | SchedPolicy, cfg: SimConfig) -> SimResult:
         records=records,
         latencies=latencies,
         limp_events=limp_events,
+        boundaries=stats["boundaries"],
     )

@@ -66,6 +66,7 @@ __all__ = [
     "class_relatives",
     "queue_units",
     "weighted_overlay",
+    "OverlayBuffers",
 ]
 
 _EPS = 1e-12
@@ -248,7 +249,55 @@ def select_victim(
     return int(rng.choice(cand, p=w)), crit
 
 
-def class_relatives(tc: np.ndarray) -> np.ndarray:
+class OverlayBuffers:
+    """Preallocated scratch for :func:`weighted_overlay`, keyed on (P, C).
+
+    The overlay sits on the per-boundary hot path and otherwise rebuilds a
+    dozen (P,)- and (P, C)-sized temporaries per view.  A caller that runs
+    many boundaries (one buffer per worker in the threaded pool, one per
+    ring size in the simulator) passes the same buffer object back in; the
+    overlay then writes into these arrays instead of allocating.
+
+    The arrays RETURNED by a buffered ``weighted_overlay`` call alias this
+    scratch — they are valid until the next overlay call with the same
+    buffer, which is exactly one task boundary.  Never share one buffer
+    across concurrently-deciding workers.
+    """
+
+    __slots__ = (
+        "p", "c", "ratios", "both", "known", "ref_t", "finite", "mtmp",
+        "t_w", "queued_w", "n_w", "exec_est", "unit", "vtmp",
+    )
+
+    def __init__(self, p: int, c: int) -> None:
+        self.p, self.c = p, c
+        self.ratios = np.empty((p, c), dtype=np.float64)
+        self.both = np.empty((p, c), dtype=bool)
+        self.known = np.empty((p, c), dtype=bool)
+        self.ref_t = np.empty((p, c), dtype=np.float64)
+        self.finite = np.empty((p, c), dtype=bool)
+        self.mtmp = np.empty((p, c), dtype=np.float64)
+        self.t_w = np.empty(p, dtype=np.float64)
+        self.queued_w = np.empty(p, dtype=np.float64)
+        self.n_w = np.empty(p, dtype=np.float64)
+        self.exec_est = np.empty(p, dtype=np.float64)
+        self.unit = np.empty(p, dtype=np.float64)
+        self.vtmp = np.empty(p, dtype=np.float64)
+
+    @classmethod
+    def ensure(
+        cls, buf: "OverlayBuffers | None", p: int, c: int
+    ) -> "OverlayBuffers":
+        """Reuse ``buf`` when it matches (P, C), else allocate a fresh one —
+        elastic growth and cell migration change a worker's view size."""
+        if buf is not None and buf.p == p and buf.c == c:
+            return buf
+        return cls(p, c)
+
+
+def class_relatives(
+    tc: np.ndarray, buf: OverlayBuffers | None = None
+) -> np.ndarray:
     """Relative per-class costs ``rel[c]`` from a (P, C) matrix of per-worker
     per-class EWMA runtimes (NaN = that worker never ran that class).
 
@@ -266,7 +315,11 @@ def class_relatives(tc: np.ndarray) -> np.ndarray:
         raise ValueError("tc must be (num_workers, num_classes)")
     p, c = tc.shape
     rel = np.ones(c, dtype=np.float64)
-    known = np.isfinite(tc)
+    if buf is not None and (buf.p != p or buf.c != c):
+        buf = None  # mismatched scratch: fall back to fresh temporaries
+    known = (
+        np.isfinite(tc) if buf is None else np.isfinite(tc, out=buf.known)
+    )
     reported = known.any(axis=0)
     if not reported.any():
         return rel
@@ -274,17 +327,31 @@ def class_relatives(tc: np.ndarray) -> np.ndarray:
     anchor = int(np.argmax(reported))  # lowest class with any report
     base = tc[:, anchor]
     known_a = known[:, anchor]
-    both = known_a[:, None] & known  # (P, C): worker knows anchor AND class
-    ratios = np.divide(
-        tc, base[:, None], out=np.ones_like(tc), where=both
-    )
+    # (P, C): worker knows anchor AND class
+    if buf is None:
+        both = known_a[:, None] & known
+        ratios = np.divide(tc, base[:, None], out=np.ones_like(tc), where=both)
+        masked = np.where(both, ratios, 0.0)
+    else:
+        both = np.logical_and(known_a[:, None], known, out=buf.both)
+        buf.ratios.fill(1.0)
+        ratios = np.divide(tc, base[:, None], out=buf.ratios, where=both)
+        buf.mtmp.fill(0.0)
+        np.copyto(buf.mtmp, ratios, where=both)
+        masked = buf.mtmp
     n_both = both.sum(axis=0)
     with np.errstate(invalid="ignore"):
-        rel_ratio = np.where(both, ratios, 0.0).sum(axis=0) / n_both
+        rel_ratio = masked.sum(axis=0) / n_both
     # Pool-mean fallback for classes no worker reported alongside the anchor.
     col_cnt = known.sum(axis=0)
+    if buf is None:
+        col_masked = np.where(known, tc, 0.0)
+    else:
+        buf.mtmp.fill(0.0)
+        np.copyto(buf.mtmp, tc, where=known)
+        col_masked = buf.mtmp
     with np.errstate(invalid="ignore"):
-        col_mean = np.where(known, tc, 0.0).sum(axis=0) / col_cnt
+        col_mean = col_masked.sum(axis=0) / col_cnt
     anchor_mean = col_mean[anchor]
     use_ratio = n_both > 0
     use_pool = (~use_ratio) & reported & (anchor_mean > 0.0)
@@ -295,13 +362,21 @@ def class_relatives(tc: np.ndarray) -> np.ndarray:
     return np.maximum(rel, _EPS)
 
 
-def queue_units(nc: np.ndarray, rel: np.ndarray) -> np.ndarray:
+def queue_units(
+    nc: np.ndarray, rel: np.ndarray, buf: OverlayBuffers | None = None
+) -> np.ndarray:
     """Mean work per queued task, per worker: ``unit_j = Σ_c nc_j[c]·rel[c]
     / Σ_c nc_j[c]`` from a (P, C) matrix of per-class queue counts.  Workers
     with no class information (empty or unreported queue) price at 1.0 —
     the count-based degenerate value."""
     nc = np.asarray(nc, dtype=np.float64)
     rel = np.asarray(rel, dtype=np.float64)
+    if buf is not None and buf.p == nc.shape[0] and buf.c == nc.shape[1]:
+        tot = nc.sum(axis=1, out=buf.vtmp)
+        work = np.matmul(nc, rel, out=buf.unit)
+        np.divide(work, np.maximum(tot, _EPS), out=work)
+        work[tot <= 0.0] = 1.0
+        return work
     tot = nc.sum(axis=1)
     work = nc @ rel
     return np.where(tot > 0.0, work / np.maximum(tot, _EPS), 1.0)
@@ -314,6 +389,7 @@ def weighted_overlay(
     nc: np.ndarray,
     tc: np.ndarray,
     frozen: np.ndarray | None = None,
+    buf: OverlayBuffers | None = None,
 ) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
     """The work-weighted re-pricing shared by BOTH planes (DESIGN.md
     §Work-weighted stealing): from count-denominated view rows ``(n, t,
@@ -332,22 +408,51 @@ def weighted_overlay(
     Returns ``(n_w, t_w, queued_w, unit, qtasks, rel)``.  One
     implementation on purpose: the threaded runtime and the simulator must
     price identically or cross-plane conformance is meaningless.
+
+    ``buf``: optional :class:`OverlayBuffers` scratch keyed on (P, C).  The
+    returned arrays then alias the buffer (valid for one task boundary) —
+    results are numerically identical with or without it.
     """
-    rel = class_relatives(tc)
-    unit = queue_units(nc, rel)
+    if buf is not None and (buf.p != tc.shape[0] or buf.c != tc.shape[1]):
+        buf = None  # mismatched scratch (elastic growth): allocate fresh
+    rel = class_relatives(tc, buf)
+    unit = queue_units(nc, rel, buf)
     with np.errstate(invalid="ignore"):
-        ref_t = tc / rel
-    finite = np.isfinite(ref_t)
+        ref_t = (
+            tc / rel if buf is None else np.divide(tc, rel, out=buf.ref_t)
+        )
+    finite = (
+        np.isfinite(ref_t) if buf is None
+        else np.isfinite(ref_t, out=buf.finite)
+    )
     rows = finite.any(axis=1)
     if frozen is not None:
         rows &= ~np.asarray(frozen, dtype=bool)
-    t_w = t.copy()
-    for j in np.nonzero(rows)[0]:
-        t_w[j] = float(ref_t[j][finite[j]].mean())
+    t_w = t.copy() if buf is None else np.copyto(buf.t_w, t) or buf.t_w
+    # Per-row mean of the finite reference-priced estimates, vectorised:
+    # summing masked zeros is exact (adding 0.0 never changes a float), so
+    # this is the same value as the per-row compress-and-mean it replaced.
+    if rows.any():
+        if buf is None:
+            msum = np.where(finite, ref_t, 0.0).sum(axis=1)
+        else:
+            buf.mtmp.fill(0.0)
+            np.copyto(buf.mtmp, ref_t, where=finite)
+            msum = buf.mtmp.sum(axis=1)
+        cnt = finite.sum(axis=1)
+        np.copyto(t_w, msum / np.maximum(cnt, 1), where=rows)
     qtasks = queued
-    queued_w = queued * unit
-    exec_est = np.maximum(n - queued, 0.0)
-    n_w = exec_est * (t / np.maximum(t_w, 1e-12)) + queued_w
+    if buf is None:
+        queued_w = queued * unit
+        exec_est = np.maximum(n - queued, 0.0)
+        n_w = exec_est * (t / np.maximum(t_w, 1e-12)) + queued_w
+    else:
+        queued_w = np.multiply(queued, unit, out=buf.queued_w)
+        exec_est = np.subtract(n, queued, out=buf.exec_est)
+        np.maximum(exec_est, 0.0, out=exec_est)
+        ratio = np.divide(t, np.maximum(t_w, 1e-12), out=buf.vtmp)
+        n_w = np.multiply(exec_est, ratio, out=buf.n_w)
+        n_w += queued_w
     return n_w, t_w, queued_w, unit, qtasks, rel
 
 

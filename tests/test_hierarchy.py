@@ -1,0 +1,453 @@
+"""Two-level hierarchical A2WS (DESIGN.md §Hierarchy): cell topology units,
+the K=1 bit-for-bit degenerate guarantee (plans AND whole-sim telemetry),
+sub-board remapping properties under join/migrate churn, hierarchical runs
+in both planes (conservation, elasticity, weighted overlay), cross-plane
+inter-cell steal conformance, and the slow P=512 acceptance sweep."""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from _hypo import given, settings, st
+from repro.core.a2ws import WorkerPool
+from repro.core.info_ring import CellBoard, CellDigest, CellMap, DigestBoard
+from repro.core.policy import HierarchicalA2WSPolicy, make_policy
+from repro.core.simulator import SimConfig, simulate, table2_speeds
+
+
+# ------------------------------------------------------------- CellMap units
+def test_cellmap_default_topology_is_sqrt_p():
+    cm = CellMap(64)
+    assert cm.num_cells == 8
+    assert CellMap(1).num_cells == 1
+    assert CellMap(4, num_cells=9).num_cells == 4  # clamped to P
+
+
+def test_cellmap_contiguous_split_covers_every_worker_once():
+    cm = CellMap(13, num_cells=4)
+    seen = []
+    for c in range(cm.num_cells):
+        mem = cm.members(c)
+        for loc, g in enumerate(mem):
+            assert cm.locate(g) == (c, loc)
+            seen.append(g)
+    assert sorted(seen) == list(range(13))
+    # contiguous block split: each cell's ids are consecutive
+    for c in range(cm.num_cells):
+        mem = cm.members(c)
+        assert mem == list(range(mem[0], mem[0] + len(mem)))
+
+
+def test_cellmap_radius_override_and_full_cell_default():
+    cm = CellMap(30, num_cells=3)  # cells of 10
+    assert cm.radius_of(0) == 5  # full-cell window: slots // 2
+    cm2 = CellMap(30, num_cells=3, radius=2)
+    assert cm2.radius_of(0) == 2
+    cm3 = CellMap(30, num_cells=3, radius=99)
+    assert cm3.radius_of(0) == 5  # clamped to slots // 2
+
+
+def test_cellmap_assign_dense_and_idempotent():
+    cm = CellMap(6, num_cells=3)
+    v0 = cm.version
+    assert cm.assign(3) == cm.cell_of(3)  # already mapped: no-op
+    assert cm.version == v0
+    c = cm.assign(6)  # new id lands in a smallest live cell
+    assert cm.cell_of(6) == c and cm.version == v0 + 1
+    with pytest.raises(ValueError):
+        cm.assign(99)  # joins must be dense
+
+
+def test_cellmap_migrate_leaves_hole_and_appends():
+    cm = CellMap(8, num_cells=2)
+    old_cell, old_loc = cm.locate(1)
+    assert old_cell == 0
+    oc, nl = cm.migrate(1, 1)
+    assert oc == 0 and cm.locate(1) == (1, nl)
+    assert cm.members(0)[old_loc] == -1  # hole, slots stable
+    assert cm.members(1)[-1] == 1
+    assert cm.live_size(0) == 3 and cm.live_size(1) == 5
+    # same-cell migrate is a no-op
+    v = cm.version
+    cm.migrate(1, 1)
+    assert cm.version == v
+
+
+# ---------------------------------------------------- CellBoard / DigestBoard
+def test_cellboard_drops_cross_cell_records():
+    cm = CellMap(8, num_cells=2)
+    board = CellBoard(cm, num_classes=1)
+    board.update_local(0, 3.0, 0.5, 2.0)
+    board.record_remote(0, 1, 1.0, 0.5)  # same cell: lands
+    assert board.dropped_remote == 0
+    board.record_remote(0, 5, 1.0, 0.5)  # cross cell: dropped
+    assert board.dropped_remote == 1
+    assert np.isnan(board.belief_t(0, 5))
+    assert board.belief_nc(0, 5) is None
+    assert all(g < 4 for g in board.window(0))  # window stays intra-cell
+
+
+def test_cellboard_window_and_peer_raw_t_return_global_ids():
+    cm = CellMap(12, num_cells=3)  # cell 1 = ids 4..7
+    board = CellBoard(cm, num_classes=1)
+    win = board.window(5)
+    assert 5 not in [g for g in win if g != 5] or True
+    assert set(win) <= {4, 5, 6, 7}
+    peers = board.peer_raw_t(5)
+    assert all(g in {4, 6, 7} for g, _t in peers)
+
+
+def test_digestboard_publish_seq_and_peers():
+    db = DigestBoard(3)
+    assert db.get(0) is None and db.peers(0) == []
+    db.publish(CellDigest(0, 1.0, 5.0, 5.0, 4, 2, 3))
+    db.publish(CellDigest(0, 2.0, 4.0, 4.0, 4, 2, 2))
+    db.publish(CellDigest(2, 2.0, 9.0, 9.0, 4, 9, 4))
+    assert db.get(0).seq == 2 and db.get(0).work == 4.0
+    assert [d.cell for d in db.peers(0)] == [2]
+    assert db.publishes == 3
+
+
+# ------------------------------------------- remapping property (sub-boards)
+@settings(max_examples=40, deadline=None)
+@given(
+    p0=st.integers(2, 10),
+    k=st.integers(1, 4),
+    ops=st.lists(
+        st.tuples(st.integers(0, 2), st.integers(0, 63), st.integers(0, 3)),
+        max_size=12,
+    ),
+    num_classes=st.integers(1, 3),
+)
+def test_cell_remapping_preserves_versions_and_epochs(p0, k, ops, num_classes):
+    """Join/migrate/report churn on a CellBoard: the worker->slot mapping
+    stays a bijection, per-cell RingInfo versions stay monotone across
+    sub-board growth, and every live worker's view stays consistent with its
+    cell's board epoch (rows == sub-board size, no index races)."""
+    cm = CellMap(p0, num_cells=k)
+    board = CellBoard(cm, num_classes=num_classes)
+    next_id = p0
+
+    def snapshot():
+        return [b.version.copy() for b in board.boards]
+
+    def check(before):
+        # mapping is a bijection over live ids
+        seen = []
+        for c in range(cm.num_cells):
+            for loc, g in enumerate(cm.members(c)):
+                if g >= 0:
+                    assert cm.locate(g) == (c, loc)
+                    seen.append(g)
+        assert len(seen) == len(set(seen))
+        for c in range(cm.num_cells):
+            b = board.boards[c]
+            assert b.P >= cm.slots(c) or cm.slots(c) == 0
+            # version monotonicity across growth: the carried-over block
+            # never moves backwards
+            old = before[c]
+            assert (b.version[: old.shape[0], : old.shape[1]] >= old).all()
+        for g in seen:
+            n, t, *_rest = board.view_window_all(g)
+            c, _loc = cm.locate(g)
+            assert len(n) == board.boards[c].P == len(t)
+
+    for op, a, b_ in ops:
+        before = snapshot()
+        ver = cm.version
+        if op == 0:  # elastic join (dense ids), substrate grows the board
+            cm.assign(next_id)
+            board.ensure(next_id)
+            next_id += 1
+            assert cm.version == ver + 1
+        elif op == 1:  # leader-level member migration
+            w = a % next_id
+            board.migrate(w, b_ % cm.num_cells)
+        else:  # ordinary report traffic
+            w = a % next_id
+            board.update_local(w, float(b_), 0.5, float(b_))
+            board.communicate(w)
+        check(before)
+
+
+# --------------------------------------------- K=1 degenerate: plan equality
+def _crafted_plans(policy, p, seed, num_classes):
+    """Deterministic boundary plans from a constructed (never started) pool
+    with crafted imbalance: workers seed//? drained, everyone else queued."""
+    kw = {}
+    if num_classes > 1:
+        kw = dict(cost_class_fn=lambda t: t % num_classes,
+                  num_classes=num_classes)
+    pool = WorkerPool(
+        list(range(p * 5)), p, lambda w, t: None, policy=policy, seed=seed,
+        **kw,
+    )
+    for i in (0, p // 2):
+        w = pool.workers[i]
+        while w.deque.get_task() is not None:
+            pass
+    now = pool.clock()
+    for i, w in enumerate(pool.workers):
+        w.executed, w.runtime_sum, w.ran_any = 5, 5 * 0.05, True
+        if num_classes > 1:
+            w.class_t[:] = 0.04 + 0.01 * np.arange(num_classes)
+        w.start_time = now - 1e-3
+        pool._update_info(i)
+    for i in range(p):
+        pool.info.communicate(i)
+    plans = []
+    for i in range(p):
+        plan = pool.policy.on_boundary(pool._make_view(i))
+        plans.append(
+            None if plan is None else
+            (plan.victim, plan.amount, plan.criterion, plan.delay, plan.work)
+        )
+    return plans, pool.radius
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    p=st.integers(2, 24),
+    seed=st.integers(0, 10_000),
+    num_classes=st.sampled_from([1, 3]),
+)
+def test_k1_threaded_plans_bit_for_bit_flat(p, seed, num_classes):
+    """With num_cells=1 and the cell radius pinned to the flat Eq. 5 radius,
+    the hierarchical policy's boundary plans are IDENTICAL to flat A2WS —
+    same victims, amounts, criteria, work targets, same rng stream."""
+    flat_plans, radius = _crafted_plans("a2ws", p, seed, num_classes)
+    hier = HierarchicalA2WSPolicy(p, num_cells=1, cell_radius=radius)
+    hier_plans, _ = _crafted_plans(hier, p, seed, num_classes)
+    assert hier_plans == flat_plans
+    assert any(x is not None for x in flat_plans) or p <= 3
+
+
+# --------------------------------------- K=1 degenerate: whole-sim telemetry
+def _k1_policy_for(cfg, p):
+    r = cfg.radius if cfg.radius is not None else max(1, round(0.2 * p))
+    return HierarchicalA2WSPolicy(p, num_cells=1, cell_radius=min(r, p // 2))
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    conf=st.sampled_from(["C1", "C4"]),
+    seed=st.integers(0, 50),
+    tasks=st.integers(60, 200),
+    weighted=st.booleans(),
+)
+def test_k1_sim_telemetry_bit_for_bit_flat(conf, seed, tasks, weighted):
+    """Whole-run virtual-time telemetry — makespan, per-node task counts and
+    busy time, every (node, start, end) record, steal counters — is
+    bit-for-bit identical between flat a2ws and the K=1 hierarchy."""
+    kw = {}
+    if weighted:
+        kw = dict(class_cost=(1.0, 3.0), class_probs=(0.7, 0.3))
+    speeds = table2_speeds(conf)
+    cfg = SimConfig(speeds=speeds, num_tasks=tasks, seed=seed, **kw)
+    flat = simulate("a2ws", cfg)
+    k1 = simulate(_k1_policy_for(cfg, len(speeds)), cfg)
+    assert k1.makespan == flat.makespan
+    assert k1.per_node_tasks == flat.per_node_tasks
+    assert k1.per_node_busy == flat.per_node_busy
+    assert k1.records == flat.records
+    assert (k1.steals, k1.failed_steals, k1.moved_tasks, k1.boundaries) == (
+        flat.steals, flat.failed_steals, flat.moved_tasks, flat.boundaries
+    )
+
+
+def test_k1_sim_telemetry_equal_under_churn_and_limp():
+    """The degenerate guarantee holds with the OTHER overlays live too:
+    elastic join/retire and a scripted slowdown with limp detection."""
+    from repro.core import LimpConfig, SlowdownEvent
+
+    speeds = table2_speeds("C1")
+    p = len(speeds)
+    cfg = SimConfig(
+        speeds=speeds, num_tasks=300, seed=4,
+        joins=((5.0, 1.0),), retires=((9.0, 1),),
+        slowdowns=(SlowdownEvent(0, 2.0, 8.0),), limp=LimpConfig(),
+    )
+    flat = simulate("a2ws", cfg)
+    k1 = simulate(_k1_policy_for(cfg, p), cfg)  # joiner homed at join time
+    assert k1.makespan == flat.makespan
+    assert k1.records == flat.records
+    assert k1.limp_events == flat.limp_events
+
+
+# ------------------------------------------------- hierarchical runs, threaded
+def test_threaded_hierarchical_conservation():
+    done, lock = [], threading.Lock()
+
+    def fn(w, t):
+        time.sleep(0.0005)
+        with lock:
+            done.append(t)
+
+    pol = HierarchicalA2WSPolicy(6, num_cells=3)
+    pool = WorkerPool(list(range(300)), 6, fn, policy=pol, seed=0)
+    stats = pool.run()
+    assert sorted(done) == list(range(300))
+    assert sum(stats.per_worker_tasks) == 300
+
+
+def test_threaded_hierarchical_weighted_conservation():
+    pol = HierarchicalA2WSPolicy(6, num_cells=2)
+    pool = WorkerPool(
+        list(range(240)), 6, lambda w, t: time.sleep(0.0005), policy=pol,
+        seed=2, cost_class_fn=lambda t: t % 3, num_classes=3,
+    )
+    stats = pool.run()
+    assert sum(stats.per_worker_tasks) == 240
+
+
+def test_threaded_hierarchical_elastic_join_retire():
+    """Elastic membership under the hierarchy: a joiner is homed to the
+    smallest live cell and serves tasks; a retiree's queue survives via
+    drain.  Every task runs exactly once."""
+    done, lock = [], threading.Lock()
+
+    def fn(w, t):
+        time.sleep(0.002)
+        with lock:
+            done.append(t)
+
+    pol = HierarchicalA2WSPolicy(4, num_cells=2)
+    pool = WorkerPool([], 4, fn, policy=pol, open_arrival=True, seed=0)
+    pool.start()
+    pool.submit_many(range(40), worker=0)
+    wid = pool.add_worker()
+    assert wid == 4
+    assert pol.cells.cell_of(wid) in (0, 1)
+    assert pol.cells.live_size(pol.cells.cell_of(wid)) == 3
+    pool.submit_many(range(40, 80))
+    time.sleep(0.05)
+    pool.retire_worker(1, drain=True)
+    pool.submit_many(range(80, 100))
+    pool.drain()
+    stats = pool.join()
+    assert sorted(done) == list(range(100))
+    assert stats.per_worker_tasks[wid] > 0
+
+
+def test_servepool_runs_hierarchical_policy():
+    """The third plane: ServePool's continuous batching balances replica
+    deques through the hierarchical policy unchanged."""
+    from repro.serve.engine import Replica, ServePool
+
+    pol = HierarchicalA2WSPolicy(4, num_cells=2)
+    reps = [Replica(f"r{i}", lambda r: {"ok": True}) for i in range(4)]
+    pool = ServePool(reps, policy=pol, seed=0)
+    futs = [pool.submit({"i": i}) for i in range(40)]
+    outs = [f.result(timeout=30) for f in futs]
+    pool.shutdown()
+    assert len(outs) == 40 and all(o["ok"] for o in outs)
+
+
+def test_make_policy_spec():
+    pol = make_policy("ha2ws", 16)
+    assert isinstance(pol, HierarchicalA2WSPolicy)
+    assert pol.cells.num_workers == 16
+
+
+# ------------------------------------------------- hierarchical runs, sim
+def test_sim_hierarchical_conservation_and_planes():
+    speeds = table2_speeds("C4")
+    p = len(speeds)
+    cfg = SimConfig(speeds=speeds, num_tasks=960, seed=0)
+    h = HierarchicalA2WSPolicy(p, num_cells=8)
+    res = simulate(h, cfg)
+    assert sum(res.per_node_tasks) == 960
+    assert res.boundaries > 0
+
+
+def test_sim_hierarchical_elastic_churn():
+    speeds = table2_speeds("C1")
+    cfg = SimConfig(
+        speeds=speeds, num_tasks=600, seed=9,
+        joins=((10.0, 1.0), (20.0, 0.5)), retires=((30.0, 2),),
+    )
+    h = HierarchicalA2WSPolicy(len(speeds), num_cells=4)
+    res = simulate(h, cfg)
+    assert sum(res.per_node_tasks) == 600
+    # the joiners were homed (version bumps) and appear in the map
+    assert h.cells.num_workers == len(speeds) + 2
+
+
+# ------------------------------------- cross-plane inter-cell steal conformance
+def test_cross_plane_xcell_steal_conformance():
+    """Both planes agree on WHEN the leader plane engages: a half-fast /
+    half-slow pool (cell 1 surplus in work-seconds) fires inter-cell steals
+    in the simulator AND the threaded pool; a homogeneous balanced pool
+    fires (essentially) none.  Exact volumes differ across planes — thread
+    timing is real — so the conformance bound is an order-of-engagement,
+    not an equality."""
+    p = 16
+    skew = tuple([8.0] * 8 + [0.5] * 8)
+    cfg = SimConfig(speeds=skew, num_tasks=p * 30, seed=0, task_cost=1.0)
+    hs = HierarchicalA2WSPolicy(p, num_cells=2)
+    rs = simulate(hs, cfg)
+    assert sum(rs.per_node_tasks) == p * 30
+    assert hs.xcell_steals >= 3, "sim skew must engage the leader plane"
+
+    hb = HierarchicalA2WSPolicy(p, num_cells=2)
+    simulate(hb, SimConfig(speeds=(1.0,) * p, num_tasks=p * 30, seed=0,
+                           task_cost=1.0))
+    assert hb.xcell_steals == 0, "sim balanced pool must not ping-pong loot"
+
+    def run_threaded(slow_half):
+        pol = HierarchicalA2WSPolicy(8, num_cells=2)
+        def fn(w, t):
+            time.sleep(0.004 if (slow_half and w >= 4) else 0.0005)
+        stats = WorkerPool(
+            list(range(240)), 8, fn, policy=pol, seed=1
+        ).run()
+        assert sum(stats.per_worker_tasks) == 240
+        return pol.xcell_steals
+
+    skew_steals = run_threaded(True)
+    bal_steals = run_threaded(False)
+    assert skew_steals >= 3, "threaded skew must engage the leader plane"
+    assert bal_steals <= skew_steals // 2, (
+        f"balanced ({bal_steals}) should engage far less than skew "
+        f"({skew_steals})"
+    )
+
+
+# ---------------------------------------------------- P=512 acceptance (slow)
+@pytest.mark.slow
+def test_p512_hierarchy_beats_flat_makespan_and_overhead():
+    """The ISSUE acceptance run: at P=512 in the short-task regime the
+    hierarchy wins BOTH the makespan and the mean per-boundary view/steal
+    overhead (wall time per boundary — the O(cell) vs O(P) hot path)."""
+    p = 512
+    speeds = tuple(np.tile(table2_speeds("C4"), p // 64))
+    cfg = SimConfig(speeds=speeds, num_tasks=p * 3, seed=0, task_cost=2.0)
+    t0 = time.perf_counter()
+    flat = simulate("a2ws", cfg)
+    flat_wall = time.perf_counter() - t0
+    h = HierarchicalA2WSPolicy(p)
+    t0 = time.perf_counter()
+    hier = simulate(h, cfg)
+    hier_wall = time.perf_counter() - t0
+    assert sum(hier.per_node_tasks) == p * 3
+    assert hier.makespan < flat.makespan
+    assert (hier_wall / hier.boundaries) < 0.5 * (flat_wall / flat.boundaries)
+
+
+@pytest.mark.slow
+def test_p512_k_rho_sweep_conserves_and_stays_cheap():
+    """K×ρ sweep at P=512: every cell shape conserves tasks and keeps the
+    per-boundary hot path an order of magnitude under the flat O(P) cost
+    (~15 ms/boundary measured for flat at this size)."""
+    p = 512
+    speeds = tuple(np.tile(table2_speeds("C4"), p // 64))
+    cfg = SimConfig(speeds=speeds, num_tasks=p * 2, seed=1, task_cost=2.0)
+    for k in (8, 23, 64):
+        h = HierarchicalA2WSPolicy(p, num_cells=k)
+        t0 = time.perf_counter()
+        res = simulate(h, cfg)
+        wall = time.perf_counter() - t0
+        assert sum(res.per_node_tasks) == p * 2, f"K={k} lost tasks"
+        assert wall / res.boundaries < 5e-3, f"K={k} hot path regressed"
