@@ -66,8 +66,11 @@ def main() -> None:
         sched_micro,
         table3_lw,
         table4_ctws,
+        topology,
         weighted,
     )
+    # (benchmarks/common.py is the only unregistered module — shared
+    # helpers, not a benchmark.)
 
     benches = {
         "fig4": lambda: fig4_radius.run(seeds=seeds),
@@ -83,6 +86,7 @@ def main() -> None:
         "weighted": lambda: weighted.run(seeds=seeds, fast=args.fast),
         "limplock": lambda: limplock.run(seeds=seeds, fast=args.fast),
         "hierarchy": lambda: hierarchy.run(seeds=seeds, fast=args.fast),
+        "topology": lambda: topology.run(seeds=seeds, fast=args.fast),
         "roofline": lambda: roofline.run(),
     }
     only = set(args.only.split(",")) if args.only else None

@@ -1,0 +1,165 @@
+"""Topology-priced stealing headline (DESIGN.md §Topology plane): net-priced
+vs network-blind stealing at P = 512 on a skewed two-level fabric, plus a
+topology-model sweep (flat-uniform vs two-level vs fat-tree).
+
+The regime is the hierarchy benchmark's interleaved short-task C4 mix under
+the FLAT weighted scheduler (PR-4): every thief probes a ring window of
+~0.2·P neighbours, and with ~22-worker cells that window is almost entirely
+cross-cell — a thief happily strips a victim three hops away over an
+equally-loaded neighbour, which is exactly the traffic a two-level fabric
+punishes (cross-cell link ≥ 10× the intra-cell link: the intra tier here is
+free, the cross tier costs a latency + per-task fare).  Both legs run the
+SAME cost model — the simulator charges every transfer's fare on the actual
+take either way — the only difference is whether the scheduler gets to see
+the price sheet:
+
+* ``blind``  (``topology_aware=False``): the PR-4 scheduler exactly as it
+  was — victim selection plans as if loot moved for free, then pays the
+  link fare anyway.
+* ``priced`` (``topology_aware=True``): victim weights are
+  distance-penalized, net-negative steals are refused (work gained must
+  beat the transfer cost), and priced loot moves as one batched claim per
+  hop.
+
+The acceptance claim recorded in ``headline``: priced beats blind on
+makespan while moving STRICTLY fewer cross-cell tasks.  ``sweep`` runs the
+priced hierarchical scheduler (cheap legs) under the three built-in cost
+models at comparable price scales — flat-uniform (everything equally far)
+shows the refusal rule alone, fat-tree grades 2/4/6 hops between the
+two-level extremes.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+import sys
+sys.path.insert(0, "src")
+from repro.core.policy import HierarchicalA2WSPolicy  # noqa: E402
+from repro.core.simulator import SimConfig, simulate, table2_speeds  # noqa: E402
+from repro.core.topology import Topology  # noqa: E402
+
+SIZE = 512
+FAST_SIZE = 128
+TASK_COST = 2.0
+# Two-level fabric: the intra-cell tier is free (a steal inside a cell is
+# bit-for-bit the unpriced scheduler), the cross-cell tier charges a
+# latency + per-task fare — trivially ≥ 10× intra on both terms.
+CROSS_LAT, CROSS_PER = 1e-1, 2e-2
+FAT_TREE_K = 16  # k³/4 = 1024 hosts ≥ P, core distance = 6 hops
+
+
+def _xcell_moved(res, cell_of) -> int:
+    return sum(
+        take
+        for _t, thief, victim, take in res.steal_log
+        if cell_of(thief) != cell_of(victim)
+    )
+
+
+def _flat_leg(cfg, topo, cell_of, aware: bool) -> dict:
+    """One headline leg: the FLAT weighted scheduler, priced or blind."""
+    t0 = time.perf_counter()
+    res = simulate("a2ws", cfg.with_(topology=topo, topology_aware=aware))
+    wall = time.perf_counter() - t0
+    return {
+        "makespan": res.makespan,
+        "steals": res.steals,
+        "moved": res.moved_tasks,
+        "xcell_moved": _xcell_moved(res, cell_of),
+        "boundaries": res.boundaries,
+        "wall_s": wall,
+    }
+
+
+def _hier_leg(cfg, topo, p: int, aware: bool) -> dict:
+    """One sweep leg: the hierarchical scheduler (O(cell) hot path)."""
+    pol = HierarchicalA2WSPolicy(p)  # fresh per leg: stateful
+    t0 = time.perf_counter()
+    res = simulate(pol, cfg.with_(topology=topo, topology_aware=aware))
+    wall = time.perf_counter() - t0
+    return {
+        "makespan": res.makespan,
+        "steals": res.steals,
+        "moved": res.moved_tasks,
+        "xcell_moved": _xcell_moved(res, pol.cells.cell_of),
+        "xcell_refused": pol.xcell_refused,
+        "boundaries": res.boundaries,
+        "wall_s": wall,
+    }
+
+
+def run(seeds: int = 1, fast: bool = False, csv: bool = True):
+    p = FAST_SIZE if fast else SIZE
+    speeds = tuple(np.tile(table2_speeds("C4"), p // 64))  # interleaved mix
+    cfg = SimConfig(
+        speeds=speeds, num_tasks=p * 4, seed=0, task_cost=TASK_COST,
+    )
+    cells = HierarchicalA2WSPolicy(p).cells  # the deterministic cell split
+    two_level = Topology.two_level(
+        cells,
+        cross_latency=CROSS_LAT, cross_per_task=CROSS_PER,
+    )
+
+    blind = _flat_leg(cfg, two_level, cells.cell_of, aware=False)
+    priced = _flat_leg(cfg, two_level, cells.cell_of, aware=True)
+    headline = {
+        "P": p,
+        "task_cost": TASK_COST,
+        "num_tasks": cfg.num_tasks,
+        "num_cells": cells.num_cells,
+        "cross_latency": CROSS_LAT,
+        "cross_per_task": CROSS_PER,
+        "blind": blind,
+        "priced": priced,
+        "makespan_gain_pct": (
+            (1.0 - priced["makespan"] / blind["makespan"]) * 100
+        ),
+        "xcell_moved_ratio": (
+            priced["xcell_moved"] / max(blind["xcell_moved"], 1)
+        ),
+    }
+    if csv:
+        print(
+            f"topo_blind_p{p},{blind['makespan']:.3f},"
+            f"xcell_moved={blind['xcell_moved']}"
+        )
+        print(
+            f"topo_priced_p{p},{priced['makespan']:.3f},"
+            f"xcell_moved={priced['xcell_moved']}"
+        )
+        print(
+            f"topo_gain,{headline['makespan_gain_pct']:.2f},"
+            f"xcell_ratio={headline['xcell_moved_ratio']:.3f}"
+        )
+
+    # Topology-model sweep at comparable price scales, on the hierarchical
+    # scheduler (legs are ~40× cheaper than flat): uniform charges every
+    # pair the cross tier (everything equally far — only the refusal rule
+    # and batching act); fat-tree grades 2/4/6 hops so the core distance
+    # matches the two-level cross tier.
+    models = {
+        "uniform": Topology.uniform(CROSS_LAT, CROSS_PER),
+        "two_level": two_level,
+        "fat_tree": Topology.fat_tree(
+            FAT_TREE_K,
+            hop_latency=CROSS_LAT / 6.0, hop_per_task=CROSS_PER / 6.0,
+        ),
+    }
+    sweep = {}
+    for name, topo in models.items():
+        leg = _hier_leg(cfg, topo, p, aware=True)
+        sweep[name] = leg
+        if csv:
+            print(
+                f"topo_sweep_{name},{leg['makespan']:.3f},"
+                f"xcell_moved={leg['xcell_moved']}"
+                f"_refused={leg['xcell_refused']}"
+            )
+    return {"headline": headline, "sweep": sweep}
+
+
+if __name__ == "__main__":
+    run()

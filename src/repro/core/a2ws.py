@@ -55,6 +55,7 @@ from .info_ring import CellBoard, RingInfo
 from .limp import LimpConfig, LimpState, SlowdownSchedule, normalize_duration
 from .policy import PolicyView, SchedPolicy, make_policy
 from .steal import OverlayBuffers, weighted_overlay
+from .topology import Topology
 
 __all__ = [
     "WorkerPool",
@@ -217,6 +218,7 @@ class WorkerPool:
         ewma_alpha: float = 0.25,
         slowdown: SlowdownSchedule | None = None,
         limp: LimpConfig | None = None,
+        topology: Topology | None = None,
     ) -> None:
         """``task_fn(worker_id, task) -> result`` runs the task on a worker.
 
@@ -259,6 +261,14 @@ class WorkerPool:
         published t so thieves strip its queue, stops initiating steals,
         and ``submit()`` stops routing new work to it.  ``limp=None`` keeps
         every policy bit-for-bit blind to stragglers.
+
+        ``topology``: the network-cost model (DESIGN.md §Topology plane).
+        When set, every policy view carries ``transfer_cost(j, ntasks)`` =
+        seconds to move loot from j to this worker, so victim selection is
+        distance-penalized, net-negative steals are refused, and a priced
+        plan moves its loot as ONE batched transfer whose cost the thief
+        pays in clock time (``StealPlan.delay``) before the loot lands.
+        ``topology=None`` (default) is bit-for-bit the unpriced scheduler.
         """
         self.num_workers = num_workers
         self.task_fn = task_fn
@@ -281,11 +291,22 @@ class WorkerPool:
         self.ewma_alpha = ewma_alpha
         self.slowdown = slowdown
         self.limp_cfg = limp
+        self.topology = topology
         # Owner-written limp flags (one bool per ring slot; plain list —
         # CPython element writes are atomic, readers tolerate staleness).
         self._limping: list[bool] = [False] * num_workers
         #: (time, worker, flagged) limp-detector transition telemetry
         self.limp_log: list[tuple[float, int, bool]] = []
+        # Wedge detector (DESIGN.md §Straggler plane, LimpConfig.stale_after):
+        # per-ring-slot heartbeat — the last time the worker's OWN loop
+        # reached a boundary (`_update_info`), NaN until its first one.  A
+        # worker stuck inside a task stops beating; an idle-but-healthy
+        # worker keeps beating through its poll loop.  `_stale_flagged`
+        # records whether the STALENESS path (not the owner EWMA) holds the
+        # limp flag.  Plain lists, benign races: a lost update delays one
+        # staleness verdict by one boundary.
+        self._hb_beat: list[float] = [float("nan")] * num_workers
+        self._stale_flagged: list[bool] = [False] * num_workers
         parts = self.policy.partition(tasks, num_workers)
         self.workers = [
             _WorkerState(
@@ -314,6 +335,11 @@ class WorkerPool:
             self.policy.bind_board(self.info)
         else:
             self.info = RingInfo(num_workers, self.radius, self.num_classes)
+        if topology is not None:
+            # Per-boundary pricing flows through the view hook; the policy
+            # hook exists for state that prices GLOBAL pairs outside a view
+            # (the hierarchical leader balancer's cross-cell gate).
+            self.policy.bind_topology(topology)
         self.done_counter = AtomicInt64(0)
         # Tasks ever made visible to the runtime (seed partition + submits).
         # Quiescence: submitted is bumped BEFORE the task is pushed, so
@@ -560,6 +586,8 @@ class WorkerPool:
                 w.start_time = now
                 self.workers[wid] = w
                 self._limping[wid] = False  # the ghost's flag dies with it
+                self._hb_beat[wid] = float("nan")  # heartbeat restarts too
+                self._stale_flagged[wid] = False
                 if self.info is not None:
                     self.info.reset_member(wid)  # back to the unreported state
                 self.dead[wid] = False
@@ -574,6 +602,8 @@ class WorkerPool:
                 self.workers.append(w)
                 self.dead.append(False)
                 self._limping.append(False)
+                self._hb_beat.append(float("nan"))
+                self._stale_flagged.append(False)
                 self._slot_threads.append(None)
                 self.num_workers = len(self.workers)
                 if not self._radius_explicit:
@@ -837,8 +867,8 @@ class WorkerPool:
         self.workers[worker].slow_mult = float(factor)
 
     def limping(self, worker: int) -> bool:
-        """Current owner-side limp verdict for ``worker`` (False when
-        detection is disabled)."""
+        """Current limp verdict for ``worker`` — owner-side EWMA or the
+        peer-side staleness flag (False when detection is disabled)."""
         return self._limping[worker]
 
     def _slow_factor(self, i: int, w: _WorkerState, now: float) -> float:
@@ -932,6 +962,9 @@ class WorkerPool:
         as a balance target while tasks keep arriving (DESIGN.md
         §Open-arrival).  Either way t_i = mean runtime, or elapsed wall time
         before the first task finishes (preemptive stealing, §2.2.1)."""
+        # Heartbeat for the wedge detector: the owner's loop reached a
+        # boundary RIGHT NOW — a worker stuck inside a task never gets here.
+        self._hb_beat[i] = self.clock()
         w = self.workers[i]
         if self.open_arrival:
             n_i = len(w.deque)
@@ -1010,6 +1043,9 @@ class WorkerPool:
             limp_row[iview] = self._limping[i]  # own flag: ground truth, no lag
         else:
             limp_row = None
+        wedge = self.limp_cfg is not None and math.isfinite(
+            self.limp_cfg.stale_after
+        )
         now = self.clock()
         elapsed = max(now - w.start_time, 1e-9)
         queued = np.zeros(m)
@@ -1044,6 +1080,40 @@ class WorkerPool:
                 # No report from j yet: preemptive wall-time estimate — j
                 # looks like it has finished 0 tasks in `elapsed` seconds.
                 t_view[jl] = elapsed
+            if wedge:
+                # Wedge detector (LimpConfig.stale_after): j's heartbeat is
+                # the last boundary its OWN loop reached (`_update_info`) —
+                # an idle worker keeps beating through its poll loop, so
+                # only a worker stuck INSIDE a task goes silent.  Silence
+                # past stale_after means j is wedged (slowdown → ∞): the
+                # owner-side EWMA can never flag it because it only observes
+                # COMPLETED tasks, so the PEER raises the limp flag —
+                # routing skips it, and the §2.2.1-style re-pricing below
+                # marks its whole queue surplus so thieves strip it.
+                hb = self._hb_beat[g]
+                if hb == hb and now - hb > self.limp_cfg.stale_after:
+                    if not self._stale_flagged[g]:
+                        self._stale_flagged[g] = True
+                        if not self._limping[g]:
+                            self._limping[g] = True
+                            with self._log_lock:
+                                self.limp_log.append((now, g, True))
+                    # Progressive re-pricing: j has produced nothing for the
+                    # whole stale window, so its believed speed can be no
+                    # better than one task per silence — closed-mode
+                    # done_est → 0 and thieves see the full queue.
+                    t_view[jl] = max(t_view[jl], now - hb)
+                    limp_row[jl] = True
+                elif self._stale_flagged[g]:
+                    # Heartbeat is back: hand the verdict back to the
+                    # owner-side EWMA hysteresis.
+                    self._stale_flagged[g] = False
+                    st = self.workers[g].limp_state
+                    verdict = bool(st.limping) if st is not None else False
+                    if self._limping[g] != verdict:
+                        self._limping[g] = verdict
+                        with self._log_lock:
+                            self.limp_log.append((now, g, verdict))
             if self.open_arrival:
                 # n_j IS the reported depth; no elapsed-time extrapolation —
                 # depth both drains (execution) and refills (arrivals), so
@@ -1121,6 +1191,22 @@ class WorkerPool:
             alive = lambda jl: (  # noqa: E731
                 mem[jl] >= 0 and not self.dead[mem[jl]]
             )
+        tcost = None
+        if self.topology is not None:
+            topo = self.topology
+            if members is None:
+                # transfer_cost(j, k) = seconds to move k tasks FROM j TO i.
+                tcost = lambda j, k, _t=topo, _i=i: _t.cost(  # noqa: E731
+                    int(j), _i, int(k)
+                )
+            else:
+                # Scoped view: j is a LOCAL slot — translate through the
+                # member map; a migration hole is unreachable (inf).
+                def tcost(jl, k, _t=topo, _i=i, _mem=members):
+                    g = int(_mem[jl]) if 0 <= jl < len(_mem) else -1
+                    if g < 0:
+                        return float("inf")
+                    return _t.cost(g, _i, int(k))
         return PolicyView(
             worker=iview,
             now=self.clock(),
@@ -1144,6 +1230,7 @@ class WorkerPool:
             limp=limp_row,
             members=members,
             nc_view=nc_view,
+            transfer_cost=tcost,
         )
 
     def _policy_boundary(self, i: int) -> bool:
@@ -1179,11 +1266,18 @@ class WorkerPool:
                     break
                 time.sleep(min(remaining, 1e-3))
         victim = self.workers[plan.victim]
-        if self.weighted and plan.work > 0.0 and view.rel is not None:
+        if (
+            self.weighted and plan.work > 0.0 and view.rel is not None
+            and plan.delay <= 0.0
+        ):
             # Work-greedy loot (DESIGN.md §Work-weighted stealing): claim
             # tail slots until the plan's work target is covered, pricing
             # each candidate by its class — the count `amount` is only the
             # mean-unit estimate and over/under-shoots under tail skew.
+            # A PRICED plan (delay > 0, §Topology plane) is excluded: its
+            # loot must move as ONE batched transfer — the per-task greedy
+            # loop would be k separately-priced hops the plan never paid
+            # for, so it takes the single batched claim below instead.
             rel = view.rel
             result = victim.deque.steal_by_work(
                 plan.work,

@@ -292,6 +292,12 @@ class TaskDeque:
         The returned ``StealResult`` synthesizes a single-op pre-image so
         ``observed_tail - observed_head - len(tasks)`` is the queue actually
         left behind, matching the contract of :meth:`steal`.
+
+        Topology contract (DESIGN.md §Topology plane): each claim here is a
+        separate protocol hop, so a PRICED plan (``StealPlan.delay`` > 0 —
+        the thief paid for ONE batched transfer of ``amount`` tasks) must
+        not use this path; its call sites route priced loot through the
+        single batched :meth:`steal` instead of k separately-priced hops.
         """
         taken: list = []
         cum = 0.0

@@ -506,11 +506,18 @@ class CellMap:
 class CellDigest:
     """One cell's compact self-description on the leader plane: aggregate
     queued work-seconds, task count, live membership, optional per-class
-    mix, and the richest member (the inter-cell steal target)."""
+    mix, and the richest member (the inter-cell steal target).
+
+    ``leader`` is the publishing leader's GLOBAL worker id — the digest's
+    cell-DISTANCE hint (DESIGN.md §Topology plane): a consuming leader can
+    price the link to a cell through any :class:`~repro.core.topology.
+    Topology` by measuring to its leader (or to ``top_worker`` when one is
+    named), even before it knows anything else about that cell's layout.
+    -1 = unpriced (digests published before the topology plane existed)."""
 
     __slots__ = (
         "cell", "time", "work", "tasks", "live", "top_worker", "top_queued",
-        "top_work", "mix", "seq",
+        "top_work", "mix", "seq", "leader",
     )
 
     def __init__(
@@ -525,6 +532,7 @@ class CellDigest:
         top_work: float = 0.0,
         mix: np.ndarray | None = None,
         seq: int = 0,
+        leader: int = -1,
     ) -> None:
         self.cell = cell
         self.time = time
@@ -536,6 +544,7 @@ class CellDigest:
         self.top_work = top_work
         self.mix = mix
         self.seq = seq
+        self.leader = leader
 
 
 class DigestBoard:

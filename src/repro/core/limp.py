@@ -37,11 +37,15 @@ the reference of last resort, for a worker that collapses before it has
 ``min_samples`` healthy completions of its own (boot-limped): there the
 own baseline does not exist yet and the window median is the only signal.
 
-Honest caveat (DESIGN.md §Straggler plane): the detector observes only
-COMPLETED tasks.  A fully wedged worker (slowdown -> infinity) never
-completes, never updates its EWMA, and never flags itself — its queue is
-rescued by the probe-steal/tail paths and, in a real deployment, by the
-heartbeat failure detector, not by this plane.
+Honest caveat (DESIGN.md §Straggler plane): the OWNER-side detector
+observes only COMPLETED tasks.  A fully wedged worker (slowdown ->
+infinity) never completes, never updates its EWMA, and never flags
+itself.  ``LimpConfig.stale_after`` closes that blind spot from the PEER
+side: the worker's own ring-cell version is its heartbeat (every
+``update_local`` state change bumps it), and a version that stands still
+for ``stale_after`` seconds gets the worker flagged limping by its peers
+— routing-skip, re-pricing and limp-drain then fire exactly as for a
+measured limp.  ``inf`` (default) keeps the pre-wedge behavior.
 """
 
 from __future__ import annotations
@@ -151,6 +155,17 @@ class LimpConfig:
     * ``min_samples``     — completions before the own baseline is trusted;
       until then the ring-published peer median is the reference (covers a
       worker that collapses right after boot).
+    * ``stale_after``     — the WEDGE detector (peer-side, satellite of the
+      topology PR): seconds without the worker's own ring-cell version
+      bumping before peers flag it limping anyway.  The owner-side EWMA
+      only observes COMPLETED tasks, so a fully wedged worker
+      (slowdown → ∞) never flags itself; ``update_local`` bumps the own
+      version on every state change, so a version that stands still for
+      ``stale_after`` seconds of communicate-windows is the heartbeat-loss
+      signal.  ``inf`` (default) disables the check — bit-for-bit the
+      pre-wedge detector.  Recovery is automatic: the next version bump
+      clears the staleness flag (the EWMA hysteresis then owns the
+      verdict again).
     * ``probation_every`` / ``probation_backoff_max`` — the canary path.
       The detector only observes COMPLETED tasks, and the response starves
       the flagged worker of exactly those: routing skips it and thieves
@@ -170,6 +185,7 @@ class LimpConfig:
     min_samples: int = 3
     probation_every: int = 4
     probation_backoff_max: int = 256
+    stale_after: float = _INF
 
     def __post_init__(self) -> None:
         if self.limp_factor <= 1.0:
@@ -186,6 +202,8 @@ class LimpConfig:
             raise ValueError("probation_every must be >= 1")
         if self.probation_backoff_max < self.probation_every:
             raise ValueError("probation_backoff_max must be >= probation_every")
+        if not self.stale_after > 0.0:
+            raise ValueError("stale_after must be > 0 (inf disables)")
 
     def recovery_half_life(self) -> float:
         """Healthy completions for ``recent`` to decay half-way back toward

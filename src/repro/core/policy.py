@@ -166,6 +166,13 @@ class PolicyView:
     #: per-class queue-count rows behind the weighted overlay (weighted mode
     #: only) — the leader's cell digest aggregates its per-class mix from it
     nc_view: np.ndarray | None = None
+    #: network pricing (DESIGN.md §Topology plane): ``transfer_cost(j,
+    #: ntasks)`` is the seconds it takes to move ``ntasks`` tasks from
+    #: worker ``j`` to THIS worker.  ``j`` speaks the view's index space —
+    #: LOCAL slots when the view is cell-scoped (the substrate's closure
+    #: translates through ``members``).  None = no network model — every
+    #: policy then behaves bit-for-bit as before this plane existed.
+    transfer_cost: Callable[[int, int], float] | None = None
 
 
 class SchedPolicy:
@@ -204,6 +211,13 @@ class SchedPolicy:
         hierarchy policies can drive board-side membership changes (member
         migration).  The simulator never calls this — it has no board, so
         migrations there touch only the :class:`CellMap`."""
+
+    def bind_topology(self, topology) -> None:
+        """The substrate hands over its :class:`~repro.core.topology.Topology`
+        when one is configured (DESIGN.md §Topology plane).  Per-boundary
+        pricing flows through ``view.transfer_cost`` regardless; this hook
+        exists for policy state that prices GLOBAL worker pairs outside any
+        scoped view — the hierarchical leader balancer.  Default: ignore."""
 
     # -------------------------------------------------------------- stealing
     def on_boundary(self, view: PolicyView) -> StealPlan | None:
@@ -280,12 +294,25 @@ class A2WSPolicy(SchedPolicy):
             view.rng, view.worker, view.n_view, view.t_view, view.queued,
             view.radius, idle=near_idle, open_arrival=view.open_arrival,
             unit=view.unit, qtasks=view.qtasks,
+            transfer_cost=view.transfer_cost,
         )
         if decision is None:
             return self._probe(view)
+        # Topology pricing (DESIGN.md §Topology plane): the plan's ``delay``
+        # carries the transfer cost of the whole batch — ONE priced transfer
+        # of k tasks.  The threaded substrate clock-paces it, the simulator
+        # lands the loot that many virtual seconds later (overlapped with
+        # thief compute).  A free link leaves delay at 0.0, which both
+        # planes read as "use the default transport cost".
+        delay = 0.0
+        if view.transfer_cost is not None:
+            delay = max(
+                float(view.transfer_cost(decision.victim, decision.amount)),
+                0.0,
+            )
         return StealPlan(
             decision.victim, decision.amount, decision.criterion,
-            work=decision.work,
+            delay=delay, work=decision.work,
         )
 
     def on_worker_join(self, worker: int, now: float) -> None:
@@ -317,6 +344,20 @@ class A2WSPolicy(SchedPolicy):
             limping = [j for j in candidates if view.limp[j]]
             if limping:
                 candidates = limping
+        tcost = view.transfer_cost
+        if tcost is not None:
+            costs = [max(float(tcost(j, 1)), 0.0) for j in candidates]
+            if any(c > 0.0 for c in costs):
+                # Distance-biased probe draw: a probe is speculative, so
+                # spend it where the (single-task) transfer is cheap.  The
+                # all-zero case keeps the unweighted rng.choice call —
+                # numpy's weighted draw consumes the stream differently,
+                # and the zero-cost model must stay bit-for-bit unpriced.
+                w = np.array([1.0 / (1.0 + c) for c in costs])
+                victim = int(view.rng.choice(candidates, p=w / w.sum()))
+                return StealPlan(victim, 1, "probe", delay=costs[
+                    candidates.index(victim)
+                ])
         return StealPlan(int(view.rng.choice(candidates)), 1, "probe")
 
 
@@ -388,13 +429,20 @@ class HierarchicalA2WSPolicy(SchedPolicy):
         self._lag = [0] * k    # consecutive fires with the gap still open
         self._lock = threading.Lock()
         self._board = None     # threaded CellBoard (bind_board); None in sim
+        self._topology = None  # network pricing (bind_topology); None = free
         self.xcell_steals = 0  # telemetry: inter-cell steal plans fired
         self.xcell_moved = 0   # telemetry: member migrations executed
+        self.xcell_refused = 0  # telemetry: fires refused as net-negative
         self.migrations: list[tuple[float, int, int, int]] = []
 
     # ------------------------------------------------------------- lifecycle
     def bind_board(self, board) -> None:
         self._board = board
+
+    def bind_topology(self, topology) -> None:
+        # The balancer prices GLOBAL pairs (leader <- rich cell's top
+        # worker), which no cell-scoped view.transfer_cost can express.
+        self._topology = topology
 
     def on_start(self, depths: Sequence[int], now: float) -> None:
         with self._lock:
@@ -404,6 +452,7 @@ class HierarchicalA2WSPolicy(SchedPolicy):
             self._lag = [0] * k
             self.xcell_steals = 0
             self.xcell_moved = 0
+            self.xcell_refused = 0
             self.migrations = []
 
     def on_worker_join(self, worker: int, now: float) -> None:
@@ -474,6 +523,7 @@ class HierarchicalA2WSPolicy(SchedPolicy):
         self.digests.publish(CellDigest(
             cell, view.now, float(work_j.sum()), tasks, int(live.sum()),
             top_worker, top_queued, top_work, mix,
+            leader=int(members[view.worker]),
         ))
 
     @staticmethod
@@ -498,6 +548,8 @@ class HierarchicalA2WSPolicy(SchedPolicy):
         ri = max(range(len(peers)), key=lambda k: aged[k])
         rich = peers[ri]
         gap = aged[ri] - own.work
+        amount = max(1, rich.top_queued // 2)
+        delay = 0.0
         with self._lock:
             if self._cool[cell] > 0:
                 self._cool[cell] -= 1
@@ -508,6 +560,29 @@ class HierarchicalA2WSPolicy(SchedPolicy):
                 return None
             if rich.top_worker < 0 or rich.top_queued < 1:
                 return None
+            if self._topology is not None:
+                # Cross-cell pricing (DESIGN.md §Topology plane): the batch
+                # is net-negative when the work-seconds it moves don't beat
+                # the link cost — the hysteresis band must not fire on a
+                # steal the network would eat.  Refusal consumes no
+                # cooldown: the band re-judges at the next leader boundary.
+                delay = max(
+                    float(self._topology.cost(
+                        int(rich.top_worker), int(view.members[view.worker]),
+                        amount,
+                    )),
+                    0.0,
+                )
+                if delay > 0.0:
+                    per = rich.work / rich.tasks if rich.tasks >= 1.0 else 0.0
+                    moved = (
+                        rich.top_work / 2.0
+                        if rich.top_work > 0.0
+                        else amount * per
+                    )
+                    if not (moved > delay):
+                        self.xcell_refused += 1
+                        return None
             if self._cool[cell] > 0:
                 return None
             self._cool[cell] = self.cooldown
@@ -523,9 +598,10 @@ class HierarchicalA2WSPolicy(SchedPolicy):
                         self.cells.migrate(mover, rich.cell)
                     self.xcell_moved += 1
                     self.migrations.append((view.now, mover, cell, rich.cell))
-        amount = max(1, rich.top_queued // 2)
         work = rich.top_work / 2.0 if view.unit is not None else 0.0
-        return StealPlan(rich.top_worker, amount, "x-cell", work=work)
+        return StealPlan(
+            rich.top_worker, amount, "x-cell", delay=delay, work=work
+        )
 
     def _pick_migrant(self, view: PolicyView) -> int:
         """Last live follower of the leader's cell (never the leader itself

@@ -45,6 +45,7 @@ Modelled costs (all configurable):
 from __future__ import annotations
 
 import heapq
+import math
 from bisect import bisect_right
 from collections import deque as _deque
 from dataclasses import dataclass, field, replace
@@ -55,6 +56,7 @@ from .a2ws import latency_percentiles
 from .limp import LimpConfig, LimpState, SlowdownSchedule, normalize_duration
 from .policy import PolicyView, SchedPolicy, make_policy
 from .steal import OverlayBuffers, neighborhood, weighted_overlay
+from .topology import Topology
 
 __all__ = [
     "SimConfig",
@@ -174,6 +176,21 @@ class SimConfig:
     #            ablation baseline, and bit-for-bit the pre-PR behaviour.
     slowdowns: SlowdownSchedule | tuple = ()
     limp: LimpConfig | None = None
+    # --- topology plane (DESIGN.md §Topology plane) ---
+    # topology:       network-cost model.  When set, a steal's loot travels
+    #                 cost(victim, thief, take) virtual seconds on the link
+    #                 (overlapped with thief compute) instead of the flat
+    #                 steal_latency/steal_per_task default; a link priced at
+    #                 0.0 falls back to the default transport, so the
+    #                 all-zero topology is bit-for-bit topology=None.  With
+    #                 contention > 0 a started transfer keeps its directed
+    #                 link busy for cost·contention seconds and later
+    #                 transfers on the same link queue behind it.
+    # topology_aware: False = BLIND ablation — transport is still charged by
+    #                 the model, but the policy never sees transfer_cost, so
+    #                 it plans exactly as if the network were free.
+    topology: Topology | None = None
+    topology_aware: bool = True
     # --- CTWS ---
     token_base: float = 2e-3
     token_per_node: float = 2.5e-4
@@ -254,6 +271,9 @@ class SimResult:
     # per-task arrival-to-completion sojourn times (open-arrival modes only)
     limp_events: list[tuple[float, int, bool]] = field(default_factory=list)
     # (time, node, flagged) limp-detector transitions (cfg.limp runs only)
+    steal_log: list[tuple[float, int, int, int]] = field(default_factory=list)
+    # (time, thief, victim, take) per successful steal — lets a caller
+    # attribute moved tasks to links/cells (topology benchmarks)
     boundaries: int = 0
     # total policy consultations (view builds) — overhead denominator
 
@@ -395,6 +415,15 @@ def simulate(policy: str | SchedPolicy, cfg: SimConfig) -> SimResult:
     has_slow = bool(sched.events)
     detect = cfg.limp is not None
 
+    # Topology plane (DESIGN.md §Topology plane): the network-cost model and
+    # the per-directed-link busy-until horizon (contention serialization).
+    topo = cfg.topology
+    if topo is not None and cfg.topology_aware:
+        # The blind ablation must NOT bind: the policy (including the
+        # hierarchical leader balancer) plans as if loot moved for free.
+        pol.bind_topology(topo)
+    link_busy: dict[tuple[int, int], float] = {}
+
     # Elastic membership: every join appends one ring position, so all
     # per-node state is sized for the FINAL ring up front; `p` is the
     # currently-materialised prefix and `alive_sim` masks live members.
@@ -504,6 +533,14 @@ def simulate(policy: str | SchedPolicy, cfg: SimConfig) -> SimResult:
     limping = np.zeros(pmax, bool)
     limp_states = [LimpState(cfg.limp) for _ in range(pmax)] if detect else None
     limp_events: list[tuple[float, int, bool]] = []
+    # Wedge detector (LimpConfig.stale_after): the OWNER-driven heartbeat —
+    # last time each node reported its own cell at a boundary it reached
+    # itself.  Thief-side victim publishes (the record_remote analogue) do
+    # NOT count: in the threaded plane a steal never bumps the victim's own
+    # version, and a wedged node being stolen from must stay flagged.
+    wedge = detect and math.isfinite(cfg.limp.stale_after)
+    own_report = np.zeros(pmax, np.float64)
+    stale_flagged = np.zeros(pmax, bool)
 
     def cls_payload(i: int) -> dict:
         """Per-class cell payload published alongside every (n, t) report."""
@@ -522,6 +559,7 @@ def simulate(policy: str | SchedPolicy, cfg: SimConfig) -> SimResult:
     arrived = 0 if open_mode else total_tasks
     records: list[tuple[int, float, float]] = []
     latencies: list[float] = []
+    steal_log: list[tuple[float, int, int, int]] = []
     stats = {"steals": 0, "failed": 0, "moved": 0, "done": 0, "boundaries": 0}
     rr_state = [0]  # round-robin router for arrivals / drain re-sprays
 
@@ -740,6 +778,30 @@ def simulate(policy: str | SchedPolicy, cfg: SimConfig) -> SimResult:
                 limp_view[jl] = hist[g].limp_at(max(now - delay, 0.0))
             if t_j != t_j:  # no report yet: preemptive wall-time estimate
                 t_j = max(now - born[i], 1e-9)  # the THIEF's elapsed time
+            if wedge:
+                # Heartbeat staleness (LimpConfig.stale_after): g has not
+                # reported its own cell for the whole window — it is wedged
+                # (slowdown → ∞) and its owner-side EWMA will never flag it.
+                # The PEER raises the limp flag and re-prices g's believed
+                # speed to the silence itself, so closed-mode done_est → 0
+                # and thieves see g's full queue as surplus.
+                hb = float(own_report[g])
+                if now - hb > cfg.limp.stale_after:
+                    if not stale_flagged[g]:
+                        stale_flagged[g] = True
+                        if not limping[g]:
+                            limping[g] = True
+                            limp_events.append((now, g, True))
+                    t_j = max(t_j, now - hb)
+                    limp_view[jl] = True
+                elif stale_flagged[g]:
+                    # Heartbeat is back: hand the verdict back to the
+                    # owner-side EWMA hysteresis.
+                    stale_flagged[g] = False
+                    verdict = bool(limp_states[g].limping)
+                    if bool(limping[g]) != verdict:
+                        limping[g] = verdict
+                        limp_events.append((now, g, verdict))
             n_view[jl] = n_j
             t_view[jl] = t_j
             if open_mode:
@@ -791,6 +853,21 @@ def simulate(policy: str | SchedPolicy, cfg: SimConfig) -> SimResult:
             mem = members
             depth_f = lambda jl: depth(int(mem[jl])) if mem[jl] >= 0 else 0
             alive_f = lambda jl: bool(mem[jl] >= 0 and alive_sim[mem[jl]])
+        tcost = None
+        if topo is not None and cfg.topology_aware:
+            if members is None:
+                # transfer_cost(j, k) = seconds to move k tasks FROM j TO i.
+                tcost = lambda j, k, _i=i: topo.cost(  # noqa: E731
+                    int(j), _i, int(k)
+                )
+            else:
+                # Scoped view: j is a LOCAL slot — translate through the
+                # member map; a migration hole is unreachable (inf).
+                def tcost(jl, k, _i=i, _mem=members):
+                    g = int(_mem[jl]) if 0 <= jl < len(_mem) else -1
+                    if g < 0:
+                        return float("inf")
+                    return topo.cost(g, _i, int(k))
         return PolicyView(
             worker=iview,
             now=now,
@@ -815,6 +892,7 @@ def simulate(policy: str | SchedPolicy, cfg: SimConfig) -> SimResult:
             inflight=lambda: int(in_transit[i]),
             members=members,
             nc_view=nc_view,
+            transfer_cost=tcost,
         )
 
     def boundary(i: int, now: float) -> bool:
@@ -829,14 +907,16 @@ def simulate(policy: str | SchedPolicy, cfg: SimConfig) -> SimResult:
             return False
         v = plan.victim
         avail = depth(v)  # get-accumulate ground truth at the victim
-        if plan.work > 0.0 and view.rel is not None:
+        if plan.work > 0.0 and view.rel is not None and plan.delay <= 0.0:
             # Work-greedy loot: pop tail tasks until the plan's work target
             # is covered, refusing a candidate whose work would overshoot
             # the target by more than the remaining deficit (mirrors
             # TaskDeque.steal_by_work in the threaded plane).  The cap
             # bounds tasks by ~2x the work target, NOT by the count
             # estimate: a lighter-than-expected tail may take more than
-            # plan.amount tasks to fill the planned work.
+            # plan.amount tasks to fill the planned work.  A PRICED plan
+            # (delay > 0, §Topology plane) skips this: its loot moves as
+            # ONE batched transfer of exactly the tasks it paid for.
             rel_v = view.rel
             cap = max(plan.amount, int(np.ceil(2.0 * plan.work)))
             stamps = []
@@ -859,16 +939,36 @@ def simulate(policy: str | SchedPolicy, cfg: SimConfig) -> SimResult:
             return False
         if uses_ring:
             publish(v, now)
-        # Transport: policy-priced dispatch (LW leader round-trip) or the
-        # plane's default steal cost.
-        if plan.delay > 0.0:
-            arrive = now + plan.delay
+        # Transport: the topology model's link cost on the ACTUAL take
+        # (charged identically whether the policy planned blind or priced —
+        # the ablation difference must live in the decisions, not the
+        # fare), else the policy-priced dispatch delay (LW round-trip),
+        # else the plane's default steal cost.  A zero-priced link falls
+        # back to the default transport — the all-zero topology is
+        # bit-for-bit topology=None.
+        if topo is not None:
+            cost = topo.cost(v, i, take)
+        elif plan.delay > 0.0:
+            cost = plan.delay
+        else:
+            cost = 0.0
+        if cost > 0.0:
+            start_tx = now
+            if topo is not None and topo.contention > 0.0:
+                # Per-directed-link serialization: a started transfer holds
+                # the link for cost·contention seconds; later transfers on
+                # the same link queue behind it.
+                key = (v, i)
+                start_tx = max(now, link_busy.get(key, 0.0))
+                link_busy[key] = start_tx + cost * topo.contention
+            arrive = start_tx + cost
         else:
             arrive = now + cfg.steal_latency + cfg.steal_per_task * take
         in_transit[i] += take
         push_event(arrive, "receive", i, stamps)
         stats["steals"] += 1
         stats["moved"] += take
+        steal_log.append((now, i, v, take))
         pol.on_steal_result(view, plan, take, depth(v))
         return True
 
@@ -958,6 +1058,7 @@ def simulate(policy: str | SchedPolicy, cfg: SimConfig) -> SimResult:
                 # Update own info + history (Alg. 1 line 11 + communicate).
                 cur_t[i] = runtime_sum[i] / executed[i]
                 publish(i, now)
+                own_report[i] = now  # owner-driven heartbeat (wedge detector)
             # Smart stealing right after finishing a task (preemptive);
             # a node retired mid-task completes it, then leaves the loop.
             boundary(i, now)
@@ -995,6 +1096,11 @@ def simulate(policy: str | SchedPolicy, cfg: SimConfig) -> SimResult:
                 continue  # no longer idle
             if stats["done"] >= total_tasks:
                 continue
+            if uses_ring:
+                # An idle poll IS a heartbeat: the threaded idle loop keeps
+                # reaching boundaries and bumping its own ring row, so only
+                # a worker stuck INSIDE a task goes silent (the wedge).
+                own_report[i] = now
             if not boundary(i, now):
                 # mild exponential backoff so long idle tails stay cheap
                 delay = cfg.retry_interval * (1.3 ** min(payload, 12))
@@ -1007,6 +1113,7 @@ def simulate(policy: str | SchedPolicy, cfg: SimConfig) -> SimResult:
             p = i + 1
             alive_sim[i] = True
             born[i] = now
+            own_report[i] = now  # heartbeat baseline starts at the join
             radius = _radius_for(p)
             if uses_ring:
                 hist[i].append(now, 0.0, float("nan"))
@@ -1044,5 +1151,6 @@ def simulate(policy: str | SchedPolicy, cfg: SimConfig) -> SimResult:
         records=records,
         latencies=latencies,
         limp_events=limp_events,
+        steal_log=steal_log,
         boundaries=stats["boundaries"],
     )

@@ -47,7 +47,7 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass
-from typing import Sequence
+from typing import Callable, Sequence
 
 import numpy as np
 
@@ -179,12 +179,35 @@ def round_steal_rate(
     return int(lo) if g_lo < g_hi else int(hi)
 
 
+def _distance_penalty(
+    cand: np.ndarray,
+    w: np.ndarray,
+    tcost: "Callable[[int, int], float] | None",
+    ref: float,
+) -> np.ndarray:
+    """Divide victim weights by ``1 + cost(j, 1)/ref`` (DESIGN.md §Topology
+    plane): between equally-attractive victims, prefer the one whose loot is
+    cheap to move.  ``ref`` is the thief's own per-task seconds, so the
+    penalty is the per-task transfer cost measured in thief task-times.
+    With ``tcost=None`` — or a model pricing every candidate at 0.0, where
+    each weight divides by exactly 1.0 — the weights are bit-for-bit the
+    unpriced ones."""
+    if tcost is None:
+        return w
+    pen = np.array(
+        [1.0 + max(float(tcost(int(j), 1)), 0.0) / ref for j in cand],
+        dtype=np.float64,
+    )
+    return w / pen
+
+
 def victim_weights(
     i: int,
     n: Sequence[float],
     t: Sequence[float],
     queued: Sequence[float],
     radius: int,
+    tcost: "Callable[[int, int], float] | None" = None,
 ) -> tuple[np.ndarray, np.ndarray, str]:
     """Victim-selection probabilities (§2.2.2) for thief ``i``.
 
@@ -202,6 +225,11 @@ def victim_weights(
     Criterion 2 — *in-pair comparison* (Eq. 9/10): used when no candidate has
     S_j < 0 but queued tasks remain.  Each pair is evaluated in isolation and
     weighted by the pairwise steal volume.
+
+    ``tcost``: optional ``(victim, ntasks) -> seconds`` transfer-cost hook
+    (DESIGN.md §Topology plane).  Weights in BOTH criteria are divided by
+    ``1 + cost/ref`` so nearby victims win ties; ``None`` (or an all-zero
+    model) reproduces the unpriced weights bit-for-bit.
     """
     n = np.asarray(n, dtype=np.float64)
     t = np.asarray(t, dtype=np.float64)
@@ -210,6 +238,7 @@ def victim_weights(
     if not idx:
         return np.array([], dtype=np.int64), np.array([]), "closest-rate"
 
+    ref = max(float(t[i]), _EPS) if math.isfinite(t[i]) else 1.0
     s_i = steal_rate_radius(i, n, t, radius)
     s_j = np.array([steal_rate_radius(j, n, t, radius) for j in idx])
     has_tasks = queued[idx] > 0.0
@@ -219,8 +248,12 @@ def victim_weights(
         cand = np.asarray(idx, dtype=np.int64)[surplus]
         volume = -s_j[surplus]
         mismatch = np.abs(volume - max(s_i, 0.0))
-        w = volume / (1.0 + mismatch)
-        return cand, w / w.sum(), "closest-rate"
+        w = _distance_penalty(cand, volume / (1.0 + mismatch), tcost, ref)
+        w_sum = float(w.sum())
+        if not math.isfinite(w_sum) or w_sum <= 0.0:
+            # Every candidate priced unreachable (infinite-cost links).
+            return np.array([], dtype=np.int64), np.array([]), "closest-rate"
+        return cand, w / w_sum, "closest-rate"
 
     # In-pair fallback: the subsystem looks balanced yet queues are non-empty.
     pair = np.array(
@@ -230,8 +263,11 @@ def victim_weights(
     if not good.any():
         return np.array([], dtype=np.int64), np.array([]), "in-pair"
     cand = np.asarray(idx, dtype=np.int64)[good]
-    w = pair[good]
-    return cand, w / w.sum(), "in-pair"
+    w = _distance_penalty(cand, pair[good], tcost, ref)
+    w_sum = float(w.sum())
+    if not math.isfinite(w_sum) or w_sum <= 0.0:
+        return np.array([], dtype=np.int64), np.array([]), "in-pair"
+    return cand, w / w_sum, "in-pair"
 
 
 def select_victim(
@@ -241,9 +277,10 @@ def select_victim(
     t: Sequence[float],
     queued: Sequence[float],
     radius: int,
+    tcost: "Callable[[int, int], float] | None" = None,
 ) -> tuple[int | None, str]:
     """Sample a victim for thief ``i`` (§2.2.2); None if no viable victim."""
-    cand, w, crit = victim_weights(i, n, t, queued, radius)
+    cand, w, crit = victim_weights(i, n, t, queued, radius, tcost)
     if len(cand) == 0:
         return None, crit
     return int(rng.choice(cand, p=w)), crit
@@ -550,6 +587,7 @@ def plan_steal(
     *,
     unit: Sequence[float] | None = None,
     qtasks: Sequence[float] | None = None,
+    transfer_cost: Callable[[int, int], float] | None = None,
 ) -> StealDecision | None:
     """End-to-end smart-stealing decision for thief ``i`` (Alg. 1 lines 4-6).
 
@@ -574,6 +612,16 @@ def plan_steal(
     must then pass reported depths via ``queued`` (no elapsed-time
     extrapolation — depth both drains and refills under arrivals) and the
     tail rule runs in its latency-oriented tie-accepting form.
+
+    ``transfer_cost``: optional ``(victim, ntasks) -> seconds`` network
+    pricing hook (DESIGN.md §Topology plane).  Victim weights are
+    distance-penalized, and a sized plan is priced as *work-gained minus
+    transfer-cost*: the γ improvement of moving the loot (seconds) must
+    exceed the cost of moving it, else the steal is REFUSED — a refused
+    preemptive plan falls through to the tail rule (which may find a
+    nearer victim), a refused tail plan returns None.  ``None``, or a
+    model pricing every link at 0.0, reproduces the unpriced plan
+    bit-for-bit, rng stream included.
 
     ``unit``/``qtasks``: work-weighted mode (DESIGN.md §Work-weighted
     stealing).  ``n``/``queued`` are then measured in equivalent
@@ -604,7 +652,7 @@ def plan_steal(
     # yields a NaN steal rate — no basis for Eq. 5, so no preemptive plan
     # (the tail rule below still works against reported victims).
     if math.isfinite(s_i) and s_i > 0.0:
-        victim, crit = select_victim(rng, i, n, t, queued, radius)
+        victim, crit = select_victim(rng, i, n, t, queued, radius, transfer_cost)
         if victim is not None:
             if crit == "in-pair":
                 s = pair_steal_rate(
@@ -619,10 +667,30 @@ def plan_steal(
                 )
                 amount = int(min(amount, qtasks[victim]))
                 if amount >= 1:
-                    return StealDecision(
-                        victim=victim, amount=amount, criterion=crit,
-                        work=amount * float(unit[victim]) if weighted else 0.0,
-                    )
+                    # Net pricing (§Topology plane): the γ improvement of
+                    # moving the loot must beat the cost of moving it.  A
+                    # refused plan falls through to the tail rule, which
+                    # distance-penalizes toward nearer victims.
+                    refused = False
+                    if transfer_cost is not None:
+                        cost = max(
+                            float(transfer_cost(int(victim), int(amount))), 0.0
+                        )
+                        if cost > 0.0:
+                            u = float(unit[victim])
+                            args = (
+                                float(n[i]), float(t[i]),
+                                float(n[victim]), float(t[victim]),
+                            )
+                            gain = gamma(0.0, *args) - gamma(amount * u, *args)
+                            refused = not (gain > cost)
+                    if not refused:
+                        return StealDecision(
+                            victim=victim, amount=amount, criterion=crit,
+                            work=(
+                                amount * float(unit[victim]) if weighted else 0.0
+                            ),
+                        )
 
     # Tail rule: γ on remaining (queued) work against a probabilistically
     # chosen loaded victim.  This is the "final stages" behaviour of §2.2 —
@@ -647,6 +715,11 @@ def plan_steal(
     if not loaded:
         return None
     w = np.array([queued[j] * t[j] for j in loaded], dtype=np.float64)
+    if transfer_cost is not None:
+        ref = max(float(t[i]), _EPS) if math.isfinite(t[i]) else 1.0
+        w = _distance_penalty(
+            np.asarray(loaded, dtype=np.int64), w, transfer_cost, ref
+        )
     w_sum = float(w.sum())
     if not math.isfinite(w_sum) or w_sum <= 0.0:
         return None  # degenerate weights (NaN boot state / zero work)
@@ -660,6 +733,25 @@ def plan_steal(
     )
     if amount < 1:
         return None
+    if transfer_cost is not None:
+        cost = max(float(transfer_cost(int(victim), int(amount))), 0.0)
+        if cost > 0.0:
+            # Net pricing on REMAINING work, mirroring tail_steal_amount's
+            # γ: refuse when the pair-makespan improvement (plus, for an
+            # idle open-arrival thief, the per-task wait the rescue saves)
+            # does not beat the transfer cost.
+            u = max(float(unit[victim]), _EPS)
+            w_v = float(math.floor(qtasks[victim])) * u
+            q_i, t_i_s, t_v = float(queued[i]), float(t[i]), float(t[victim])
+            g0 = max(w_v * t_v, q_i * t_i_s)
+            g1 = max((w_v - amount * u) * t_v, (q_i + amount * u) * t_i_s)
+            rescue = (
+                u * t_v
+                if open_arrival and float(qtasks[i]) < 1.0
+                else 0.0
+            )
+            if not (g0 - g1 + rescue > cost):
+                return None
     return StealDecision(
         victim=victim, amount=amount, criterion="tail",
         work=amount * float(unit[victim]) if weighted else 0.0,

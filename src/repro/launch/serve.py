@@ -47,6 +47,7 @@ import numpy as np
 from repro.configs.base import ARCH_IDS, get_smoke
 from repro.core.limp import LimpConfig, SlowdownEvent, SlowdownSchedule
 from repro.core.policy import POLICIES
+from repro.core.topology import parse_topology
 from repro.models import lm
 from repro.serve.engine import AutoscaleConfig, Replica, ServePool
 
@@ -140,7 +141,9 @@ def _open_main(cfg, params, args) -> None:
         if args.limp_factor > 1.0:
             limp = LimpConfig(limp_factor=args.limp_factor)
     pool = ServePool(replicas, seed=args.seed, policy=args.policy,
-                     autoscale=autoscale, slowdown=slowdown, limp=limp)
+                     autoscale=autoscale, slowdown=slowdown, limp=limp,
+                     topology=parse_topology(args.topology, args.replicas),
+                     migration_cost=args.migration_cost)
     pool.start()
     t0 = time.perf_counter()
 
@@ -199,6 +202,15 @@ def main() -> None:
                     help="which boot replica the straggler fault hits")
     ap.add_argument("--limp-after", type=float, default=0.5,
                     help="seconds after start() the straggler fault begins")
+    ap.add_argument("--topology", default="none",
+                    help="network-cost model pricing steals between replicas "
+                         "(DESIGN.md §Topology plane): none | "
+                         "uniform:LAT:PER_TASK | two-level:K:INTRA:CROSS | "
+                         "fat-tree:K:HOP (costs in seconds; open mode)")
+    ap.add_argument("--migration-cost", type=float, default=0.0,
+                    help="per-request warm-state cost of serving a stolen "
+                         "request cold, folded into every remote link of "
+                         "--topology (seconds; open mode)")
     ap.add_argument("--limp-factor", type=float, default=4.0,
                     help="limp detector threshold: flag a replica whose "
                          "recent service time exceeds its baseline by this "

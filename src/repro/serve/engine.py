@@ -39,6 +39,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.core.a2ws import PoolCollapsed, RunStats, WorkerPool
 from repro.core.limp import LimpConfig, SlowdownSchedule
 from repro.core.policy import SchedPolicy
+from repro.core.topology import Topology
 from repro.models import lm
 from repro.models.config import ModelConfig
 from repro.parallel.sharding import (
@@ -392,6 +393,18 @@ class ServePool:
     the shape heuristic cannot size, pass an explicit ``cost_class_fn``
     (request dict -> class index) with ``num_classes``.  Neither given →
     count-based scheduling, bit-for-bit the old behaviour.
+
+    **Migration cost** (DESIGN.md §Topology plane): stealing a queued
+    request between replicas is not free — the thief replica serves it
+    cold (prefix cache, paged KV, warm weights all live on the victim).
+    ``migration_cost`` is the per-request warm-state price in seconds,
+    folded into every remote link of ``topology`` (or onto a zero-cost
+    uniform topology when none is given) via ``Topology.add_per_task`` —
+    so victim selection discounts distant/cold steals, net-negative
+    migrations are refused, and the thief pays the cost before the loot
+    lands, through exactly the same pricing hook as the network.  Both
+    default to off (``topology=None, migration_cost=0.0``) = bit-for-bit
+    the unpriced pool.
     """
 
     def __init__(
@@ -407,12 +420,24 @@ class ServePool:
         num_classes: int | None = None,
         slowdown: SlowdownSchedule | None = None,
         limp: LimpConfig | None = None,
+        topology: Topology | None = None,
+        migration_cost: float = 0.0,
     ):
         self.replicas = replicas
         self.radius = radius
         self.seed = seed
         self.policy = policy
         self.autoscale = autoscale
+        if migration_cost < 0.0 or migration_cost != migration_cost:
+            raise ValueError("migration_cost must be >= 0")
+        # Per-request warm-state weight rides the same pricing hook as the
+        # network: fold it into every remote per-task cost of the topology
+        # (a zero-cost uniform base when no network model was given).
+        if migration_cost > 0.0:
+            base = topology if topology is not None else Topology.uniform()
+            topology = base.add_per_task(migration_cost, name=f"{base.name}+migration")
+        self.topology = topology
+        self.migration_cost = migration_cost
         # Straggler plane (DESIGN.md §Straggler plane): ``slowdown`` scripts
         # degraded-but-alive faults into the replica runtime; ``limp``
         # enables the owner-side detector that re-prices a limping replica's
@@ -496,6 +521,7 @@ class ServePool:
             num_classes=self.num_classes,
             slowdown=self.slowdown,
             limp=self.limp,
+            topology=self.topology,
         )
         # Share the runtime's transition log so limp telemetry stays
         # readable after shutdown() drops the runtime reference.
