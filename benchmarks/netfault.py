@@ -1,0 +1,190 @@
+"""Fault-fabric benchmark (DESIGN.md §Fault fabric).
+
+The headline robustness claim: a P = 64 open-arrival two-level fabric under
+a hostile network — every steal message crosses links that drop 10% of
+traffic, and a 30-second partition cuts the pool along its cell boundary
+mid-run.  Three legs on the virtual-time plane, identical Poisson trace per
+seed, the only variable being the fault response:
+
+* **no_fault** — the clean PR-7 scheduler (``netfaults=None``), the
+  baseline the others are normalised against.
+* **leased**   — the hardened fabric: leased two-phase transfers return
+  dropped loot to the victim at lease expiry, failed requests back off per
+  (thief, victim) with a link-health EWMA discounting flaky links, and each
+  partition side degrades gracefully (staleness-excluded victims, gated
+  gossip, heal-time resync).  Acceptance: completes ALL tasks with zero
+  losses and a p99 within 2x the no-fault baseline.
+* **no_retry** — the ablation (``hardened=False``): same drops, no leases,
+  no backoff, no health discounting.  Dropped transfers lose their tasks
+  outright — the leg either strands work (``lost_tasks > 0``) or its tail
+  degrades >= 3x.
+
+Emits ``BENCH_netfault.json`` via ``benchmarks.run``: per-leg latency
+percentiles, p99 ratios vs no_fault, loss/lease telemetry, and the two
+acceptance booleans.
+"""
+
+from __future__ import annotations
+
+from dataclasses import replace
+
+import numpy as np
+
+from .common import timed  # noqa: F401  (harness convention)
+
+import sys
+
+sys.path.insert(0, "src")
+from repro.core.netfault import (  # noqa: E402
+    LinkFault,
+    NetFaultSchedule,
+    PartitionEvent,
+)
+from repro.core.policy import HierarchicalA2WSPolicy  # noqa: E402
+from repro.core.simulator import SimConfig, simulate, table2_speeds  # noqa: E402
+from repro.core.topology import Topology  # noqa: E402
+
+P = 64
+#: every link drops 10% of steal messages for the whole run (ISSUE headline)
+DROP = 0.10
+#: one partition cuts the pool in half along its CELL boundary: each side
+#: keeps a working two-level fabric (whole cells + their leaders), so the
+#: degradation under test is the steal/gossip fabric, not a beheaded cell
+PARTITION_AT = 10.0
+PARTITION_LEN = 30.0
+#: ~35% utilisation (capacity = sum(speeds)/task_cost = 80 tasks/s): stable
+#: before, during and after the faults, so tail degradation is a FABRIC
+#: failure (lost loot, unpaced retries into dead links), not overload
+TASK_COST = 8.0
+RATE = 28.0
+#: two-level fare: intra-cell free, cross-cell latency + per-task (the
+#: topology benchmark's skewed fabric at the same price scale)
+CROSS_LAT, CROSS_PER = 1e-1, 2e-2
+
+
+def _cfg(seed: int, num_tasks: int, part_at: float, part_len: float,
+         rate: float) -> SimConfig:
+    cells = HierarchicalA2WSPolicy(P).cells  # the deterministic cell split
+    half = tuple(
+        w for c in range(cells.num_cells // 2) for w in cells.members(c)
+    )
+    nf = NetFaultSchedule(
+        faults=(LinkFault(drop_prob=DROP),),
+        partitions=(
+            PartitionEvent(side=half, start=part_at, duration=part_len),
+        ),
+    )
+    return SimConfig(
+        speeds=table2_speeds("C4"),
+        num_tasks=num_tasks,
+        task_cost=TASK_COST,
+        seed=seed,
+        arrival="poisson",
+        arrival_rate=rate,
+        topology=Topology.two_level(
+            cells, cross_latency=CROSS_LAT, cross_per_task=CROSS_PER,
+        ),
+        netfaults=nf,
+    )
+
+
+def _variants(cfg: SimConfig) -> dict[str, SimConfig]:
+    return {
+        "no_fault": cfg.with_(netfaults=None),
+        "leased": cfg,
+        "no_retry": cfg.with_(
+            netfaults=replace(cfg.netfaults, hardened=False)
+        ),
+    }
+
+
+def run(seeds: int = 3, fast: bool = False, csv: bool = True):
+    num_tasks = 240 if fast else 1600
+    part_at = 2.0 if fast else PARTITION_AT
+    part_len = 5.0 if fast else PARTITION_LEN
+    rate = 20.0 if fast else RATE
+
+    names = ("no_fault", "leased", "no_retry")
+    per = {name: {"p50": [], "p99": [], "makespan": []} for name in names}
+    telemetry = {
+        "leased_net_failed": [], "leased_lease_expired": [],
+        "no_retry_lost": [],
+    }
+    for seed in range(seeds):
+        grid = _variants(_cfg(seed, num_tasks, part_at, part_len, rate))
+        for name, cfg in grid.items():
+            res = simulate(HierarchicalA2WSPolicy(P), cfg)
+            done = sum(res.per_node_tasks)
+            if name == "no_retry":
+                # at-most-once: losses are ACCOUNTED, never silently dropped
+                assert done + res.lost_tasks == num_tasks
+            else:
+                assert done == num_tasks and res.lost_tasks == 0
+            pct = res.latency_percentiles((50.0, 99.0))
+            per[name]["p50"].append(pct[50.0])
+            per[name]["p99"].append(pct[99.0])
+            per[name]["makespan"].append(res.makespan)
+            if name == "leased":
+                telemetry["leased_net_failed"].append(res.net_failed)
+                telemetry["leased_lease_expired"].append(res.lease_expired)
+            elif name == "no_retry":
+                telemetry["no_retry_lost"].append(res.lost_tasks)
+
+    med = {
+        f"{name}_{k}_s": float(np.median(v))
+        for name, m in per.items() for k, v in m.items()
+    }
+    base_p99 = med["no_fault_p99_s"]
+    leased_ratio = med["leased_p99_s"] / base_p99
+    no_retry_ratio = med["no_retry_p99_s"] / base_p99
+    no_retry_lost = float(np.median(telemetry["no_retry_lost"]))
+    out = {
+        "P": P,
+        "drop_prob": DROP,
+        "partition_at_s": part_at,
+        "partition_len_s": part_len,
+        "arrival_rate": rate,
+        "num_tasks": num_tasks,
+        "seeds": seeds,
+        **med,
+        "leased_p99_ratio": leased_ratio,
+        "no_retry_p99_ratio": no_retry_ratio,
+        "leased_net_failed": float(np.median(
+            telemetry["leased_net_failed"])),
+        "leased_lease_expired": float(np.median(
+            telemetry["leased_lease_expired"])),
+        "no_retry_lost_tasks": no_retry_lost,
+        # the two acceptance booleans the ISSUE pins
+        "leased_within_2x": bool(leased_ratio <= 2.0),
+        "no_retry_degraded": bool(
+            no_retry_lost > 0 or no_retry_ratio >= 3.0
+        ),
+    }
+    if csv:
+        print(f"netfault_no_fault,{base_p99*1e6:.0f},p99_ratio=1.00")
+        print(
+            f"netfault_leased,{med['leased_p99_s']*1e6:.0f},"
+            f"p99_ratio_vs_no_fault={leased_ratio:.2f}"
+            f"_lost=0_leases={out['leased_lease_expired']:.0f}"
+        )
+        print(
+            f"netfault_no_retry,{med['no_retry_p99_s']*1e6:.0f},"
+            f"p99_ratio_vs_no_fault={no_retry_ratio:.2f}"
+            f"_lost={no_retry_lost:.0f}"
+        )
+        print(
+            f"netfault_headline,{out['leased_net_failed']:.0f},"
+            f"leased_within_2x={out['leased_within_2x']}"
+            f"_no_retry_degraded={out['no_retry_degraded']}"
+        )
+    return out
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--seeds", type=int, default=3)
+    args = ap.parse_args()
+    run(seeds=1 if args.fast else args.seeds, fast=args.fast)

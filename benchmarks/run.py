@@ -59,6 +59,7 @@ def main() -> None:
         hierarchy,
         kernel_fd3d,
         limplock,
+        netfault,
         open_arrival,
         placement_ablation,
         policy_matrix,
@@ -85,6 +86,7 @@ def main() -> None:
         "elastic": lambda: elastic.run(seeds=seeds, fast=args.fast),
         "weighted": lambda: weighted.run(seeds=seeds, fast=args.fast),
         "limplock": lambda: limplock.run(seeds=seeds, fast=args.fast),
+        "netfault": lambda: netfault.run(seeds=seeds, fast=args.fast),
         "hierarchy": lambda: hierarchy.run(seeds=seeds, fast=args.fast),
         "topology": lambda: topology.run(seeds=seeds, fast=args.fast),
         "roofline": lambda: roofline.run(),

@@ -52,7 +52,14 @@ import numpy as np
 
 from .deque import AtomicInt64, TaskDeque
 from .info_ring import CellBoard, RingInfo
-from .limp import LimpConfig, LimpState, SlowdownSchedule, normalize_duration
+from .limp import (
+    LimpConfig,
+    LimpState,
+    SlowdownSchedule,
+    effective_heartbeat,
+    normalize_duration,
+)
+from .netfault import NF_SEED_SALT, LinkHealth, NetFaultSchedule
 from .policy import PolicyView, SchedPolicy, make_policy
 from .steal import OverlayBuffers, weighted_overlay
 from .topology import Topology
@@ -110,6 +117,11 @@ class RunStats:
     corrections: int
     per_worker_tasks: list[int] = field(default_factory=list)
     per_worker_mean_t: list[float] = field(default_factory=list)
+    # Fault-fabric telemetry (DESIGN.md §Fault fabric); all zero when the
+    # pool runs with netfaults=None.
+    net_failed: int = 0  # steal requests lost to drops / partitions
+    lease_expired: int = 0  # transfers returned to the victim on expiry
+    fare_paid: float = 0.0  # total transport fare slept before loot landed
 
     @property
     def latencies(self) -> list[float]:
@@ -155,7 +167,7 @@ class _WorkerState:
     __slots__ = (
         "deque", "executed", "runtime_sum", "ran_any", "start_time", "rng",
         "wake", "retiring", "drain_on_retire", "class_t", "nc_cache",
-        "limp_state", "slow_mult", "overlay_buf",
+        "limp_state", "slow_mult", "overlay_buf", "nf_rng", "heal_idx",
     )
 
     def __init__(
@@ -194,6 +206,13 @@ class _WorkerState:
         self.wake = threading.Event()
         self.retiring = False
         self.drain_on_retire = True
+        # Fault plane (DESIGN.md §Fault fabric): dedicated message-drop rng
+        # (derived from the worker seed so the SCHEDULING rng stream stays
+        # bit-for-bit untouched) and the per-worker heal cursor into
+        # NetFaultSchedule.heal_times() — advanced at the first boundary
+        # after each partition heals, triggering ring resync.
+        self.nf_rng: np.random.Generator | None = None
+        self.heal_idx = 0
 
 
 class WorkerPool:
@@ -219,6 +238,7 @@ class WorkerPool:
         slowdown: SlowdownSchedule | None = None,
         limp: LimpConfig | None = None,
         topology: Topology | None = None,
+        netfaults: NetFaultSchedule | None = None,
     ) -> None:
         """``task_fn(worker_id, task) -> result`` runs the task on a worker.
 
@@ -269,6 +289,20 @@ class WorkerPool:
         plan moves its loot as ONE batched transfer whose cost the thief
         pays in clock time (``StealPlan.delay``) before the loot lands.
         ``topology=None`` (default) is bit-for-bit the unpriced scheduler.
+
+        ``netfaults``: the network-fault plane (DESIGN.md §Fault fabric).
+        A :class:`NetFaultSchedule` of lossy links and timed partitions is
+        injected into the steal transaction: a dropped/partitioned request
+        leg is a failed attempt (timeout stall + per-link backoff when
+        ``hardened``); a dropped transfer leg holds the loot in flight for
+        ``lease_timeout`` and then RETURNS it to the victim (the threaded
+        plane carries real payloads, so loot is never destroyed — the
+        delivery-semantics table in DESIGN.md records this deliberate
+        divergence from the simulator's un-hardened ablation).  Partitioned
+        peers go heartbeat-stale in the OBSERVER's view only, ring gossip
+        is gated per-link, and the first boundary after a heal resyncs the
+        worker's send watermarks.  ``netfaults=None`` (default) is
+        bit-for-bit the fault-free scheduler, including every rng stream.
         """
         self.num_workers = num_workers
         self.task_fn = task_fn
@@ -292,6 +326,16 @@ class WorkerPool:
         self.slowdown = slowdown
         self.limp_cfg = limp
         self.topology = topology
+        self.netfaults = netfaults
+        # Shared per-(thief, victim) link-health tracker; single writer per
+        # key (the thief thread), so plain dict mutation is GIL-safe.
+        self._link_health = LinkHealth(netfaults) if netfaults is not None else None
+        self._nf_lossy = netfaults is not None and netfaults.lossy()
+        self._heal_times = netfaults.heal_times() if netfaults is not None else []
+        # Fault-plane telemetry (written under _log_lock on the steal path).
+        self._net_failed = 0
+        self._lease_expired = 0
+        self._fare_paid = 0.0
         # Owner-written limp flags (one bool per ring slot; plain list —
         # CPython element writes are atomic, readers tolerate staleness).
         self._limping: list[bool] = [False] * num_workers
@@ -315,6 +359,11 @@ class WorkerPool:
             )
             for w in range(num_workers)
         ]
+        if netfaults is not None:
+            for w in range(num_workers):
+                self.workers[w].nf_rng = np.random.default_rng(
+                    (seed * 1009 + w) ^ NF_SEED_SALT
+                )
         # Hierarchy scoping (DESIGN.md §Hierarchy): a policy that carries a
         # CellMap gets one sub-board per cell and CELL-scoped views; the
         # substrate keeps speaking global ids throughout.
@@ -585,6 +634,10 @@ class WorkerPool:
                 )
                 w.start_time = now
                 self.workers[wid] = w
+                if self.netfaults is not None:
+                    w.nf_rng = np.random.default_rng(
+                        (self.seed * 1009 + wid) ^ NF_SEED_SALT
+                    )
                 self._limping[wid] = False  # the ghost's flag dies with it
                 self._hb_beat[wid] = float("nan")  # heartbeat restarts too
                 self._stale_flagged[wid] = False
@@ -597,6 +650,10 @@ class WorkerPool:
                     limp_cfg=self.limp_cfg,
                 )
                 w.start_time = now  # preemptive-estimate baseline = NOW
+                if self.netfaults is not None:
+                    w.nf_rng = np.random.default_rng(
+                        (self.seed * 1009 + wid) ^ NF_SEED_SALT
+                    )
                 # Append order matters for lock-free readers: the worker and
                 # its tombstone slot exist BEFORE any count admits id wid.
                 self.workers.append(w)
@@ -613,6 +670,11 @@ class WorkerPool:
             # (No own-cell publish here: the joiner's loop does it as its
             # first action — §2.2.1 elapsed-time self-report, as at boot —
             # and until then every thief prices the NaN cell preemptively.)
+            if self.netfaults is not None:
+                # A joiner is born past any already-healed partitions: start
+                # its heal cursor beyond them so it never replays a resync.
+                tj = now - self._t0 if self._t0 is not None else 0.0
+                w.heal_idx = sum(1 for h in self._heal_times if h <= tj)
             self.alive.accumulate(1)
             self.policy.on_worker_join(wid, now)
             if self.info is not None and self.cells is not None:
@@ -680,7 +742,7 @@ class WorkerPool:
                 w.deque.push(leftover)
         if self.info is not None:
             self._update_info(i)
-            self.info.communicate(i)
+            self._communicate(i)
         now = self.clock()
         self.policy.on_worker_death(i, now)
         with self._log_lock:
@@ -689,6 +751,44 @@ class WorkerPool:
         self._wake_all()
         if self.alive.load() == 0:
             self._collapse_sweep()
+
+    def _communicate(self, i: int) -> None:
+        """Ring gossip for worker ``i``, gated by the fault plane.
+
+        Partitions stop information flow: a cell cannot cross an active cut,
+        so each neighbour push is filtered by reachability (``can_send``).
+        The first boundary after a partition HEALS resyncs ``i``'s send
+        watermarks (``RingInfo.resync``) — neighbours whose copies froze at
+        the cut receive the full window again instead of nothing (the
+        watermark says "already sent") — and clears ``i``'s steal backoffs,
+        since the post-heal link is presumed healthy until re-observed.
+        Plain message drops deliberately do NOT apply to gossip: the §2.1
+        ring is modelled as eventually-consistent background traffic, and
+        DESIGN.md §Fault fabric records the simplification.  With
+        ``netfaults=None`` this is exactly ``info.communicate(i)``.
+        """
+        if self.info is None:
+            return
+        nf = self.netfaults
+        if nf is None or self._t0 is None:
+            self.info.communicate(i)
+            return
+        tnow = self.clock() - self._t0
+        w = self.workers[i]
+        if w.heal_idx < len(self._heal_times) and tnow >= self._heal_times[w.heal_idx]:
+            while (
+                w.heal_idx < len(self._heal_times)
+                and tnow >= self._heal_times[w.heal_idx]
+            ):
+                w.heal_idx += 1
+            self.info.resync(i)
+            self._link_health.clear_backoff(i)
+        if nf.partitions:
+            self.info.communicate(
+                i, can_send=lambda j, _i=i, _t=tnow: nf.reachable(_i, j, _t)
+            )
+        else:
+            self.info.communicate(i)
 
     def _finished(self) -> bool:
         """Quiescence termination (DESIGN.md §Open-arrival).
@@ -762,6 +862,9 @@ class WorkerPool:
             corrections=sum(w.deque.corrections for w in self.workers),
             per_worker_tasks=per_tasks,
             per_worker_mean_t=per_t,
+            net_failed=self._net_failed,
+            lease_expired=self._lease_expired,
+            fare_paid=self._fare_paid,
         )
 
     def _worker_loop(self, i: int) -> None:
@@ -782,7 +885,7 @@ class WorkerPool:
                 if self.alive.load() == 0:
                     return  # every worker died; nothing left to wait for
                 if self.info is not None:
-                    self.info.communicate(i)
+                    self._communicate(i)
                 if not self._policy_boundary(i):
                     idle_misses += 1
                     w.wake.wait(
@@ -807,7 +910,7 @@ class WorkerPool:
                 self.dead[i] = True
                 if self.info is not None:
                     self._update_info(i)
-                    self.info.communicate(i)
+                    self._communicate(i)
                 now = self.clock()
                 self.policy.on_worker_death(i, now)
                 with self._log_lock:
@@ -850,7 +953,7 @@ class WorkerPool:
                 self._wake_all()  # completion wakes idle sleepers to exit
             if self.info is not None:
                 self._update_info(i)
-                self.info.communicate(i)  # line 13
+                self._communicate(i)  # line 13
 
     # ------------------------------------------------------- straggler plane
     def set_worker_slowdown(self, worker: int, factor: float) -> None:
@@ -1114,6 +1217,27 @@ class WorkerPool:
                         self._limping[g] = verdict
                         with self._log_lock:
                             self.limp_log.append((now, g, verdict))
+            if self.netfaults is not None and self._t0 is not None:
+                # Partition staleness (DESIGN.md §Fault fabric): when a cut
+                # separates i from g, g's heartbeat FREEZES from i's vantage
+                # at the cut instant (no message crosses), so after
+                # nf.stale_after of frozen silence i prices g as stale —
+                # exactly the wedge detector's re-pricing, but OBSERVER-
+                # LOCAL: no global _limping/_stale_flagged writes, because
+                # g's own side of the cut still sees it healthy.  Heals undo
+                # this automatically: unreachable_since returns inf again
+                # and the real (still-beating) heartbeat shows through.
+                cut = self.netfaults.unreachable_since(g, i, now - self._t0)
+                if cut < math.inf:
+                    hb_eff = effective_heartbeat(
+                        self._hb_beat[g], self._t0 + cut
+                    )
+                    if hb_eff == hb_eff and (
+                        now - hb_eff > self.netfaults.stale_after
+                    ):
+                        t_view[jl] = max(t_view[jl], now - hb_eff)
+                        if limp_row is not None:
+                            limp_row[jl] = True
             if self.open_arrival:
                 # n_j IS the reported depth; no elapsed-time extrapolation —
                 # depth both drains (execution) and refills (arrivals), so
@@ -1207,6 +1331,30 @@ class WorkerPool:
                     if g < 0:
                         return float("inf")
                     return _t.cost(g, _i, int(k))
+        lh = None
+        if self.netfaults is not None and self._t0 is not None:
+            # link_health(j) in [0, 1]: 0 across an active partition or a
+            # backed-off link, else the link's success EWMA (floor-clamped,
+            # 1.0 until first observed) — victim weights multiply by it.
+            nf, hlt, t0, clk = (
+                self.netfaults, self._link_health, self._t0, self.clock,
+            )
+            if members is None:
+                def lh(j, _i=i, _nf=nf, _h=hlt, _t0=t0, _c=clk):
+                    tnow = _c() - _t0
+                    g = int(j)
+                    if not _nf.reachable(g, _i, tnow):
+                        return 0.0
+                    return _h.factor(_i, g, tnow)
+            else:
+                def lh(jl, _i=i, _nf=nf, _h=hlt, _t0=t0, _c=clk, _mem=members):
+                    g = int(_mem[jl]) if 0 <= jl < len(_mem) else -1
+                    if g < 0:
+                        return 0.0
+                    tnow = _c() - _t0
+                    if not _nf.reachable(g, _i, tnow):
+                        return 0.0
+                    return _h.factor(_i, g, tnow)
         return PolicyView(
             worker=iview,
             now=self.clock(),
@@ -1231,6 +1379,7 @@ class WorkerPool:
             members=members,
             nc_view=nc_view,
             transfer_cost=tcost,
+            link_health=lh,
         )
 
     def _policy_boundary(self, i: int) -> bool:
@@ -1254,11 +1403,37 @@ class WorkerPool:
                 vloc = int(hits[0])
             else:
                 xcell = True
-        if plan.delay > 0.0:
+        nf = self.netfaults
+        if nf is not None and self._t0 is not None:
+            # ---- request leg (DESIGN.md §Fault fabric) ----
+            # Deterministic reachability first (consumes no randomness), then
+            # the drop roll on the DEDICATED nf rng — the scheduling stream
+            # stays untouched.  A lost request teaches the thief nothing
+            # about the victim (no snapshot, no reconciliation): it times
+            # out, records the link failure, and backs off.
+            tnow = self.clock() - self._t0
+            req_lost = not nf.reachable(i, plan.victim, tnow)
+            if not req_lost:
+                pd = nf.drop_prob(i, plan.victim, tnow)
+                if pd > 0.0 and float(self.workers[i].nf_rng.random()) < pd:
+                    req_lost = True
+            if req_lost:
+                self._failed_steals += 1
+                with self._log_lock:
+                    self._net_failed += 1
+                if nf.hardened:
+                    self._link_health.record(i, plan.victim, False, tnow)
+                    _sleep_stall(nf.attempt_timeout, self.clock)
+                self.policy.on_steal_result(view, plan, 0, 0)
+                return False
+        if plan.delay > 0.0 and self.topology is None:
             # Policy-priced dispatch latency (LW's leader round-trip),
             # charged in CLOCK units: the policy booked its gate against
             # view.now from self.clock, so a scaled/virtual clock must see
             # the same delay it priced — a raw time.sleep would not.
+            # (With a topology, plan.delay is the TRANSPORT fare instead,
+            # and it is paid after the claim — loot in flight overlaps the
+            # victim's compute; see the transport leg below.)
             deadline = self.clock() + plan.delay
             while True:
                 remaining = deadline - self.clock()
@@ -1335,6 +1510,55 @@ class WorkerPool:
                 )
             self.policy.on_steal_result(view, plan, 0, left)
             return False
+        # ---- transport leg (DESIGN.md §Fault fabric / §Topology plane) ----
+        # A priced plan pays its fare AFTER the claim, overlapped with the
+        # victim's compute: the loot is in flight while the thief sleeps the
+        # modeled transfer time, then lands on its deque — mirroring the
+        # simulator's claim-now/land-later event.  Zero-cost links skip the
+        # stall entirely (bit-for-bit the instant-transfer scheduler).
+        fare = 0.0
+        if self.topology is not None and plan.delay > 0.0:
+            # Fare on the ACTUAL take (the plan priced plan.amount).
+            fare = max(float(self.topology.cost(plan.victim, i, got)), 0.0)
+        if nf is not None and self._t0 is not None:
+            tnow = self.clock() - self._t0
+            fare += nf.extra_delay(plan.victim, i, tnow)
+            pd = nf.drop_prob(plan.victim, i, tnow)
+            if pd > 0.0 and float(self.workers[i].nf_rng.random()) < pd:
+                # Transfer leg dropped: the loot never lands.  Hardened, the
+                # thief waits out the LEASE and the tasks RETURN to the
+                # victim — every task still executes exactly once, just
+                # later.  The threaded plane carries real payloads, so even
+                # the un-hardened ablation returns them (immediately, no
+                # lease wait) instead of destroying work — the delivery-
+                # semantics table records this divergence from the sim.
+                with self._log_lock:
+                    self._lease_expired += 1
+                if nf.hardened:
+                    _sleep_stall(nf.lease_timeout, self.clock)
+                self.workers[plan.victim].deque.push(result.tasks)
+                if nf.hardened:
+                    self._link_health.record(
+                        i, plan.victim, False, self.clock() - self._t0
+                    )
+                if self.info is not None:
+                    # Belief restore: the victim has its queue back.
+                    if self.open_arrival:
+                        corrected_n = float(observed_left)
+                    else:
+                        corrected_n = done_est + float(observed_left)
+                    self.info.record_remote(
+                        i, plan.victim, float(corrected_n),
+                        self.info.belief_t(i, plan.victim),
+                    )
+                self.policy.on_steal_result(view, plan, 0, observed_left)
+                return False
+            if nf.hardened and self._nf_lossy:
+                self._link_health.record(i, plan.victim, True, tnow)
+        if fare > 0.0:
+            _sleep_stall(fare, self.clock)
+            with self._log_lock:
+                self._fare_paid += fare
         self.workers[i].deque.push(result.tasks)
         with self._log_lock:
             self._steal_log.append((self.clock(), i, plan.victim, got))

@@ -201,7 +201,7 @@ class RingInfo:
             self.version[i, j] += 1
 
     # ------------------------------------------------------- ring propagation
-    def communicate(self, i: int) -> int:
+    def communicate(self, i: int, can_send=None) -> int:
         """Alg. 1 line 13: push dirty cells to both ring neighbours.
 
         p_i sends cells about indices ``j >= i`` to its LEFT neighbour (which
@@ -209,6 +209,12 @@ class RingInfo:
         RIGHT neighbour — the write partition of §2.1.  Only cells whose
         version advanced since the previous send to that direction move
         (Table 1: "Only new information is exchanged").
+
+        ``can_send(neighbour) -> bool`` (fault plane, DESIGN.md §Fault
+        fabric): when given, a whole direction is skipped if the neighbour
+        is unreachable — the watermark does NOT advance, so the cells are
+        re-offered once the link heals.  ``can_send=None`` is exactly the
+        ungated round.
 
         Returns the number of cells transmitted (0 = nothing dirty).
         """
@@ -222,15 +228,27 @@ class RingInfo:
             # upper window, i.e. ring-distance(left -> j) in [1, R] going
             # right; those are exactly j = i .. i+R-1 (distance from i:
             # 0..R-1).
-            for off in range(0, self.R):
-                j = (i + off) % self.P
-                sent += self._put(i, left, j, direction=0)
+            if can_send is None or can_send(left):
+                for off in range(0, self.R):
+                    j = (i + off) % self.P
+                    sent += self._put(i, left, j, direction=0)
             # Cells the RIGHT neighbour may receive: j = i-R+1 .. i.
-            for off in range(0, self.R):
-                j = (i - off) % self.P
-                sent += self._put(i, right, j, direction=1)
+            if can_send is None or can_send(right):
+                for off in range(0, self.R):
+                    j = (i - off) % self.P
+                    sent += self._put(i, right, j, direction=1)
             self.rounds += 1
         return sent
+
+    def resync(self, i: int) -> None:
+        """Partition heal (DESIGN.md §Fault fabric): forget everything ``i``
+        believes it already delivered.  A neighbour on the far side of a cut
+        may hold copies frozen at the cut instant, yet ``last_sent`` says
+        "already sent" — without this reset the stale cells would never be
+        re-offered.  Versions are untouched, so receivers stay monotone: a
+        re-Put of a version they already hold is a no-op."""
+        with self._epoch:
+            self.last_sent[:, i, :] = 0
 
     def _put(self, src: int, dst: int, j: int, direction: int) -> int:
         with self._epoch:  # epoch guard only — see class docstring
@@ -625,9 +643,27 @@ class CellBoard:
         board, loc = self._loc(i)
         board.update_local(loc, *a, **kw)
 
-    def communicate(self, i: int) -> int:
+    def communicate(self, i: int, can_send=None) -> int:
+        c, loc = self.cells.locate(i)
+        board = self.boards[c]
+        if can_send is None:
+            return board.communicate(loc)
+        # The gate speaks GLOBAL ids; the sub-board's neighbours are LOCAL
+        # slots — translate through the member list (holes never receive).
+        mem = self.cells.members(c)
+
+        def _can(jl, _mem=mem, _cs=can_send):
+            g = _mem[jl] if jl < len(_mem) else -1
+            return g >= 0 and _cs(g)
+
+        return board.communicate(loc, can_send=_can)
+
+    def resync(self, i: int) -> None:
+        """Partition heal: reset ``i``'s send watermarks on its sub-board
+        (see :meth:`RingInfo.resync`).  Digests are NOT resynced — they are
+        re-published wholesale every leader round anyway."""
         board, loc = self._loc(i)
-        return board.communicate(loc)
+        board.resync(loc)
 
     def record_remote(self, i: int, j: int, *a, **kw) -> None:
         ci, li = self.cells.locate(i)

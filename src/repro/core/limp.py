@@ -59,9 +59,29 @@ __all__ = [
     "LimpConfig",
     "LimpState",
     "normalize_duration",
+    "effective_heartbeat",
 ]
 
 _INF = float("inf")
+
+
+def effective_heartbeat(hb: float, cut_start: float) -> float:
+    """Observer-side heartbeat of a peer behind a cut link.
+
+    The shared staleness primitive of the wedge detector
+    (``LimpConfig.stale_after``) and the network-fault plane (DESIGN.md
+    §Fault fabric): a heartbeat published after the link was cut cannot
+    have crossed the fabric, so what the OBSERVER can actually see is the
+    heartbeat capped at the cut instant.  ``cut_start = inf`` (a healthy
+    link) is the identity; a NaN heartbeat (never reported) stays NaN.
+    Both planes run their staleness comparison ``now - effective_hb >
+    threshold`` on this value, so partition-caused silence flows through
+    the exact same re-pricing path as a wedged worker — just scoped to
+    the observer's own view row instead of the global limp flags.
+    """
+    if hb != hb:  # NaN: no heartbeat ever observed
+        return hb
+    return min(hb, cut_start)
 
 
 @dataclass(frozen=True)

@@ -173,6 +173,14 @@ class PolicyView:
     #: translates through ``members``).  None = no network model — every
     #: policy then behaves bit-for-bit as before this plane existed.
     transfer_cost: Callable[[int, int], float] | None = None
+    #: link health (DESIGN.md §Fault fabric): ``link_health(j)`` ∈ [0, 1] is
+    #: the victim-weight multiplier for stealing from ``j`` over the current
+    #: fabric — 0.0 across an active partition or a backed-off flaky link,
+    #: the per-link success EWMA (floor-clamped) otherwise.  ``j`` speaks the
+    #: view's index space, like ``transfer_cost``.  None = no fault plane —
+    #: every policy then behaves bit-for-bit as before this plane existed;
+    #: an all-1.0 hook is equally bit-for-bit (the multiply is skipped).
+    link_health: Callable[[int], float] | None = None
 
 
 class SchedPolicy:
@@ -295,6 +303,7 @@ class A2WSPolicy(SchedPolicy):
             view.radius, idle=near_idle, open_arrival=view.open_arrival,
             unit=view.unit, qtasks=view.qtasks,
             transfer_cost=view.transfer_cost,
+            link_health=view.link_health,
         )
         if decision is None:
             return self._probe(view)
@@ -344,20 +353,44 @@ class A2WSPolicy(SchedPolicy):
             limping = [j for j in candidates if view.limp[j]]
             if limping:
                 candidates = limping
+        health = view.link_health
+        hw = None
+        if health is not None:
+            # Link-health gating (DESIGN.md §Fault fabric): a probe over a
+            # cut or backed-off link is a guaranteed miss — drop factor-0
+            # candidates outright, bias the draw by the health EWMA of the
+            # rest.  All-healthy factors (1.0) leave ``hw`` unset so the
+            # draw below stays bit-for-bit the fault-free one.
+            hf = [min(max(float(health(j)), 0.0), 1.0) for j in candidates]
+            if any(f < 1.0 for f in hf):
+                live = [(j, f) for j, f in zip(candidates, hf) if f > 0.0]
+                if not live:
+                    return None
+                candidates = [j for j, _ in live]
+                hw = np.array([f for _, f in live])
         tcost = view.transfer_cost
+        costs = None
         if tcost is not None:
             costs = [max(float(tcost(j, 1)), 0.0) for j in candidates]
-            if any(c > 0.0 for c in costs):
-                # Distance-biased probe draw: a probe is speculative, so
-                # spend it where the (single-task) transfer is cheap.  The
-                # all-zero case keeps the unweighted rng.choice call —
-                # numpy's weighted draw consumes the stream differently,
-                # and the zero-cost model must stay bit-for-bit unpriced.
-                w = np.array([1.0 / (1.0 + c) for c in costs])
-                victim = int(view.rng.choice(candidates, p=w / w.sum()))
-                return StealPlan(victim, 1, "probe", delay=costs[
-                    candidates.index(victim)
-                ])
+            if not any(c > 0.0 for c in costs):
+                costs = None
+        if costs is not None or hw is not None:
+            # Distance/health-biased probe draw: a probe is speculative, so
+            # spend it where the (single-task) transfer is cheap and the
+            # link answers.  The all-zero-cost all-healthy case keeps the
+            # unweighted rng.choice call — numpy's weighted draw consumes
+            # the stream differently, and the identity model must stay
+            # bit-for-bit unpriced.
+            w = np.ones(len(candidates))
+            if costs is not None:
+                w *= np.array([1.0 / (1.0 + c) for c in costs])
+            if hw is not None:
+                w *= hw
+            victim = int(view.rng.choice(candidates, p=w / w.sum()))
+            delay = 0.0
+            if costs is not None:
+                delay = costs[candidates.index(victim)]
+            return StealPlan(victim, 1, "probe", delay=delay)
         return StealPlan(int(view.rng.choice(candidates)), 1, "probe")
 
 

@@ -53,7 +53,19 @@ from dataclasses import dataclass, field, replace
 import numpy as np
 
 from .a2ws import latency_percentiles
-from .limp import LimpConfig, LimpState, SlowdownSchedule, normalize_duration
+from .limp import (
+    LimpConfig,
+    LimpState,
+    SlowdownSchedule,
+    effective_heartbeat,
+    normalize_duration,
+)
+from .netfault import (
+    NF_SEED_SALT,
+    LinkHealth,
+    NetFaultSchedule,
+)
+from .netfault import validate_netfaults as _check_netfaults
 from .policy import PolicyView, SchedPolicy, make_policy
 from .steal import OverlayBuffers, neighborhood, weighted_overlay
 from .topology import Topology
@@ -191,6 +203,15 @@ class SimConfig:
     #                 it plans exactly as if the network were free.
     topology: Topology | None = None
     topology_aware: bool = True
+    # --- network-fault plane (DESIGN.md §Fault fabric) ---
+    # netfaults: scriptable lossy-link/partition schedule (NetFaultSchedule).
+    #            Steal requests and loot transfers roll against per-link
+    #            drop_prob (a DEDICATED rng stream — the scheduler stream is
+    #            untouched), pay extra_delay, and cannot cross an active
+    #            partition.  Hardening (leases, backoff, link-health
+    #            weighting) rides on the schedule's own knobs; None — or an
+    #            empty schedule — is bit-for-bit the fault-free scheduler.
+    netfaults: NetFaultSchedule | None = None
     # --- CTWS ---
     token_base: float = 2e-3
     token_per_node: float = 2.5e-4
@@ -210,6 +231,7 @@ class SimConfig:
         # tests derive scenario configs, so a bad slowdown script should blow
         # up where it is WRITTEN, not runs later inside the event loop.
         validate_slowdowns(new)
+        validate_netfaults(new)
         return new
 
 
@@ -257,6 +279,14 @@ def validate_slowdowns(cfg: "SimConfig") -> SlowdownSchedule:
     return sched
 
 
+def validate_netfaults(cfg: "SimConfig") -> None:
+    """Reject fault scripts naming workers outside the final ring — a
+    partition isolating a ghost would be silently inert (same failure mode
+    the slowdown validation closes)."""
+    if cfg.netfaults is not None:
+        _check_netfaults(cfg.netfaults, cfg.P + len(cfg.joins))
+
+
 @dataclass
 class SimResult:
     makespan: float
@@ -276,6 +306,13 @@ class SimResult:
     # attribute moved tasks to links/cells (topology benchmarks)
     boundaries: int = 0
     # total policy consultations (view builds) — overhead denominator
+    net_failed: int = 0
+    # steal requests lost to link drops / partitions (netfaults runs only)
+    lease_expired: int = 0
+    # dropped loot transfers whose lease expired and returned to the victim
+    lost_tasks: int = 0
+    # tasks lost in flight — ONLY possible under netfaults.hardened=False
+    # (the no-lease ablation); the hardened path conserves every task
 
     def latency_percentiles(
         self, qs: tuple[float, ...] = (50.0, 95.0, 99.0)
@@ -414,6 +451,18 @@ def simulate(policy: str | SchedPolicy, cfg: SimConfig) -> SimResult:
     sched = validate_slowdowns(cfg)
     has_slow = bool(sched.events)
     detect = cfg.limp is not None
+
+    # Network-fault plane (DESIGN.md §Fault fabric): drop/delay/partition
+    # rolls come from a DEDICATED rng stream — the scheduler stream is never
+    # consulted, and every roll is gated on drop_prob > 0, so an empty
+    # schedule is bit-for-bit netfaults=None (tests/test_netfault.py).
+    nf = cfg.netfaults
+    validate_netfaults(cfg)
+    nf_rng = (
+        np.random.default_rng(cfg.seed + NF_SEED_SALT) if nf is not None else None
+    )
+    health = LinkHealth(nf) if nf is not None else None
+    nf_lossy = nf is not None and nf.lossy()
 
     # Topology plane (DESIGN.md §Topology plane): the network-cost model and
     # the per-directed-link busy-until horizon (contention serialization).
@@ -560,7 +609,10 @@ def simulate(policy: str | SchedPolicy, cfg: SimConfig) -> SimResult:
     records: list[tuple[int, float, float]] = []
     latencies: list[float] = []
     steal_log: list[tuple[float, int, int, int]] = []
-    stats = {"steals": 0, "failed": 0, "moved": 0, "done": 0, "boundaries": 0}
+    stats = {
+        "steals": 0, "failed": 0, "moved": 0, "done": 0, "boundaries": 0,
+        "net_failed": 0, "lease": 0, "lost": 0,
+    }
     rr_state = [0]  # round-robin router for arrivals / drain re-sprays
 
     def route(prefer_central: bool = True) -> int:
@@ -768,14 +820,25 @@ def simulate(policy: str | SchedPolicy, cfg: SimConfig) -> SimResult:
                 rl = (iloc + step * h) % m
                 rg = rl if mem is None else mem[rl]
                 delay += cfg.hop_latency + relay_half_t(rg)
+            read_at = max(now - delay, 0.0)
+            cut = math.inf
+            if nf is not None:
+                # Partition gating (DESIGN.md §Fault fabric): no report g
+                # published after the cut can have crossed the fabric, so
+                # the observer's view of g FREEZES at the cut instant and
+                # thaws automatically when the partition heals (reads catch
+                # back up to now - delay on their own).
+                cut = nf.unreachable_since(g, i, now)
+                if cut < read_at:
+                    read_at = cut
             if winfo:
-                n_j, t_j, nc_j, tc_j = hist[g].at_classes(max(now - delay, 0.0))
+                n_j, t_j, nc_j, tc_j = hist[g].at_classes(read_at)
                 nc_view[jl] = nc_j
                 tc_view[jl] = tc_j
             else:
-                n_j, t_j = hist[g].at(max(now - delay, 0.0))
+                n_j, t_j = hist[g].at(read_at)
             if detect:
-                limp_view[jl] = hist[g].limp_at(max(now - delay, 0.0))
+                limp_view[jl] = hist[g].limp_at(read_at)
             if t_j != t_j:  # no report yet: preemptive wall-time estimate
                 t_j = max(now - born[i], 1e-9)  # the THIEF's elapsed time
             if wedge:
@@ -802,6 +865,19 @@ def simulate(policy: str | SchedPolicy, cfg: SimConfig) -> SimResult:
                     if bool(limping[g]) != verdict:
                         limping[g] = verdict
                         limp_events.append((now, g, verdict))
+            if cut < math.inf:
+                # Partition staleness (observer-LOCAL): across a cut the
+                # heartbeat the observer can actually see stops at the cut
+                # instant, so after nf.stale_after of silence the peer is
+                # re-priced to the silence in THIS view row only — thieves
+                # on this side stop targeting it while its own component
+                # keeps scheduling it (no write to the global limping /
+                # stale_flagged state, unlike the wedge path above).
+                hb_eff = effective_heartbeat(float(own_report[g]), cut)
+                if now - hb_eff > nf.stale_after:
+                    t_j = max(t_j, now - hb_eff)
+                    if detect:
+                        limp_view[jl] = True
             n_view[jl] = n_j
             t_view[jl] = t_j
             if open_mode:
@@ -868,6 +944,25 @@ def simulate(policy: str | SchedPolicy, cfg: SimConfig) -> SimResult:
                     if g < 0:
                         return float("inf")
                     return topo.cost(g, _i, int(k))
+        lh = None
+        if nf is not None:
+            # link_health(j) ∈ [0, 1]: victim-weight multiplier for thief i
+            # stealing from j — 0.0 across an active partition or a
+            # backed-off link, the health EWMA (floor-clamped) otherwise.
+            # All-1.0 on a healthy fabric, so weights are untouched
+            # (steal.victim_weights skips the multiply entirely then).
+            if members is None:
+                def lh(j, _i=i, _now=now):
+                    g = int(j)
+                    if not nf.reachable(g, _i, _now):
+                        return 0.0
+                    return health.factor(_i, g, _now)
+            else:
+                def lh(jl, _i=i, _now=now, _mem=members):
+                    g = int(_mem[jl]) if 0 <= jl < len(_mem) else -1
+                    if g < 0 or not nf.reachable(g, _i, _now):
+                        return 0.0
+                    return health.factor(_i, g, _now)
         return PolicyView(
             worker=iview,
             now=now,
@@ -893,6 +988,7 @@ def simulate(policy: str | SchedPolicy, cfg: SimConfig) -> SimResult:
             members=members,
             nc_view=nc_view,
             transfer_cost=tcost,
+            link_health=lh,
         )
 
     def boundary(i: int, now: float) -> bool:
@@ -906,6 +1002,28 @@ def simulate(policy: str | SchedPolicy, cfg: SimConfig) -> SimResult:
         if plan is None:
             return False
         v = plan.victim
+        if nf is not None:
+            # Request leg (thief → victim): a partition loses the probe with
+            # certainty — deterministically, NO rng draw, so the scheduler
+            # stream is untouched — and a lossy link with drop_prob.  Either
+            # way the thief learns nothing about the victim (result 0/0),
+            # records the failure in the link-health EWMA (capped
+            # exponential backoff zeroes the link's weight for a while) and
+            # falls back to the ordinary retry path.
+            req_lost = not nf.reachable(i, v, now)
+            if not req_lost:
+                pd = nf.drop_prob(i, v, now)
+                if pd > 0.0 and float(nf_rng.random()) < pd:
+                    req_lost = True
+            if req_lost:
+                stats["failed"] += 1
+                stats["net_failed"] += 1
+                if nf.hardened:
+                    health.record(i, v, False, now)
+                pol.on_steal_result(view, plan, 0, 0)
+                return False
+            if nf.hardened and nf_lossy:
+                health.record(i, v, True, now)
         avail = depth(v)  # get-accumulate ground truth at the victim
         if plan.work > 0.0 and view.rel is not None and plan.delay <= 0.0:
             # Work-greedy loot: pop tail tasks until the plan's work target
@@ -964,6 +1082,29 @@ def simulate(policy: str | SchedPolicy, cfg: SimConfig) -> SimResult:
             arrive = start_tx + cost
         else:
             arrive = now + cfg.steal_latency + cfg.steal_per_task * take
+        if nf is not None:
+            # Transfer leg (victim → thief): the loot is claimed — it has
+            # LEFT the victim's queue — and now rides a lossy link.
+            arrive += nf.extra_delay(v, i, now)
+            pd = nf.drop_prob(v, i, now)
+            if pd > 0.0 and float(nf_rng.random()) < pd:
+                if nf.hardened:
+                    # Leased two-phase transfer: the drop expires the lease
+                    # lease_timeout later and the tasks return to the victim
+                    # (or a live survivor) — exactly-once delivery at the
+                    # price of one lease_timeout of queueing latency.
+                    stats["lease"] += 1
+                    in_transit[i] += take
+                    push_event(
+                        now + nf.lease_timeout, "lease", i, (v, stamps)
+                    )
+                else:
+                    # Ablation (hardened=False): fire-and-forget transfer —
+                    # the loot is gone.  Counted so the run can terminate
+                    # and the benchmark can report the damage.
+                    stats["lost"] += take
+                pol.on_steal_result(view, plan, take, depth(v))
+                return True
         in_transit[i] += take
         push_event(arrive, "receive", i, stamps)
         stats["steals"] += 1
@@ -1010,7 +1151,9 @@ def simulate(policy: str | SchedPolicy, cfg: SimConfig) -> SimResult:
         start_task(i, 0.0)
 
     makespan = 0.0
-    while heap and stats["done"] < total_tasks:
+    # lost > 0 is only reachable under the hardened=False ablation: those
+    # tasks will never finish, so the run quiesces at done + lost == total.
+    while heap and stats["done"] + stats["lost"] < total_tasks:
         now, _, kind, i, payload = heapq.heappop(heap)
         if kind == "finish":
             executed[i] += 1
@@ -1089,12 +1232,28 @@ def simulate(policy: str | SchedPolicy, cfg: SimConfig) -> SimResult:
                 land(tgt, payload, now)
                 continue
             land(i, payload, now)
+        elif kind == "lease":
+            # Lease expiry: the dropped transfer's tasks return to their
+            # victim (or a live survivor if it retired meanwhile) — the
+            # second phase of the leased move, closing the exactly-once
+            # guarantee.  The thief learns of the loss HERE (it waited out
+            # the lease), so the health failure is recorded at expiry time.
+            v, stamps = payload
+            in_transit[i] -= len(stamps)
+            health.record(i, v, False, now)
+            tgt = v if alive_sim[v] else route(prefer_central=False)
+            if tgt < 0:
+                raise RuntimeError(
+                    f"lease expired at t={now:.3f} but every node has "
+                    "retired; fix the churn script"
+                )
+            land(tgt, stamps, now)
         elif kind == "retry":
             if not alive_sim[i]:
                 continue  # tombstoned while idle: drop the poll loop
             if queues[i] or idle_since[i] < 0.0:
                 continue  # no longer idle
-            if stats["done"] >= total_tasks:
+            if stats["done"] + stats["lost"] >= total_tasks:
                 continue
             if uses_ring:
                 # An idle poll IS a heartbeat: the threaded idle loop keeps
@@ -1153,4 +1312,7 @@ def simulate(policy: str | SchedPolicy, cfg: SimConfig) -> SimResult:
         limp_events=limp_events,
         steal_log=steal_log,
         boundaries=stats["boundaries"],
+        net_failed=stats["net_failed"],
+        lease_expired=stats["lease"],
+        lost_tasks=stats["lost"],
     )

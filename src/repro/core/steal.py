@@ -201,6 +201,28 @@ def _distance_penalty(
     return w / pen
 
 
+def _health_factor(
+    cand: np.ndarray,
+    w: np.ndarray,
+    health: "Callable[[int], float] | None",
+) -> np.ndarray:
+    """Multiply victim weights by the link-health factor (DESIGN.md §Fault
+    fabric): 0.0 for a victim behind an active partition or a backed-off
+    flaky link (excluded outright — the request cannot or should not be
+    sent), the floor-clamped success EWMA for the rest.  ``health=None`` —
+    or an all-healthy hook, where every factor is exactly 1.0 — leaves the
+    weights bit-for-bit untouched (the multiply is skipped entirely)."""
+    if health is None:
+        return w
+    f = np.array(
+        [min(max(float(health(int(j))), 0.0), 1.0) for j in cand],
+        dtype=np.float64,
+    )
+    if np.all(f >= 1.0):
+        return w
+    return w * f
+
+
 def victim_weights(
     i: int,
     n: Sequence[float],
@@ -208,6 +230,7 @@ def victim_weights(
     queued: Sequence[float],
     radius: int,
     tcost: "Callable[[int, int], float] | None" = None,
+    link_health: "Callable[[int], float] | None" = None,
 ) -> tuple[np.ndarray, np.ndarray, str]:
     """Victim-selection probabilities (§2.2.2) for thief ``i``.
 
@@ -230,6 +253,12 @@ def victim_weights(
     (DESIGN.md §Topology plane).  Weights in BOTH criteria are divided by
     ``1 + cost/ref`` so nearby victims win ties; ``None`` (or an all-zero
     model) reproduces the unpriced weights bit-for-bit.
+
+    ``link_health``: optional ``victim -> [0, 1]`` fault-plane hook
+    (DESIGN.md §Fault fabric).  Weights in BOTH criteria are multiplied by
+    the factor — 0.0 (partitioned / backed-off link) excludes the victim
+    outright; ``None`` (or an all-healthy model) reproduces the weights
+    bit-for-bit.
     """
     n = np.asarray(n, dtype=np.float64)
     t = np.asarray(t, dtype=np.float64)
@@ -249,6 +278,7 @@ def victim_weights(
         volume = -s_j[surplus]
         mismatch = np.abs(volume - max(s_i, 0.0))
         w = _distance_penalty(cand, volume / (1.0 + mismatch), tcost, ref)
+        w = _health_factor(cand, w, link_health)
         w_sum = float(w.sum())
         if not math.isfinite(w_sum) or w_sum <= 0.0:
             # Every candidate priced unreachable (infinite-cost links).
@@ -264,6 +294,7 @@ def victim_weights(
         return np.array([], dtype=np.int64), np.array([]), "in-pair"
     cand = np.asarray(idx, dtype=np.int64)[good]
     w = _distance_penalty(cand, pair[good], tcost, ref)
+    w = _health_factor(cand, w, link_health)
     w_sum = float(w.sum())
     if not math.isfinite(w_sum) or w_sum <= 0.0:
         return np.array([], dtype=np.int64), np.array([]), "in-pair"
@@ -278,9 +309,10 @@ def select_victim(
     queued: Sequence[float],
     radius: int,
     tcost: "Callable[[int, int], float] | None" = None,
+    link_health: "Callable[[int], float] | None" = None,
 ) -> tuple[int | None, str]:
     """Sample a victim for thief ``i`` (§2.2.2); None if no viable victim."""
-    cand, w, crit = victim_weights(i, n, t, queued, radius, tcost)
+    cand, w, crit = victim_weights(i, n, t, queued, radius, tcost, link_health)
     if len(cand) == 0:
         return None, crit
     return int(rng.choice(cand, p=w)), crit
@@ -588,6 +620,7 @@ def plan_steal(
     unit: Sequence[float] | None = None,
     qtasks: Sequence[float] | None = None,
     transfer_cost: Callable[[int, int], float] | None = None,
+    link_health: Callable[[int], float] | None = None,
 ) -> StealDecision | None:
     """End-to-end smart-stealing decision for thief ``i`` (Alg. 1 lines 4-6).
 
@@ -623,6 +656,13 @@ def plan_steal(
     model pricing every link at 0.0, reproduces the unpriced plan
     bit-for-bit, rng stream included.
 
+    ``link_health``: optional ``victim -> [0, 1]`` fault-plane hook
+    (DESIGN.md §Fault fabric): victim weights in the preemptive AND tail
+    draws are multiplied by the factor, so partitioned or backed-off
+    victims (factor 0) are never targeted and flaky links are discounted.
+    ``None``, or an all-healthy model, reproduces the plan bit-for-bit,
+    rng stream included.
+
     ``unit``/``qtasks``: work-weighted mode (DESIGN.md §Work-weighted
     stealing).  ``n``/``queued`` are then measured in equivalent
     reference-class tasks (``w_j = Σ_c n_j[c]·rel[c]``), ``unit[j]`` is the
@@ -652,7 +692,9 @@ def plan_steal(
     # yields a NaN steal rate — no basis for Eq. 5, so no preemptive plan
     # (the tail rule below still works against reported victims).
     if math.isfinite(s_i) and s_i > 0.0:
-        victim, crit = select_victim(rng, i, n, t, queued, radius, transfer_cost)
+        victim, crit = select_victim(
+            rng, i, n, t, queued, radius, transfer_cost, link_health
+        )
         if victim is not None:
             if crit == "in-pair":
                 s = pair_steal_rate(
@@ -720,6 +762,7 @@ def plan_steal(
         w = _distance_penalty(
             np.asarray(loaded, dtype=np.int64), w, transfer_cost, ref
         )
+    w = _health_factor(np.asarray(loaded, dtype=np.int64), w, link_health)
     w_sum = float(w.sum())
     if not math.isfinite(w_sum) or w_sum <= 0.0:
         return None  # degenerate weights (NaN boot state / zero work)

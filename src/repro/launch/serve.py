@@ -46,6 +46,7 @@ import numpy as np
 
 from repro.configs.base import ARCH_IDS, get_smoke
 from repro.core.limp import LimpConfig, SlowdownEvent, SlowdownSchedule
+from repro.core.netfault import parse_netfaults
 from repro.core.policy import POLICIES
 from repro.core.topology import parse_topology
 from repro.models import lm
@@ -140,10 +141,12 @@ def _open_main(cfg, params, args) -> None:
         ))
         if args.limp_factor > 1.0:
             limp = LimpConfig(limp_factor=args.limp_factor)
+    netfaults = parse_netfaults(args.net_faults, args.replicas)
     pool = ServePool(replicas, seed=args.seed, policy=args.policy,
                      autoscale=autoscale, slowdown=slowdown, limp=limp,
                      topology=parse_topology(args.topology, args.replicas),
-                     migration_cost=args.migration_cost)
+                     migration_cost=args.migration_cost,
+                     netfaults=netfaults)
     pool.start()
     t0 = time.perf_counter()
 
@@ -168,6 +171,9 @@ def _open_main(cfg, params, args) -> None:
         flips = ", ".join(f"replica{w} {'limp' if f else 'recovered'}"
                           f" @{t - t0:.2f}s" for t, w, f in pool.limp_log)
         print(f"limp detector: {flips or 'no transitions'}")
+    if netfaults is not None:
+        print(f"fault fabric: {stats.net_failed} dropped steal requests, "
+              f"{stats.lease_expired} leases expired")
     print("latency p50/p95/p99 = "
           + "/".join(f"{pct[q]*1e3:.0f}ms" for q in (50.0, 95.0, 99.0)))
     print(f"sample completion: {futs[0].result()['completion'][:8]}")
@@ -207,6 +213,12 @@ def main() -> None:
                          "(DESIGN.md §Topology plane): none | "
                          "uniform:LAT:PER_TASK | two-level:K:INTRA:CROSS | "
                          "fat-tree:K:HOP (costs in seconds; open mode)")
+    ap.add_argument("--net-faults", default="none",
+                    help="network-fault plane on the replica steal fabric "
+                         "(DESIGN.md §Fault fabric): none | drop:PROB | "
+                         "delay:SEC | partition:START:DUR[:K] — combinable "
+                         "with '+', e.g. drop:0.1+partition:5:30:2 "
+                         "(open mode)")
     ap.add_argument("--migration-cost", type=float, default=0.0,
                     help="per-request warm-state cost of serving a stolen "
                          "request cold, folded into every remote link of "

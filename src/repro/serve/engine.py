@@ -38,6 +38,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core.a2ws import PoolCollapsed, RunStats, WorkerPool
 from repro.core.limp import LimpConfig, SlowdownSchedule
+from repro.core.netfault import NetFaultSchedule
 from repro.core.policy import SchedPolicy
 from repro.core.topology import Topology
 from repro.models import lm
@@ -422,6 +423,7 @@ class ServePool:
         limp: LimpConfig | None = None,
         topology: Topology | None = None,
         migration_cost: float = 0.0,
+        netfaults: NetFaultSchedule | None = None,
     ):
         self.replicas = replicas
         self.radius = radius
@@ -438,6 +440,11 @@ class ServePool:
             topology = base.add_per_task(migration_cost, name=f"{base.name}+migration")
         self.topology = topology
         self.migration_cost = migration_cost
+        # Fault plane (DESIGN.md §Fault fabric): injected into the replica
+        # runtime's steal fabric (leases, backoff, partition degradation),
+        # and consulted by submit() for partition-aware front-end routing.
+        self.netfaults = netfaults
+        self._route_rr = 0  # round-robin cursor for partition routing
         # Straggler plane (DESIGN.md §Straggler plane): ``slowdown`` scripts
         # degraded-but-alive faults into the replica runtime; ``limp``
         # enables the owner-side detector that re-prices a limping replica's
@@ -522,6 +529,7 @@ class ServePool:
             slowdown=self.slowdown,
             limp=self.limp,
             topology=self.topology,
+            netfaults=self.netfaults,
         )
         # Share the runtime's transition log so limp telemetry stays
         # readable after shutdown() drops the runtime reference.
@@ -703,15 +711,57 @@ class ServePool:
         return stats
 
     # -------------------------------------------------------------- requests
+    def _partition_route(self) -> int | None:
+        """Partition-aware front-end routing (DESIGN.md §Fault fabric).
+
+        While a partition is active, the default round-robin would spray
+        requests uniformly — those landing on the minority side cannot be
+        stolen across the cut, so the majority's capacity sits idle while
+        the minority drowns.  Instead, pick (round-robin) a live replica in
+        the LARGEST reachable component; if every member of a component has
+        died, retry with the next-largest one.  Returns ``None`` when no
+        partition is active, every live replica sits in one component, or
+        no component has a live member — the caller then falls back to the
+        default router.
+        """
+        nf, rt = self.netfaults, self._runtime
+        if nf is None or not nf.partitions or rt is None or rt._t0 is None:
+            return None
+        t = rt.clock() - rt._t0
+        active = [p for p in nf.partitions if p.start <= t < p.end]
+        if not active:
+            return None
+        groups: dict[tuple, list[int]] = {}
+        for w in range(rt.num_workers):
+            if rt.dead[w]:
+                continue
+            label = tuple(w in p._side_set for p in active)
+            groups.setdefault(label, []).append(w)
+        if len(groups) <= 1:
+            return None
+        # Only live replicas enter groups, so a fully-dead component is
+        # skipped by construction — iterating largest-first IS the submit
+        # retry across components.
+        for members in sorted(groups.values(), key=lambda g: (-len(g), g[0])):
+            if members:
+                self._route_rr += 1
+                return members[self._route_rr % len(members)]
+        return None
+
     def submit(self, request: dict, *, replica: int | None = None) -> ServeFuture:
         """Inject one request into the live pool (thread-safe); returns a
         ``ServeFuture``.  ``replica`` pins the initial deque (tests/traces);
-        default routing round-robins and lets stealing do the balancing."""
+        default routing round-robins and lets stealing do the balancing —
+        except while a partition is active (``netfaults``), where the
+        request routes into the largest reachable component instead
+        (:meth:`_partition_route`)."""
         if self._runtime is None:
             self.start()
         fut = ServeFuture(request)
         fut.submit_t = time.perf_counter()
         assert self._runtime is not None
+        if replica is None:
+            replica = self._partition_route()
         try:
             self._runtime.submit(fut, worker=replica)
         except PoolCollapsed:

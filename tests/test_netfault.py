@@ -1,0 +1,417 @@
+"""Fault fabric (DESIGN.md §Fault fabric): the NetFaultSchedule model, the
+``netfaults=None`` / empty-schedule conformance property in both planes,
+leased two-phase transfers (exactly-once under drops), the no-retry
+ablation's honest at-least-... at-most-once loss accounting, partition
+degradation + heal reconciliation, link-health victim weighting, and the
+serve-plane partition routing."""
+
+import math
+import time
+
+import numpy as np
+import pytest
+
+from _hypo import given, settings, st  # skips properties w/o hypothesis
+from repro.core.a2ws import WorkerPool
+from repro.core.info_ring import RingInfo
+from repro.core.limp import effective_heartbeat
+from repro.core.netfault import (
+    LinkFault,
+    LinkHealth,
+    NetFaultSchedule,
+    PartitionEvent,
+    parse_netfaults,
+    validate_netfaults,
+)
+from repro.core.policy import HierarchicalA2WSPolicy
+from repro.core.simulator import SimConfig, simulate, table2_speeds
+from repro.core.steal import victim_weights
+from repro.serve.engine import Replica, ServePool
+
+
+# ------------------------------------------------------------------ the model
+def test_link_fault_matching_and_validation():
+    f = LinkFault(src=0, dst=1, start=1.0, duration=2.0, drop_prob=0.5)
+    assert f.matches(0, 1, 1.0) and f.matches(0, 1, 2.9)
+    assert not f.matches(0, 1, 3.0)  # half-open window
+    assert not f.matches(1, 0, 2.0)  # directed
+    wild = LinkFault(drop_prob=0.1)  # src/dst None = every link, forever
+    assert wild.matches(7, 3, 1e9)
+    with pytest.raises(ValueError):
+        LinkFault(drop_prob=1.5)
+    with pytest.raises(ValueError):
+        LinkFault(drop_prob=-0.1)
+    with pytest.raises(ValueError):
+        LinkFault(extra_delay=-1.0)
+    with pytest.raises(ValueError):
+        LinkFault(duration=-1.0)
+
+
+def test_drop_prob_composes_complementarily():
+    nf = NetFaultSchedule(faults=(
+        LinkFault(drop_prob=0.5), LinkFault(drop_prob=0.5),
+    ))
+    assert nf.drop_prob(0, 1, 0.0) == pytest.approx(0.75)
+    assert nf.drop_prob(3, 3, 0.0) == 0.0  # self-link is always clean
+    nf2 = NetFaultSchedule(faults=(LinkFault(src=0, dst=1, drop_prob=0.3),))
+    assert nf2.drop_prob(0, 1, 0.0) == pytest.approx(0.3)
+    assert nf2.drop_prob(1, 0, 0.0) == 0.0
+
+
+def test_partition_event_separates_and_heals():
+    p = PartitionEvent(side=(0, 1), start=10.0, duration=5.0)
+    assert p.separates(0, 2, 10.0)
+    assert p.separates(2, 1, 14.9)  # symmetric (XOR membership)
+    assert not p.separates(0, 1, 12.0)  # same side
+    assert not p.separates(2, 3, 12.0)  # same side
+    assert not p.separates(0, 2, 15.0)  # healed
+    assert not p.separates(0, 2, 9.9)  # not yet
+    with pytest.raises(ValueError):
+        PartitionEvent(side=(0,), start=0.0, duration=-1.0)
+
+
+def test_schedule_reachability_and_heal_times():
+    nf = NetFaultSchedule(partitions=(
+        PartitionEvent(side=(0,), start=1.0, duration=2.0),
+        PartitionEvent(side=(1,), start=10.0, duration=math.inf),
+    ))
+    assert nf.reachable(0, 2, 0.5)
+    assert not nf.reachable(0, 2, 1.5)
+    assert nf.unreachable_since(0, 2, 1.5) == 1.0
+    assert nf.unreachable_since(0, 2, 0.5) == math.inf
+    assert list(nf.heal_times()) == [3.0]  # the infinite cut never heals
+    assert not nf.reachable(1, 2, 1e9)
+
+
+def test_parse_netfaults_specs_and_errors():
+    assert parse_netfaults(None, 8) is None
+    assert parse_netfaults("none", 8) is None
+    assert parse_netfaults("", 8) is None
+    nf = parse_netfaults("drop:0.25", 8)
+    assert nf.drop_prob(0, 1, 0.0) == pytest.approx(0.25)
+    nf = parse_netfaults("delay:0.05", 8)
+    assert nf.extra_delay(0, 1, 0.0) == pytest.approx(0.05)
+    nf = parse_netfaults("partition:5:30:2", 8)
+    (p,) = nf.partitions
+    assert p.side == (0, 1) and p.start == 5.0 and p.duration == 30.0
+    # K defaults to half the pool
+    (p,) = parse_netfaults("partition:5:30", 8).partitions
+    assert p.side == tuple(range(4))
+    combo = parse_netfaults("drop:0.1+partition:10:30:2", 8)
+    assert combo.lossy() and combo.partitions
+    with pytest.raises(ValueError):
+        parse_netfaults("drop:2.0", 8)
+    with pytest.raises(ValueError):
+        parse_netfaults("flood:1", 8)
+    with pytest.raises(ValueError):
+        validate_netfaults(parse_netfaults("partition:0:1:9", 8), 8)
+
+
+def test_link_health_ewma_backoff_and_clear():
+    nf = NetFaultSchedule(
+        faults=(LinkFault(drop_prob=0.5),),
+        backoff_base=0.1, backoff_cap=1.0, health_alpha=0.5,
+        health_floor=0.05,
+    )
+    h = LinkHealth(nf)
+    assert h.factor(0, 1, 0.0) == 1.0  # never observed
+    h.record(0, 1, False, 0.0)
+    assert h.blocked(0, 1, 0.05)  # first failure: backoff_base
+    assert h.factor(0, 1, 0.05) == 0.0
+    assert not h.blocked(0, 1, 0.11)
+    assert 0.05 <= h.factor(0, 1, 0.11) < 1.0  # EWMA discounted, floored
+    h.record(0, 1, False, 0.2)  # consecutive: doubled backoff
+    assert h.blocked(0, 1, 0.35) and not h.blocked(0, 1, 0.45)
+    h.record(0, 1, True, 0.5)  # success resets the streak
+    assert not h.blocked(0, 1, 0.5)
+    for _ in range(8):
+        h.record(0, 1, True, 1.0)
+    assert h.factor(0, 1, 1.0) > 0.9
+    h.record(2, 3, False, 0.0)
+    h.clear_backoff(2)  # heal reconciliation: worker 2's links reopen
+    assert not h.blocked(2, 3, 0.0)
+
+
+def test_effective_heartbeat_caps_at_cut():
+    assert effective_heartbeat(5.0, 3.0) == 3.0
+    assert effective_heartbeat(2.0, 3.0) == 2.0
+    assert effective_heartbeat(5.0, math.inf) == 5.0
+    nan = effective_heartbeat(float("nan"), 3.0)
+    assert nan != nan
+
+
+# --------------------------------------- conformance (plan + telemetry level)
+def test_victim_weights_all_one_health_hook_is_identity():
+    n = [10.0, 2.0, 8.0, 1.0, 9.0]
+    t = [0.1, 0.1, 0.2, 0.1, 0.15]
+    queued = [8.0, 0.0, 6.0, 0.0, 7.0]
+    base = victim_weights(1, n, t, queued, 2)
+    hook = victim_weights(1, n, t, queued, 2, link_health=lambda j: 1.0)
+    assert base[2] == hook[2]
+    assert np.array_equal(base[0], hook[0])
+    assert np.array_equal(base[1], hook[1])
+    # a zero-health link is excised entirely
+    cut = victim_weights(1, n, t, queued, 2,
+                         link_health=lambda j: 0.0 if j == 2 else 1.0)
+    w, loaded, crit = cut
+    assert all(w[k] == 0.0 for k, j in enumerate(loaded) if j == 2)
+
+
+def _crafted_plans(policy, p, seed, netfaults):
+    """Deterministic boundary plans from a constructed (never started) pool
+    with crafted imbalance (mirrors tests/test_topology.py)."""
+    pool = WorkerPool(
+        list(range(p * 5)), p, lambda w, t: None, policy=policy, seed=seed,
+        netfaults=netfaults,
+    )
+    for i in (0, p // 2):
+        w = pool.workers[i]
+        while w.deque.get_task() is not None:
+            pass
+    now = pool.clock()
+    for i, w in enumerate(pool.workers):
+        w.executed, w.runtime_sum, w.ran_any = 5, 5 * 0.05, True
+        w.start_time = now - 1e-3
+        pool._update_info(i)
+    for i in range(p):
+        pool.info.communicate(i)
+    plans = []
+    for i in range(p):
+        plan = pool.policy.on_boundary(pool._make_view(i))
+        plans.append(
+            None if plan is None else
+            (plan.victim, plan.amount, plan.criterion, plan.delay, plan.work)
+        )
+    return plans
+
+
+@pytest.mark.parametrize("policy", ["a2ws", "ha2ws"])
+@pytest.mark.parametrize("p,seed", [(5, 7), (11, 23), (24, 1234)])
+def test_threaded_plans_bit_for_bit_under_empty_schedule(policy, p, seed):
+    """The conformance property, threaded plane: an EMPTY fault schedule
+    produces IDENTICAL boundary plans to netfaults=None — same victims,
+    amounts, criteria, delays, work targets, same rng stream."""
+    bare = _crafted_plans(policy, p, seed, None)
+    empty = _crafted_plans(policy, p, seed, NetFaultSchedule())
+    assert bare == empty
+
+
+def _sim_equal(a, b):
+    assert b.makespan == a.makespan
+    assert b.per_node_tasks == a.per_node_tasks
+    assert b.per_node_busy == a.per_node_busy
+    assert b.records == a.records
+    assert b.steal_log == a.steal_log
+    assert (b.steals, b.failed_steals, b.moved_tasks, b.boundaries) == (
+        a.steals, a.failed_steals, a.moved_tasks, a.boundaries
+    )
+
+
+@pytest.mark.parametrize(
+    "conf,seed,tasks",
+    [("C1", 0, 80), ("C4", 3, 120), ("C4", 17, 160)],
+)
+def test_sim_telemetry_bit_for_bit_under_empty_schedule(conf, seed, tasks):
+    """The conformance property, sim plane, flat scheduler: whole-run
+    virtual-time telemetry is bit-for-bit identical between netfaults=None
+    and the empty schedule — the off-switch is exact."""
+    cfg = SimConfig(speeds=table2_speeds(conf), num_tasks=tasks, seed=seed)
+    bare = simulate("a2ws", cfg)
+    empty = simulate("a2ws", cfg.with_(netfaults=NetFaultSchedule()))
+    _sim_equal(bare, empty)
+    assert empty.net_failed == empty.lease_expired == empty.lost_tasks == 0
+
+
+@pytest.mark.parametrize("seed", [0, 37])
+def test_sim_telemetry_bit_for_bit_empty_schedule_hierarchical(seed):
+    p = 64
+    cfg = SimConfig(speeds=table2_speeds("C4"), num_tasks=220, seed=seed)
+    bare = simulate(HierarchicalA2WSPolicy(p), cfg)
+    empty = simulate(
+        HierarchicalA2WSPolicy(p), cfg.with_(netfaults=NetFaultSchedule()),
+    )
+    _sim_equal(bare, empty)
+
+
+@given(seed=st.integers(0, 2**16), tasks=st.integers(40, 160))
+@settings(max_examples=12, deadline=None)
+def test_property_sim_empty_schedule_is_identity(seed, tasks):
+    """Property-tested conformance over arbitrary seeds/sizes: the empty
+    schedule can NEVER perturb the fault-free scheduler (open arrivals,
+    the harder path — depth semantics + quiescence)."""
+    cfg = SimConfig(
+        speeds=table2_speeds("C4")[:16], num_tasks=tasks, seed=seed,
+        arrival="poisson", arrival_rate=50.0, task_cost=1.0,
+    )
+    bare = simulate("a2ws", cfg)
+    empty = simulate("a2ws", cfg.with_(netfaults=NetFaultSchedule()))
+    _sim_equal(bare, empty)
+
+
+# ------------------------------------------------- leases: exactly-once moves
+def test_sim_leased_transfers_conserve_every_task_under_heavy_drops():
+    """40% of steal messages drop, yet every submitted task completes
+    exactly once: dropped requests are failed attempts, dropped transfers
+    expire their lease and RETURN the stamps to the victim."""
+    cfg = SimConfig(
+        speeds=table2_speeds("C4")[:16], num_tasks=200, seed=2,
+        task_cost=1.0,
+        netfaults=NetFaultSchedule(faults=(LinkFault(drop_prob=0.4),)),
+    )
+    res = simulate("a2ws", cfg)
+    assert sum(res.per_node_tasks) == cfg.num_tasks
+    assert len(res.records) == cfg.num_tasks
+    assert res.lost_tasks == 0
+    assert res.net_failed > 0  # the plane actually fired
+    assert res.lease_expired > 0
+
+
+def test_sim_no_retry_ablation_strands_or_loses_tasks():
+    """hardened=False: no leases, no backoff — a dropped transfer's loot is
+    GONE.  The run still terminates (lost tasks are accounted), and the
+    loss is visible in the telemetry: done + lost == submitted."""
+    cfg = SimConfig(
+        speeds=table2_speeds("C4")[:16], num_tasks=200, seed=2,
+        task_cost=1.0,
+        netfaults=NetFaultSchedule(
+            faults=(LinkFault(drop_prob=0.4),), hardened=False,
+        ),
+    )
+    res = simulate("a2ws", cfg)
+    assert res.lost_tasks > 0, "ablation never lost loot at 40% drop"
+    assert sum(res.per_node_tasks) + res.lost_tasks == cfg.num_tasks
+
+
+def test_threaded_leased_transfers_conserve_under_heavy_drops():
+    nf = NetFaultSchedule(
+        faults=(LinkFault(drop_prob=0.4),),
+        attempt_timeout=0.001, lease_timeout=0.01,
+    )
+    pool = WorkerPool(
+        list(range(80)), 4, lambda w, t: time.sleep(0.002 * (1 + w % 3)),
+        policy="a2ws", seed=5, netfaults=nf,
+    )
+    stats = pool.run()
+    assert len(stats.records) == 80
+    assert sum(stats.per_worker_tasks) == 80
+    assert stats.net_failed > 0
+
+
+def test_threaded_unhardened_still_conserves_payloads():
+    """The threaded plane carries REAL task payloads: even the un-hardened
+    ablation returns dropped loot to the victim (immediately, no lease
+    wait) instead of destroying work — the documented divergence from the
+    simulator's loss accounting (DESIGN.md §Fault fabric)."""
+    nf = NetFaultSchedule(faults=(LinkFault(drop_prob=0.5),), hardened=False)
+    pool = WorkerPool(
+        list(range(60)), 4, lambda w, t: time.sleep(0.002),
+        policy="a2ws", seed=3, netfaults=nf,
+    )
+    stats = pool.run()
+    assert len(stats.records) == 60
+
+
+# ----------------------------------------------- partitions: degrade and heal
+def test_sim_partition_both_sides_keep_scheduling_and_heal():
+    """A mid-run cut: each side keeps executing within its component (no
+    cross-cut steals while active), completes every task, and the ring
+    reconciles on heal."""
+    nf = NetFaultSchedule(
+        partitions=(PartitionEvent(side=(0, 1, 2, 3), start=10.0,
+                                   duration=60.0),),
+    )
+    cfg = SimConfig(
+        speeds=table2_speeds("C4")[:16], num_tasks=300, seed=1,
+        task_cost=1.0, netfaults=nf,
+    )
+    res = simulate("a2ws", cfg)
+    assert sum(res.per_node_tasks) == cfg.num_tasks
+    # both components executed work (graceful degradation, not a stall)
+    assert sum(res.per_node_tasks[:4]) > 0
+    assert sum(res.per_node_tasks[4:]) > 0
+    # no loot ever crossed the active cut
+    side = {0, 1, 2, 3}
+    for t, thief, victim, _take in res.steal_log:
+        if 10.0 <= t < 70.0:
+            assert (thief in side) == (victim in side), (
+                f"steal crossed the active cut at t={t}"
+            )
+
+
+def test_threaded_partition_run_completes_and_ring_versions_monotone():
+    nf = NetFaultSchedule(
+        partitions=(PartitionEvent(side=(0, 1), start=0.02, duration=0.15),),
+        stale_after=0.02,
+    )
+    pool = WorkerPool(
+        list(range(80)), 4, lambda w, t: time.sleep(0.002),
+        policy="a2ws", seed=9, netfaults=nf,
+    )
+    pool.start()
+    time.sleep(0.05)  # mid-partition snapshot
+    mid = pool.info.version.copy()
+    stats = pool.join()
+    assert len(stats.records) == 80
+    assert np.all(pool.info.version >= mid), "ring versions went backwards"
+
+
+def test_ring_resync_reoffers_cells_after_gated_communicate():
+    """Unit-level heal reconciliation: a direction gated off keeps its
+    watermark, resync() re-offers the full window, and receivers stay
+    monotone (a re-Put of a known version is a no-op)."""
+    ring = RingInfo(4, 1)
+    ring.update_local(0, 5.0, 0.5)
+    sent = ring.communicate(0, can_send=lambda j: False)  # total cut
+    assert sent == 0
+    assert ring.n[1, 0] == 0.0 and ring.n[3, 0] == 0.0
+    sent = ring.communicate(0)  # heal: ungated
+    assert sent > 0
+    assert ring.n[3, 0] == 5.0  # left neighbour of 0 is 3
+    v_before = ring.version.copy()
+    ring.resync(0)
+    sent = ring.communicate(0)  # re-offer after resync
+    assert sent > 0  # watermarks forgot the delivery...
+    assert np.array_equal(ring.version, v_before)  # ...receivers monotone
+
+
+def test_partition_staleness_excludes_far_side_from_victim_selection():
+    """Sim: while the cut is active, thieves never burn attempts on
+    unreachable victims (the link-health hook zeroes their weights), so
+    net_failed stays 0 in a pure-partition run."""
+    nf = NetFaultSchedule(
+        partitions=(PartitionEvent(side=(0, 1), start=2.0, duration=30.0),),
+    )
+    cfg = SimConfig(
+        speeds=(4.0, 1.0, 1.0, 1.0), num_tasks=60, seed=0,
+        task_cost=1.0, netfaults=nf,
+    )
+    res = simulate("a2ws", cfg)
+    assert sum(res.per_node_tasks) == cfg.num_tasks
+    assert res.net_failed == 0, (
+        "victim selection still picked unreachable peers"
+    )
+
+
+# ------------------------------------------------------------- serve plane
+def test_servepool_partition_routing_avoids_minority_side():
+    def gen(req):
+        time.sleep(0.003)
+        return {"ok": True}
+
+    nf = NetFaultSchedule(
+        partitions=(PartitionEvent(side=(0,), start=0.0, duration=0.3),),
+        stale_after=0.02,
+    )
+    pool = ServePool(
+        [Replica(f"r{i}", gen) for i in range(4)], seed=1, netfaults=nf,
+    )
+    pool.start()
+    futs = [pool.submit({"i": i}) for i in range(24)]
+    for f in futs:
+        assert f.result(timeout=30)["ok"]
+    stats = pool.shutdown()
+    assert sum(stats.per_worker_tasks) == 24
+    # the cut-off replica got no fresh submits while partitioned, and the
+    # cut lasted past the last submit — so it served (at most) strays that
+    # landed via post-heal stealing: the majority did the work.
+    assert stats.per_worker_tasks[0] < max(stats.per_worker_tasks)
