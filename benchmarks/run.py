@@ -65,6 +65,7 @@ def main() -> None:
         policy_matrix,
         roofline,
         sched_micro,
+        slo_trace,
         table3_lw,
         table4_ctws,
         topology,
@@ -87,6 +88,7 @@ def main() -> None:
         "weighted": lambda: weighted.run(seeds=seeds, fast=args.fast),
         "limplock": lambda: limplock.run(seeds=seeds, fast=args.fast),
         "netfault": lambda: netfault.run(seeds=seeds, fast=args.fast),
+        "slo_trace": lambda: slo_trace.run(seeds=1, fast=args.fast),
         "hierarchy": lambda: hierarchy.run(seeds=seeds, fast=args.fast),
         "topology": lambda: topology.run(seeds=seeds, fast=args.fast),
         "roofline": lambda: roofline.run(),

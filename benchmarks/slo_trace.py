@@ -1,0 +1,168 @@
+"""SLO serving benchmark at diurnal-trace scale (DESIGN.md §SLO serving).
+
+A 10^6-request bursty diurnal trace (sinusoidal base rate + flash-crowd
+spikes, 25% latency-class with a 0.5 s budget, batch with 30 s) replayed on
+the virtual-time plane over an 8-node pool with 8 autoscaler reserves.
+Three legs, identical trace per seed, the only variables being queue
+ordering and the scaler:
+
+* **threshold_noslo** — FIFO owner pops + the PR-3 reactive threshold
+  autoscaler: the pre-SLO baseline.
+* **threshold_slo**   — SLO-ordered owner pops (latency jumps batch, EDF
+  within class, 10 s batch aging) on the same threshold scaler: isolates
+  the ordering win.
+* **predictive_slo**  — SLO ordering + the predictive autoscaler (Holt's
+  level+trend forecast of arrival rate, provisioned at 75% target
+  utilisation): reserves come up BEFORE the backlog a threshold scaler
+  needs as evidence.
+
+Acceptance (the ISSUE headline): predictive_slo must beat threshold_noslo
+STRICTLY on latency-class p99.9 and on latency-class SLO-violation rate,
+on the same trace.  Emits ``BENCH_slo_trace.json`` via ``benchmarks.run``.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .common import timed  # noqa: F401  (harness convention)
+
+import sys
+
+sys.path.insert(0, "src")
+from repro.core.simulator import SimAutoscale, SimConfig, simulate  # noqa: E402
+from repro.core.trace import diurnal_trace  # noqa: E402
+
+P = 8
+RESERVE = (1.0,) * 8
+TASK_COST = 0.05  # seconds/task at speed 1.0 -> 160 tasks/s base capacity
+MEAN_RATE = 100.0  # diurnal peak ~160/s + spikes ~310/s: reserves required
+PERIOD = 1200.0
+DEPTH = 0.6
+SPIKES = 3
+SPIKE_AMP = 1.5
+SPIKE_WIDTH = 15.0
+LATENCY_FRAC = 0.25
+DEADLINES = (30.0, 0.5)  # (batch, latency) budgets, seconds
+AGING = 10.0
+N_FULL = 1_000_000
+N_FAST = 60_000
+
+
+def _legs(arr: np.ndarray, slo: np.ndarray, seed: int) -> dict[str, SimConfig]:
+    base = dict(
+        speeds=(1.0,) * P,
+        num_tasks=len(arr),
+        task_cost=TASK_COST,
+        seed=seed,
+        arrival="trace",
+        arrival_trace=arr,
+        slo_trace=slo,
+        slo_deadlines=DEADLINES,
+        slo_aging=AGING,
+        record_tasks=False,  # 10^6 task records would dominate memory
+    )
+    thresh = SimAutoscale(reserve=RESERVE, interval=1.0, mode="threshold")
+    pred = SimAutoscale(reserve=RESERVE, interval=1.0, mode="predictive")
+    return {
+        "threshold_noslo": SimConfig(
+            **base, slo_order=False, autoscale=thresh
+        ),
+        "threshold_slo": SimConfig(**base, slo_order=True, autoscale=thresh),
+        "predictive_slo": SimConfig(**base, slo_order=True, autoscale=pred),
+    }
+
+
+def run(seeds: int = 1, fast: bool = False, csv: bool = True):
+    n = N_FAST if fast else N_FULL
+
+    names = ("threshold_noslo", "threshold_slo", "predictive_slo")
+    per = {
+        name: {
+            "lat_p99": [], "lat_p999": [], "lat_viol_rate": [],
+            "batch_p50": [], "makespan": [], "scale_out": [],
+        }
+        for name in names
+    }
+    for seed in range(seeds):
+        arr, slo = diurnal_trace(
+            n,
+            mean_rate=MEAN_RATE,
+            period=PERIOD,
+            depth=DEPTH,
+            spikes=SPIKES,
+            spike_amp=SPIKE_AMP,
+            spike_width=SPIKE_WIDTH,
+            latency_frac=LATENCY_FRAC,
+            seed=seed,
+        )
+        for name, cfg in _legs(arr, slo, seed).items():
+            res = simulate("a2ws", cfg)
+            assert sum(res.per_node_tasks) == n and res.lost_tasks == 0
+            lats = np.asarray(res.slo_latencies["latency"])
+            per[name]["lat_p99"].append(float(np.percentile(lats, 99.0)))
+            per[name]["lat_p999"].append(float(np.percentile(lats, 99.9)))
+            per[name]["lat_viol_rate"].append(
+                res.slo_violation_rate()["latency"]
+            )
+            per[name]["batch_p50"].append(
+                float(np.percentile(res.slo_latencies["batch"], 50.0))
+            )
+            per[name]["makespan"].append(res.makespan)
+            per[name]["scale_out"].append(
+                sum(1 for _, k, _n, _p in res.scale_log if k == "out")
+            )
+
+    med = {
+        f"{name}_{k}": float(np.median(v))
+        for name, m in per.items() for k, v in m.items()
+    }
+    base999 = med["threshold_noslo_lat_p999"]
+    base_viol = med["threshold_noslo_lat_viol_rate"]
+    out = {
+        "P": P,
+        "reserves": len(RESERVE),
+        "num_requests": n,
+        "seeds": seeds,
+        "mean_rate": MEAN_RATE,
+        "period_s": PERIOD,
+        "latency_frac": LATENCY_FRAC,
+        "latency_budget_s": DEADLINES[1],
+        "batch_budget_s": DEADLINES[0],
+        **med,
+        "slo_p999_ratio": med["threshold_slo_lat_p999"] / base999,
+        "predictive_p999_ratio": med["predictive_slo_lat_p999"] / base999,
+        # the ISSUE's acceptance booleans: strictly better p99.9 AND
+        # violation rate under SLO ordering + predictive autoscaling
+        "predictive_p999_better": bool(
+            med["predictive_slo_lat_p999"] < base999
+        ),
+        "predictive_viol_better": bool(
+            med["predictive_slo_lat_viol_rate"] < base_viol
+        ),
+    }
+    if csv:
+        for name in names:
+            print(
+                f"slo_trace_{name},{med[f'{name}_lat_p999']*1e6:.0f},"
+                f"lat_p99={med[f'{name}_lat_p99']:.3f}s"
+                f"_viol={med[f'{name}_lat_viol_rate']:.4f}"
+                f"_batch_p50={med[f'{name}_batch_p50']:.2f}s"
+                f"_scale_out={med[f'{name}_scale_out']:.0f}"
+            )
+        print(
+            f"slo_trace_headline,{n},"
+            f"p999_better={out['predictive_p999_better']}"
+            f"_viol_better={out['predictive_viol_better']}"
+        )
+    return out
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--seeds", type=int, default=1)
+    args = ap.parse_args()
+    run(seeds=args.seeds, fast=args.fast)

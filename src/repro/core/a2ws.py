@@ -50,7 +50,7 @@ from typing import Callable, Sequence
 
 import numpy as np
 
-from .deque import AtomicInt64, TaskDeque
+from .deque import AtomicInt64, Task, TaskDeque, slo_key
 from .info_ring import CellBoard, RingInfo
 from .limp import (
     LimpConfig,
@@ -61,7 +61,7 @@ from .limp import (
 )
 from .netfault import NF_SEED_SALT, LinkHealth, NetFaultSchedule
 from .policy import PolicyView, SchedPolicy, make_policy
-from .steal import OverlayBuffers, weighted_overlay
+from .steal import OverlayBuffers, class_counts, weighted_overlay
 from .topology import Topology
 
 __all__ = [
@@ -82,8 +82,13 @@ class PoolCollapsed(RuntimeError):
     request instead of treating the pool as cleanly shut down."""
 
 
+#: Default latency quantiles.  p99.9 rides along since the SLO plane — at
+#: trace scale (10^6 requests) p99 hides the tail the SLO targets.
+DEFAULT_QS = (50.0, 95.0, 99.0, 99.9)
+
+
 def latency_percentiles(
-    latencies: Sequence[float], qs: Sequence[float] = (50.0, 95.0, 99.0)
+    latencies: Sequence[float], qs: Sequence[float] = DEFAULT_QS
 ) -> dict[float, float]:
     """Per-task latency percentiles ({} when there are no samples) — shared
     by the threaded runtime's RunStats and the simulator's SimResult."""
@@ -129,11 +134,40 @@ class RunStats:
         return [r.latency for r in self.records if r.arrival == r.arrival]
 
     def latency_percentiles(
-        self, qs: Sequence[float] = (50.0, 95.0, 99.0)
+        self, qs: Sequence[float] = DEFAULT_QS
     ) -> dict[float, float]:
         """Latency percentiles of the open-arrival run (empty dict if the run
         was closed — no arrival stamps to measure against)."""
         return latency_percentiles(self.latencies, qs)
+
+    def slo_stats(self) -> dict[str, dict[str, float]]:
+        """Per-SLO-class telemetry (DESIGN.md §SLO serving): task count,
+        deadline violations + rate, and latency percentiles, keyed by class
+        name.  Classes with no tasks are omitted; a run whose payloads carry
+        no SLO attributes reports everything under ``"batch"``."""
+        from .deque import SLO_NAMES, slo_of
+
+        per: dict[str, dict[str, object]] = {}
+        for r in self.records:
+            s, d, _ = slo_of(r.task)
+            b = per.setdefault(
+                SLO_NAMES[s], {"count": 0, "violations": 0, "lats": []}
+            )
+            b["count"] += 1
+            if r.end > d:
+                b["violations"] += 1
+            if r.arrival == r.arrival:
+                b["lats"].append(r.latency)
+        out: dict[str, dict[str, float]] = {}
+        for name, b in per.items():
+            pct = latency_percentiles(b["lats"])
+            out[name] = {
+                "count": float(b["count"]),
+                "violations": float(b["violations"]),
+                "violation_rate": b["violations"] / max(b["count"], 1),
+                **{f"p{q:g}": v for q, v in pct.items()},
+            }
+        return out
 
     def summary(self) -> str:
         counts = ",".join(str(c) for c in self.per_worker_tasks)
@@ -144,9 +178,15 @@ class RunStats:
         )
         pct = self.latency_percentiles()
         if pct:
-            out += " lat[p50/p95/p99]=" + "/".join(
-                f"{pct[q]*1e3:.1f}ms" for q in (50.0, 95.0, 99.0)
+            out += " lat[p50/p95/p99/p99.9]=" + "/".join(
+                f"{pct[q]*1e3:.1f}ms" for q in DEFAULT_QS
             )
+        slo = self.slo_stats()
+        if len(slo) > 1 or "latency" in slo:
+            out += " slo[" + " ".join(
+                f"{name}={int(b['violations'])}/{int(b['count'])}viol"
+                for name, b in sorted(slo.items())
+            ) + "]"
         return out
 
 
@@ -239,6 +279,8 @@ class WorkerPool:
         limp: LimpConfig | None = None,
         topology: Topology | None = None,
         netfaults: NetFaultSchedule | None = None,
+        slo: bool = False,
+        slo_aging: float = math.inf,
     ) -> None:
         """``task_fn(worker_id, task) -> result`` runs the task on a worker.
 
@@ -303,6 +345,19 @@ class WorkerPool:
         is gated per-link, and the first boundary after a heal resyncs the
         worker's send watermarks.  ``netfaults=None`` (default) is
         bit-for-bit the fault-free scheduler, including every rng stream.
+
+        ``slo`` / ``slo_aging``: SLO-ordered owner pops (DESIGN.md §SLO
+        serving).  When enabled, each worker pops its OWN deque through
+        :func:`repro.core.deque.slo_key` — latency-class tasks jump
+        batch-class tasks, earliest deadline first within class, and a
+        batch task older than ``slo_aging`` seconds is promoted so a
+        latency flood can never starve it.  SLO attributes come from the
+        payloads themselves (:class:`repro.core.deque.Task` records or
+        future-likes with ``slo_class``/``deadline``); plain payloads are
+        batch-class, so ``slo=True`` over plain payloads degenerates to
+        ordinary LIFO pops.  Thief-end steals are UNCHANGED — they strip
+        the oldest tail slots, i.e. batch work preferentially.
+        ``slo=False`` (default) takes the PR-9 head-pop path bit-for-bit.
         """
         self.num_workers = num_workers
         self.task_fn = task_fn
@@ -327,6 +382,10 @@ class WorkerPool:
         self.limp_cfg = limp
         self.topology = topology
         self.netfaults = netfaults
+        if not slo_aging > 0.0:  # also rejects NaN
+            raise ValueError(f"slo_aging {slo_aging} must be > 0 (or inf)")
+        self.slo = slo
+        self.slo_aging = slo_aging
         # Shared per-(thief, victim) link-health tracker; single writer per
         # key (the thief thread), so plain dict mutation is GIL-safe.
         self._link_health = LinkHealth(netfaults) if netfaults is not None else None
@@ -490,6 +549,10 @@ class WorkerPool:
             # of `done` and hang every later join().
             raise ValueError(f"worker {worker} out of range 0..{self.num_workers - 1}")
         now = self.clock()
+        if type(task) is Task and task.arrival != task.arrival:
+            # First-class records carry their own arrival (read by SLO aging
+            # and telemetry); the stamp stack below still pairs completions.
+            task.arrival = now
         with self._log_lock:
             # A stamp STACK per id: the same (or interned) payload object may
             # be submitted several times; pairing completions with the oldest
@@ -879,7 +942,9 @@ class WorkerPool:
             self._policy_boundary(i)  # lines 3-9 (policy gates preemption)
             w.wake.clear()  # own event only, before the deque check: a
             # concurrent submit() re-sets it and the wait below falls through
-            task = w.deque.get_task()  # line 10
+            task = w.deque.get_task(  # line 10
+                slo_key(self.clock(), self.slo_aging) if self.slo else None
+            )
             if task is None:
                 # Empty deque: keep thieving until quiescence.
                 if self.alive.load() == 0:
@@ -1022,8 +1087,12 @@ class WorkerPool:
         return self.cost_class_fn is not None and self.num_classes > 1
 
     def _task_class(self, task) -> int:
-        """Clamped cost class of a payload; a raising classifier maps to
-        class 0 — accounting must never take a worker down."""
+        """Clamped cost class of a payload: :class:`Task` records answer
+        from their ``cls`` field directly; bare payloads go through the
+        classifier, where a raising classifier maps to class 0 —
+        accounting must never take a worker down."""
+        if type(task) is Task:
+            return min(max(task.cls, 0), self.num_classes - 1)
         try:
             c = int(self.cost_class_fn(task))  # type: ignore[misc]
         except Exception:  # noqa: BLE001 — user classifier, defensive
@@ -1031,10 +1100,12 @@ class WorkerPool:
         return min(max(c, 0), self.num_classes - 1)
 
     def _class_counts(self, tasks) -> np.ndarray:
-        counts = np.zeros(self.num_classes, dtype=np.float64)
-        for task in tasks:
-            counts[self._task_class(task)] += 1.0
-        return counts
+        # Shared loot/queue accounting (steal.class_counts) — one Task-aware
+        # histogram for both planes.
+        return np.asarray(
+            class_counts(tasks, self.cost_class_fn, self.num_classes),
+            dtype=np.float64,
+        )
 
     def _queue_classes(self, w: _WorkerState) -> np.ndarray:
         """Cached composition scan of a worker's own deque: re-scans only

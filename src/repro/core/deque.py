@@ -31,10 +31,14 @@ matches the paper: "new tasks are initially added to the head".
 
 from __future__ import annotations
 
+import math
 import threading
-from typing import Iterable, Sequence
+from typing import Callable, Iterable, Sequence
 
-__all__ = ["AtomicInt64", "pack", "unpack", "TaskDeque", "StealResult"]
+__all__ = [
+    "AtomicInt64", "pack", "unpack", "TaskDeque", "StealResult",
+    "Task", "SLO_BATCH", "SLO_LATENCY", "SLO_NAMES", "slo_of", "slo_key",
+]
 
 _HALF = 32
 _MASK = (1 << _HALF) - 1
@@ -50,6 +54,111 @@ def unpack(word: int) -> tuple[int, int]:
     head = (word >> _HALF) - _BIAS
     tail = (word & _MASK) - _BIAS
     return head, tail
+
+
+#: SLO classes (DESIGN.md §SLO serving).  Two classes on purpose — the
+#: ordering rule is "latency jumps batch, EDF within class"; finer tiers are
+#: a deadline choice, not a new class.
+SLO_BATCH = 0
+SLO_LATENCY = 1
+SLO_NAMES = ("batch", "latency")
+
+
+class Task:
+    """THE task record — the one encoding every layer shares.
+
+    Before this record, per-task metadata accreted one parallel encoding per
+    plane: the simulator carried ``(arrival, class)`` tuples, the threaded
+    pool stamped arrivals in a side dict keyed by ``id(payload)``, ServePool
+    wrapped requests in futures, and cost classes lived in a classifier
+    closure.  ``Task`` is the superset, defined once:
+
+    * ``id``       — stable integer identity (trace index / submission seq).
+    * ``arrival``  — submission time in the owning plane's clock (virtual
+      seconds in the simulator, ``perf_counter`` in the pool); NaN = closed
+      workload, no latency accounting.
+    * ``cls``      — cost class in ``[0, num_classes)`` (PR-4 weighted
+      stealing); classifier-free substrates read it directly.
+    * ``slo``      — :data:`SLO_LATENCY` or :data:`SLO_BATCH`.
+    * ``deadline`` — absolute completion deadline (same clock as
+      ``arrival``); ``inf`` = none.
+    * ``payload``  — the actual work item, opaque to the scheduler.
+
+    Plain payloads remain legal everywhere (:func:`slo_of` defaults them to
+    batch/no-deadline), which is what keeps the degenerate no-SLO
+    configuration bit-for-bit the PR-9 scheduler.
+    """
+
+    __slots__ = ("id", "arrival", "cls", "slo", "deadline", "payload")
+
+    def __init__(
+        self,
+        id: int = -1,
+        arrival: float = math.nan,
+        cls: int = 0,
+        slo: int = SLO_BATCH,
+        deadline: float = math.inf,
+        payload: object = None,
+    ) -> None:
+        self.id = id
+        self.arrival = arrival
+        self.cls = cls
+        self.slo = slo
+        self.deadline = deadline
+        self.payload = payload
+
+    def __repr__(self) -> str:  # telemetry/debug only
+        return (
+            f"Task(id={self.id}, arrival={self.arrival:.6g}, cls={self.cls},"
+            f" slo={SLO_NAMES[self.slo]}, deadline={self.deadline:.6g})"
+        )
+
+
+def slo_of(task) -> tuple[int, float, float]:
+    """``(slo, deadline, arrival)`` of ANY payload the runtime may carry.
+
+    :class:`Task` records answer from their fields; future-like payloads
+    (``ServeFuture``) answer from ``slo_class``/``deadline``/``submit_t``
+    attributes; every other payload is batch-class with no deadline and an
+    unknown arrival — the degenerate values under which SLO ordering is a
+    no-op.  ``deadline`` is normalised to ``inf`` when absent/NaN, arrival
+    to NaN when unknown.
+    """
+    if type(task) is Task:
+        d = task.deadline
+        return task.slo, (math.inf if d != d else d), task.arrival
+    s = getattr(task, "slo_class", None)
+    if s is None:
+        return SLO_BATCH, math.inf, math.nan
+    d = getattr(task, "deadline", None)
+    a = getattr(task, "submit_t", None)
+    d = math.inf if d is None or d != d else float(d)
+    a = math.nan if a is None else float(a)
+    return int(s), d, a
+
+
+def slo_key(now: float, aging: float = math.inf) -> Callable:
+    """Owner-pop ordering key for :meth:`TaskDeque.get_task` (DESIGN.md
+    §SLO serving).  Smaller ranks pop first; exact ties resolve head-most
+    (newest), which preserves batch LIFO under the hood.
+
+    Rank layout: latency-class tasks rank ``(0, deadline)`` — EDF, with
+    deadline-free latency tasks at ``(0, inf)``.  A batch task older than
+    ``aging`` seconds is PROMOTED to rank ``(0, arrival + aging)`` — it
+    competes in the same EDF order as latency work, which is the
+    no-starvation bound: a latency flood can delay a batch task by at most
+    ``aging`` plus the latency backlog ahead of its effective deadline.
+    Fresh batch tasks rank ``(1, 0.0)`` — always behind latency, tie-broken
+    newest-first (LIFO).
+    """
+    def key(task) -> tuple[int, float]:
+        s, d, a = slo_of(task)
+        if s == SLO_LATENCY:
+            return (0, d)
+        if aging < math.inf and a == a and (now - a) > aging:
+            return (0, a + aging)
+        return (1, 0.0)
+    return key
 
 
 class AtomicInt64:
@@ -177,30 +286,79 @@ class TaskDeque:
         self.mutations = 0
 
     # ------------------------------------------------------------------ owner
-    def get_task(self):
+    def get_task(self, key: Callable | None = None):
         """Fig. 2a: owner pops from the head.  Returns task or None if empty.
 
         (I) exclusive lock head+tail -> our single-word CAS loop: a CAS on the
         packed word is the degenerate exclusive lock over exactly that word;
         (II) shared lock on the body while reading the slot; (III) move head;
         (IV) unlock.
+
+        ``key``: optional SLO-ordering key (:func:`slo_key`).  ``None`` —
+        the default, and the only path any no-SLO substrate takes — is the
+        plain head pop above, bit-for-bit the PR-9 protocol.  With a key the
+        owner pops the MINIMUM-key task from anywhere in ``[head, tail)``
+        (ties resolve head-most, i.e. newest).  Protocol: the owner takes an
+        EXCLUSIVE body lock — thieves may still CLAIM tail slots (the
+        packed-word get-accumulate is not body-locked) but cannot TRANSFER
+        payloads (Fig. 2b step III needs the shared body lock) — scans the
+        live range, CASes ``head + 1`` exactly as the plain pop does, then
+        swaps the head payload into the popped task's slot so the range
+        ``[head+1, tail)`` stays fully populated for any thief whose claim
+        serialised after our CAS.  A claim that serialises before our CAS
+        fails it and we rescan against the shrunken range.  Only the OWNER
+        end reorders: the thief end still strips the oldest/cheapest tail
+        slots first, which is what makes steals drain batch work
+        preferentially (DESIGN.md §SLO serving).  ``key`` runs under the
+        exclusive lock — it must be cheap and must not touch this deque.
         """
-        while True:
-            word = self.headtail.load()
-            head, tail = unpack(word)
-            if head >= tail:  # empty (incl. thief-overdraft tail < head)
-                if tail < head:
-                    self._note_overdraft()
-                return None
-            self.body.acquire_shared()
-            try:
+        if key is None:
+            while True:
+                word = self.headtail.load()
+                head, tail = unpack(word)
+                if head >= tail:  # empty (incl. thief-overdraft tail < head)
+                    if tail < head:
+                        self._note_overdraft()
+                    return None
+                self.body.acquire_shared()
+                try:
+                    if not self.headtail.compare_exchange(word, pack(head + 1, tail)):
+                        continue  # a thief moved the tail under us: retry
+                    task = self._slots.pop(head)
+                    self.mutations += 1
+                finally:
+                    self.body.release_shared()
+                return task
+        missing = object()
+        self.body.acquire_exclusive()
+        try:
+            while True:
+                word = self.headtail.load()
+                head, tail = unpack(word)
+                if head >= tail:
+                    if tail < head:
+                        self._note_overdraft()
+                    return None
+                best_rank, best_k = None, head
+                for k in range(head, tail):
+                    cand = self._slots.get(k, missing)
+                    if cand is missing:  # defensively skip claimed slots
+                        continue
+                    rank = key(cand)
+                    if best_rank is None or rank < best_rank:
+                        best_rank, best_k = rank, k
                 if not self.headtail.compare_exchange(word, pack(head + 1, tail)):
-                    continue  # a thief moved the tail under us: retry
-                task = self._slots.pop(head)
+                    continue  # a thief moved the tail under us: rescan
+                task = self._slots.pop(best_k)
+                if best_k != head:
+                    # Refill the hole with the head payload: thieves that
+                    # claimed after our CAS transfer from [head+1, tail),
+                    # which must stay gap-free.
+                    self._slots[best_k] = self._slots.pop(head)
                 self.mutations += 1
-            finally:
-                self.body.release_shared()
-            return task
+                return task
+        finally:
+            self.body.release_exclusive()
 
     def push(self, tasks: Sequence) -> None:
         """Owner (or thief landing stolen goods) pushes at the head side.

@@ -27,6 +27,16 @@ cross-worker state (CTWS token, LW leader gate) takes an internal lock.
 Policies must NOT keep per-plane state keyed on wall time — ``view.now`` is
 the only clock, so the same object works under both real and virtual time.
 
+Policies never touch task payloads.  Both substrates carry first-class
+:class:`repro.core.deque.Task` records (or, in the simulator, the same
+fields column-wise), but everything a policy sees is already aggregated
+into the view — queue depths, per-class counts, work-second estimates.
+SLO ordering (DESIGN.md §SLO serving) lives entirely at the OWNER end of
+the deque: plans, victim selection and loot sizing are SLO-blind, which is
+what keeps the no-SLO degenerate configuration bit-for-bit identical and
+lets thief-end steals drain batch work preferentially with no policy
+change.
+
 Implementations
 ---------------
 * :class:`A2WSPolicy`   — the paper: Eq. 5 steal rate over the radius-R info

@@ -52,7 +52,8 @@ from dataclasses import dataclass, field, replace
 
 import numpy as np
 
-from .a2ws import latency_percentiles
+from .a2ws import DEFAULT_QS, latency_percentiles
+from .deque import SLO_NAMES
 from .limp import (
     LimpConfig,
     LimpState,
@@ -71,6 +72,7 @@ from .steal import OverlayBuffers, neighborhood, weighted_overlay
 from .topology import Topology
 
 __all__ = [
+    "SimAutoscale",
     "SimConfig",
     "SimResult",
     "table2_speeds",
@@ -124,6 +126,45 @@ def table2_speeds(config: str, order: str = "interleaved") -> np.ndarray:
 
 
 @dataclass(frozen=True)
+class SimAutoscale:
+    """Virtual-time replica autoscaling (DESIGN.md §SLO serving).
+
+    ``reserve`` names dormant nodes (by speed) appended after the base ring;
+    the scaler activates them in order and deactivates them LIFO.  Every
+    ``interval`` virtual seconds a "scale" event evaluates one of two modes:
+
+    * ``"threshold"`` — the PR-3 rule, ported from the threaded
+      ``AutoscaleConfig``: scale OUT one reserve when the pending backlog
+      (arrived − done, queued + in flight) exceeds
+      ``high_pending_per_replica ×`` live nodes; scale IN one reserve after
+      ``idle_ticks_to_retire`` consecutive zero-backlog ticks.  Purely
+      reactive: it waits for the queue to already be deep.
+    * ``"predictive"`` — Holt's EWMA level+trend forecast of the ARRIVAL
+      RATE: per tick, the observed rate ``(arrived − prev)/interval``
+      updates ``level`` (smoothing ``rate_alpha``) and ``trend``
+      (smoothing ``trend_beta``); the forecast ``λ̂ = level + trend·horizon``
+      is converted to a node count by requiring aggregate service capacity
+      ``Σ_j speed_j / E[task seconds] ≥ λ̂ / target_util``.  Reserves
+      activate as soon as the FORECAST crosses capacity — ahead of the
+      backlog a threshold scaler waits for — and deactivate (one per tick,
+      only while the backlog is small) when the forecast recedes.
+
+    The scaler consumes NO scheduler rng and pushes no events when unset —
+    ``autoscale=None`` is bit-for-bit the PR-9 event stream.
+    """
+
+    reserve: tuple[float, ...]
+    interval: float = 1.0
+    mode: str = "threshold"
+    high_pending_per_replica: float = 4.0
+    idle_ticks_to_retire: int = 3
+    rate_alpha: float = 0.3
+    trend_beta: float = 0.2
+    horizon: float = 5.0
+    target_util: float = 0.75
+
+
+@dataclass(frozen=True)
 class SimConfig:
     speeds: np.ndarray
     num_tasks: int
@@ -149,7 +190,10 @@ class SimConfig:
     # "trace":   arrival_trace gives the absolute arrival times verbatim.
     arrival: str = "closed"
     arrival_rate: float = 0.0  # tasks/second entering the system (poisson)
-    arrival_trace: tuple[float, ...] = ()  # absolute times (trace mode)
+    # Absolute times (trace mode).  Array-likes welcome — a 10^6-request
+    # diurnal trace streams straight from the generator/npz as a float64
+    # array, never materialising a Python tuple.
+    arrival_trace: "tuple[float, ...] | np.ndarray" = ()
     # --- elastic membership (DESIGN.md §Elasticity) ---
     # joins:   (time, speed) scale-out events — each activates ONE new node
     #          appended to the ring at that virtual time; it starts with an
@@ -212,6 +256,31 @@ class SimConfig:
     #            weighting) rides on the schedule's own knobs; None — or an
     #            empty schedule — is bit-for-bit the fault-free scheduler.
     netfaults: NetFaultSchedule | None = None
+    # --- SLO serving (DESIGN.md §SLO serving; open-arrival modes only) ---
+    # slo_trace:     per-task SLO class (0 = batch, 1 = latency; array-likes
+    #                welcome), aligned with the arrival order.  () disables
+    #                the whole plane — bit-for-bit the PR-9 scheduler.
+    # slo_deadlines: per-class latency BUDGET seconds (batch, latency); a
+    #                task's absolute deadline is arrival + budget, so EDF
+    #                within a class coincides with FIFO (budgets are
+    #                per-class constants).  inf = no deadline (telemetry
+    #                still splits per class).
+    # slo_order:     owners pop SLO-ordered (latency jumps batch, EDF within
+    #                class); False records per-class telemetry but keeps
+    #                PR-9 LIFO pops — the ordering ablation.
+    # slo_aging:     batch no-starvation bound: a batch task older than this
+    #                is promoted into the EDF order at effective deadline
+    #                arrival + slo_aging.  inf = never promote.
+    # record_tasks:  False skips the per-task (node, start, end) records —
+    #                at 10^6 requests they dominate memory and no benchmark
+    #                reads them.
+    slo_trace: "tuple[int, ...] | np.ndarray" = ()
+    slo_deadlines: tuple[float, float] = (math.inf, math.inf)
+    slo_order: bool = True
+    slo_aging: float = math.inf
+    record_tasks: bool = True
+    # --- autoscaling (DESIGN.md §SLO serving; open-arrival modes only) ---
+    autoscale: "SimAutoscale | None" = None
     # --- CTWS ---
     token_base: float = 2e-3
     token_per_node: float = 2.5e-4
@@ -313,12 +382,26 @@ class SimResult:
     lost_tasks: int = 0
     # tasks lost in flight — ONLY possible under netfaults.hardened=False
     # (the no-lease ablation); the hardened path conserves every task
+    slo_latencies: dict[str, list[float]] = field(default_factory=dict)
+    # per-SLO-class sojourn times keyed by class name; {} when cfg.slo_trace
+    # is unset (the telemetry split rides the SLO plane, not the ordering)
+    slo_violations: dict[str, int] = field(default_factory=dict)
+    # per-SLO-class deadline violations (latency > class budget)
+    scale_log: list[tuple[float, str, int, int]] = field(default_factory=list)
+    # (time, "out" | "in", node, pending) autoscaler actions (cfg.autoscale)
 
     def latency_percentiles(
-        self, qs: tuple[float, ...] = (50.0, 95.0, 99.0)
+        self, qs: tuple[float, ...] = DEFAULT_QS
     ) -> dict[float, float]:
         """Per-task latency percentiles (open-arrival serving metric)."""
         return latency_percentiles(self.latencies, qs)
+
+    def slo_violation_rate(self) -> dict[str, float]:
+        """Per-SLO-class violation rate; {} when the SLO plane is off."""
+        return {
+            name: self.slo_violations.get(name, 0) / max(len(lats), 1)
+            for name, lats in self.slo_latencies.items()
+        }
 
     def summary(self) -> str:
         out = (
@@ -327,9 +410,18 @@ class SimResult:
         )
         pct = self.latency_percentiles()
         if pct:
-            out += " lat[p50/p95/p99]=" + "/".join(
-                f"{pct[q]:.2f}s" for q in (50.0, 95.0, 99.0)
+            out += " lat[p50/p95/p99/p99.9]=" + "/".join(
+                f"{pct[q]:.2f}s" for q in DEFAULT_QS
             )
+        if self.slo_latencies:
+            out += " slo[" + " ".join(
+                f"{name}={self.slo_violations.get(name, 0)}"
+                f"/{len(lats)}viol"
+                for name, lats in sorted(self.slo_latencies.items())
+            ) + "]"
+        if self.scale_log:
+            outs = sum(1 for _, k, _n, _p in self.scale_log if k == "out")
+            out += f" scale[{outs}out/{len(self.scale_log) - outs}in]"
         return out
 
 
@@ -407,9 +499,19 @@ def _arrival_times(cfg: SimConfig, rng: np.random.Generator) -> np.ndarray:
         gaps = rng.exponential(1.0 / cfg.arrival_rate, cfg.num_tasks)
         return np.cumsum(gaps)
     if cfg.arrival == "trace":
-        if not cfg.arrival_trace:
-            raise ValueError("trace arrivals need a non-empty arrival_trace")
-        return np.asarray(sorted(cfg.arrival_trace), dtype=np.float64)
+        # Accept array-likes and avoid the Python-object sort that dominated
+        # ingestion at 10^6 events: one vectorised monotonicity check IS the
+        # validation, and np.sort runs only when the trace is out of order.
+        arr = np.asarray(cfg.arrival_trace, dtype=np.float64)
+        if arr.ndim != 1 or arr.size == 0:
+            raise ValueError("trace arrivals need a non-empty 1-D arrival_trace")
+        if not np.isfinite(arr).all():
+            raise ValueError("arrival_trace times must all be finite")
+        if arr.size > 1 and bool((arr[1:] < arr[:-1]).any()):
+            arr = np.sort(arr)
+        elif arr is cfg.arrival_trace:
+            arr = arr.copy()  # never alias caller memory into the event loop
+        return arr
     raise ValueError(f"not an open-arrival mode: {cfg.arrival!r}")
 
 
@@ -435,6 +537,95 @@ def sim_policy(spec: str | SchedPolicy, cfg: SimConfig) -> SchedPolicy:
             "request_rtt": cfg.request_rtt,
         }
     return make_policy(spec, cfg.P, **kw)
+
+
+class _SloQueue:
+    """Two-class task-id queue: the simulator's O(1) mirror of the threaded
+    ``TaskDeque.get_task(key)`` scan (DESIGN.md §SLO serving).
+
+    The threaded owner scans ``[head, tail)`` for the minimum SLO key; at
+    trace scale that scan is O(depth) per pop, so the simulator keeps the
+    two classes in separate deques and the SLO choice becomes a two-way
+    comparison.  Orientation matches the plain deque it replaces: left =
+    newest (arrivals land, owner's LIFO end), right = oldest (thief end).
+
+    * ``popleft(now)`` — the OWNER pop: latency first in EDF order (per-class
+      constant budgets make EDF ≡ oldest-first), with a batch task older
+      than ``aging`` promoted at effective deadline ``arrival + aging``;
+      batch-only pops stay newest-first (LIFO), exactly the plain pop.
+    * ``pop()`` — the THIEF end: oldest BATCH first, then oldest latency —
+      steals strip batch work preferentially (owner-vs-thief asymmetry).
+    * ``[-1]`` — what ``pop()`` would take next (work-greedy loot pricing).
+    """
+
+    __slots__ = ("lat", "bat", "slo", "arrival", "deadline", "aging")
+
+    def __init__(
+        self,
+        slo: np.ndarray,
+        arrival: np.ndarray,
+        deadline: np.ndarray,
+        aging: float,
+    ) -> None:
+        self.lat: _deque = _deque()
+        self.bat: _deque = _deque()
+        self.slo = slo
+        self.arrival = arrival
+        self.deadline = deadline
+        self.aging = aging
+
+    def __len__(self) -> int:
+        return len(self.lat) + len(self.bat)
+
+    def __bool__(self) -> bool:
+        return bool(self.lat) or bool(self.bat)
+
+    def __iter__(self):
+        yield from self.lat
+        yield from self.bat
+
+    def __getitem__(self, idx: int):
+        if idx != -1:
+            raise IndexError("_SloQueue exposes only the thief end [-1]")
+        if self.bat:
+            return self.bat[-1]
+        return self.lat[-1]
+
+    def extendleft(self, tids) -> None:
+        lat_l, bat_l, slo = self.lat.appendleft, self.bat.appendleft, self.slo
+        for tid in tids:
+            (lat_l if slo[tid] else bat_l)(tid)
+
+    def extend(self, tids) -> None:
+        lat_a, bat_a, slo = self.lat.append, self.bat.append, self.slo
+        for tid in tids:
+            (lat_a if slo[tid] else bat_a)(tid)
+
+    def popleft(self, now: float) -> int:
+        lat, bat = self.lat, self.bat
+        if bat:
+            b = bat[-1]  # oldest batch task
+            aged = (
+                self.aging < math.inf
+                and (now - float(self.arrival[b])) > self.aging
+            )
+            if not lat:
+                return bat.pop() if aged else bat.popleft()
+            if aged and (
+                float(self.arrival[b]) + self.aging
+                <= float(self.deadline[lat[-1]])
+            ):
+                return bat.pop()  # the promoted batch task wins the EDF race
+        return self.lat.pop()  # EDF: oldest latency = earliest deadline
+
+    def pop(self) -> int:
+        if self.bat:
+            return self.bat.pop()
+        return self.lat.pop()
+
+    def clear(self) -> None:
+        self.lat.clear()
+        self.bat.clear()
 
 
 def simulate(policy: str | SchedPolicy, cfg: SimConfig) -> SimResult:
@@ -473,14 +664,39 @@ def simulate(policy: str | SchedPolicy, cfg: SimConfig) -> SimResult:
         pol.bind_topology(topo)
     link_busy: dict[tuple[int, int], float] = {}
 
+    # Autoscale plane (DESIGN.md §SLO serving): reserve nodes occupy the
+    # ring positions a scripted join would, so combining both would make
+    # slot ownership ambiguous — rejected.  The scaler is the churn driver.
+    scaler = cfg.autoscale
+    if scaler is not None:
+        if cfg.arrival == "closed":
+            raise ValueError("autoscale needs an open-arrival mode")
+        if cfg.joins:
+            raise ValueError(
+                "autoscale and scripted joins are mutually exclusive"
+            )
+        if not scaler.reserve:
+            raise ValueError("autoscale needs at least one reserve node")
+        if scaler.mode not in ("threshold", "predictive"):
+            raise ValueError(f"unknown autoscale mode {scaler.mode!r}")
+        if scaler.interval <= 0.0:
+            raise ValueError("autoscale interval must be > 0")
+        if getattr(pol, "cells", None) is not None:
+            raise NotImplementedError(
+                "autoscale under a hierarchical policy: reserve homing is "
+                "not implemented (flat policies only)"
+            )
+
     # Elastic membership: every join appends one ring position, so all
     # per-node state is sized for the FINAL ring up front; `p` is the
     # currently-materialised prefix and `alive_sim` masks live members.
     joins = sorted(cfg.joins)
-    pmax = p0 + len(joins)
+    reserve = tuple(scaler.reserve) if scaler is not None else ()
+    pmax = p0 + len(joins) + len(reserve)
     speeds = np.concatenate(
         [np.asarray(cfg.speeds, np.float64),
-         np.asarray([s for _, s in joins], np.float64)]
+         np.asarray([s for _, s in joins], np.float64),
+         np.asarray(reserve, np.float64)]
     )
     p = p0
     alive_sim = np.zeros(pmax, bool)
@@ -519,13 +735,6 @@ def simulate(policy: str | SchedPolicy, cfg: SimConfig) -> SimResult:
     # stay bit-for-bit count-based — the degenerate-case guarantee.)
     winfo = cfg.weighted and has_classes and ncls > 1 and uses_ring
 
-    # Per-node queues hold (arrival stamp, class) task tuples — stamps are
-    # the simulator's task identity (enough for latency accounting).
-    # Head = left (owner pops, new arrivals land), tail = right (thieves
-    # claim the oldest waiters), matching the TaskDeque discipline of the
-    # threaded runtime.  Initial placement is the policy's (static block
-    # split by default, the central queue for LW).
-    queues: list[_deque] = [_deque() for _ in range(pmax)]
     if open_mode:
         arrivals = _arrival_times(cfg, rng)
         total_tasks = len(arrivals)
@@ -549,9 +758,52 @@ def simulate(policy: str | SchedPolicy, cfg: SimConfig) -> SimResult:
             task_cls = rng.choice(ncls, size=total_tasks, p=probs)
     else:
         task_cls = np.zeros(total_tasks, np.int64)
+
+    # First-class Task records, column-wise: the simulator's task identity
+    # is its integer id; (arrival, cls, slo, deadline) live in parallel
+    # arrays so a 10^6-request trace never materialises per-task Python
+    # objects (the threaded plane carries the same fields on core.deque.Task
+    # instances).  `task_arrival` aliases the arrival trace under open mode.
+    task_arrival = arrivals if open_mode else np.zeros(total_tasks, np.float64)
+    slo_tele = len(cfg.slo_trace) > 0
+    budgets = np.asarray(cfg.slo_deadlines, np.float64)
+    if slo_tele:
+        if not open_mode:
+            raise ValueError("slo_trace needs an open-arrival mode")
+        task_slo = np.asarray(cfg.slo_trace, np.int8)
+        if task_slo.shape != (total_tasks,):
+            raise ValueError("slo_trace must assign every task an SLO class")
+        if int(task_slo.min()) < 0 or int(task_slo.max()) > 1:
+            raise ValueError(
+                "slo_trace entries must be 0 (batch) or 1 (latency)"
+            )
+        if budgets.shape != (2,) or not bool((budgets > 0.0).all()):
+            raise ValueError(
+                "slo_deadlines must be two positive budgets (batch, latency)"
+            )
+        task_deadline = task_arrival + budgets[task_slo]
+    else:
+        task_slo = np.zeros(total_tasks, np.int8)
+        task_deadline = np.empty(0)
+    if not cfg.slo_aging > 0.0:  # also rejects NaN
+        raise ValueError("slo_aging must be > 0 (math.inf disables aging)")
+    slo_on = slo_tele and cfg.slo_order
+    record_tasks = cfg.record_tasks
+
+    # Per-node queues hold task IDS.  Head = left (owner pops, new arrivals
+    # land), tail = right (thieves claim the oldest waiters), matching the
+    # TaskDeque discipline of the threaded runtime; with SLO ordering on,
+    # the owner end consults the two-lane _SloQueue instead.  Initial
+    # placement is the policy's (static block split by default, the central
+    # queue for LW).
+    queues: list = [
+        _SloQueue(task_slo, task_arrival, task_deadline, cfg.slo_aging)
+        if slo_on
+        else _deque()
+        for _ in range(pmax)
+    ]
     if not open_mode:
-        tasks = [(0.0, int(task_cls[k])) for k in range(total_tasks)]
-        for i, part in enumerate(pol.partition(tasks, p0)):
+        for i, part in enumerate(pol.partition(list(range(total_tasks)), p0)):
             queues[i].extend(part)
 
     def depth(i: int) -> int:
@@ -564,11 +816,14 @@ def simulate(policy: str | SchedPolicy, cfg: SimConfig) -> SimResult:
     qcls = np.zeros((pmax, ncls), np.float64)
     for i, q in enumerate(queues):
         for task in q:
-            qcls[i, task[1]] += 1.0
+            qcls[i, task_cls[task]] += 1.0
 
-    def q_pop(i: int, left: bool = False):
-        task = queues[i].popleft() if left else queues[i].pop()
-        qcls[i, task[1]] -= 1.0
+    def q_pop(i: int, left: bool = False, now: float = 0.0):
+        if left:
+            task = queues[i].popleft(now) if slo_on else queues[i].popleft()
+        else:
+            task = queues[i].pop()
+        qcls[i, task_cls[task]] -= 1.0
         return task
 
     def q_classes(i: int) -> np.ndarray:
@@ -602,13 +857,22 @@ def simulate(policy: str | SchedPolicy, cfg: SimConfig) -> SimResult:
             hist[i].append(0.0, float(depth(i)), float("nan"), **cls_payload(i))
     cur_t = np.full(pmax, np.nan)  # latest own estimate (for relay pacing)
     pending_dur = np.zeros(pmax, np.float64)  # duration of the task in flight
-    pending_task: list = [None] * pmax  # the (arrival, class) task in flight
+    pending_task: list = [None] * pmax  # the task id in flight (None: idle)
     idle_since = np.full(pmax, -1.0)
     in_transit = np.zeros(pmax, np.int64)  # loot scheduled but not yet received
     arrived = 0 if open_mode else total_tasks
     records: list[tuple[int, float, float]] = []
     latencies: list[float] = []
     steal_log: list[tuple[float, int, int, int]] = []
+    # Per-SLO-class telemetry ({} when the SLO plane is off, so SimResult
+    # summaries of plain runs are unchanged).
+    slo_lat: dict[str, list[float]] = (
+        {name: [] for name in SLO_NAMES} if slo_tele else {}
+    )
+    slo_viol: dict[str, int] = (
+        {name: 0 for name in SLO_NAMES} if slo_tele else {}
+    )
+    scale_log: list[tuple[float, str, int, int]] = []
     stats = {
         "steals": 0, "failed": 0, "moved": 0, "done": 0, "boundaries": 0,
         "net_failed": 0, "lease": 0, "lost": 0,
@@ -641,9 +905,24 @@ def simulate(policy: str | SchedPolicy, cfg: SimConfig) -> SimResult:
                     fallback = j
         return fallback  # only limping nodes left (or nobody at all: -1)
 
-    # Event heap: (time, seq, kind, node, payload)
+    # Event heap: (time, seq, kind, node, payload).  Sequence numbers
+    # 0..N-1 are RESERVED for the N open-mode arrival events (arrival k
+    # carries seq k), so the lazily-streamed arrival pushes below reproduce
+    # exactly the heap order of an eager up-front push of the whole trace;
+    # every other event numbers from N.
     heap: list[tuple[float, int, str, int, object]] = []
-    seq = 0
+    seq = total_tasks if open_mode else 0
+
+    arr_cursor = [0]
+
+    def push_arrival() -> None:
+        # Stream the arrival trace one event at a time: the heap holds at
+        # most ONE pending arrival instead of all 10^6, and the payload is
+        # just the task id.
+        k = arr_cursor[0]
+        if k < total_tasks:
+            arr_cursor[0] = k + 1
+            heapq.heappush(heap, (float(arrivals[k]), k, "arrive", -1, k))
 
     def push_event(time: float, kind: str, node: int, payload: object = 0) -> None:
         nonlocal seq
@@ -665,9 +944,9 @@ def simulate(policy: str | SchedPolicy, cfg: SimConfig) -> SimResult:
             idle_since[i] = now
             push_event(now + cfg.retry_interval, "retry", i, 0)
             return
-        task = q_pop(i, left=True)
+        task = q_pop(i, left=True, now=now)
         pending_task[i] = task
-        dur = cfg.task_cost * float(costs[task[1]]) / speeds[i]
+        dur = cfg.task_cost * float(costs[task_cls[task]]) / speeds[i]
         if cfg.noise:
             dur *= float(rng.lognormal(0.0, cfg.noise))
         dur *= pol.task_multiplier(i)  # LW: co-located leader slows worker 0
@@ -687,7 +966,8 @@ def simulate(policy: str | SchedPolicy, cfg: SimConfig) -> SimResult:
         pending_dur[i] = dur
         push_event(now + overhead + dur, "finish", i)
         busy[i] += dur
-        records.append((i, now + overhead, now + overhead + dur))
+        if record_tasks:
+            records.append((i, now + overhead, now + overhead + dur))
 
     def _own_t(i: int, now: float) -> float:
         if executed[i] > 0:
@@ -1040,7 +1320,7 @@ def simulate(policy: str | SchedPolicy, cfg: SimConfig) -> SimResult:
             stamps = []
             cum = 0.0
             while queues[v] and len(stamps) < cap:
-                w_next = float(rel_v[queues[v][-1][1]])
+                w_next = float(rel_v[task_cls[queues[v][-1]]])
                 if cum + w_next - plan.work > plan.work - cum + 1e-12 and not (
                     view.idle and not stamps  # idle: stay work-conserving
                 ):
@@ -1117,22 +1397,63 @@ def simulate(policy: str | SchedPolicy, cfg: SimConfig) -> SimResult:
         """Queue stamps head-side on ``node`` and wake it if idle."""
         queues[node].extendleft(stamps)
         for s in stamps:
-            qcls[node, s[1]] += 1.0
+            qcls[node, task_cls[s]] += 1.0
         if uses_ring:
             publish(node, now)
         if idle_since[node] >= 0.0:
             idle_since[node] = -1.0
             start_task(node, now)
 
+    # ---- Autoscale plane (cfg.autoscale): reserve slots res0.. activate in
+    # order and deactivate LIFO, reusing the join/retire machinery so the
+    # policy sees ordinary membership churn.  Holt's level+trend state
+    # drives the predictive mode; neither mode touches scheduler rng.
+    res0 = p0 + len(joins)  # == p0 whenever scaler is set (joins rejected)
+    res_active: list[int] = []
+    scale_state = {"level": 0.0, "trend": 0.0, "prev": 0, "init": False,
+                   "idle": 0}
+    if scaler is not None and total_tasks:
+        mean_task_s = cfg.task_cost * float(np.mean(costs[task_cls]))
+    else:
+        mean_task_s = cfg.task_cost
+
+    def scale_out(i: int, now: float, pending: int) -> None:
+        nonlocal p, radius
+        if i >= p:
+            p = i + 1
+        alive_sim[i] = True
+        born[i] = now
+        own_report[i] = now
+        radius = _radius_for(p)
+        if uses_ring:
+            hist[i].append(now, 0.0, float("nan"))
+        res_active.append(i)
+        scale_log.append((now, "out", i, pending))
+        pol.on_worker_join(i, now)
+        start_task(i, now)
+
+    def scale_in(now: float, pending: int) -> None:
+        i = res_active.pop()
+        alive_sim[i] = False
+        stamps = list(queues[i])
+        queues[i].clear()
+        qcls[i, :] = 0.0
+        if uses_ring:
+            publish(i, now)
+        for s in stamps:
+            land(route(prefer_central=False), [s], now)
+        scale_log.append((now, "in", i, pending))
+        pol.on_worker_death(i, now)
+
     # Boot: all initial nodes start their first task at t=0.  Open-arrival
     # tasks enter through "arrive" events whose landing node is resolved at
     # ARRIVAL time (policy central queue, else live round-robin) — the ring
     # may have grown or shrunk since the trace was generated.  Membership
     # events are scheduled alongside.
-    for k, t_arr in enumerate(arrivals):
-        push_event(
-            float(t_arr), "arrive", -1, (float(t_arr), int(task_cls[k]))
-        )
+    if open_mode:
+        push_arrival()
+    if scaler is not None:
+        push_event(scaler.interval, "scale", -1)
     for k, (t_join, _speed) in enumerate(joins):
         push_event(float(t_join), "join", p0 + k)
     for t_ret, node in cfg.retires:
@@ -1163,7 +1484,7 @@ def simulate(policy: str | SchedPolicy, cfg: SimConfig) -> SimResult:
             if has_classes:
                 # Owner-side EWMA t̂[c] on completion — same update rule as
                 # WorkerPool._observe_class_time, in virtual time.
-                c = task[1]
+                c = int(task_cls[task])
                 prev = class_t[i, c]
                 if prev != prev:  # first observation of this class
                     class_t[i, c] = pending_dur[i]
@@ -1173,7 +1494,13 @@ def simulate(policy: str | SchedPolicy, cfg: SimConfig) -> SimResult:
                         + (1.0 - cfg.ewma_alpha) * prev
                     )
             if open_mode:
-                latencies.append(now - task[0])
+                lat_v = now - float(task_arrival[task])
+                latencies.append(lat_v)
+                if slo_tele:
+                    s = int(task_slo[task])
+                    slo_lat[SLO_NAMES[s]].append(lat_v)
+                    if lat_v > float(budgets[s]):
+                        slo_viol[SLO_NAMES[s]] += 1
             makespan = max(makespan, now)
             if detect:
                 # Owner-side limp detection on the completed duration (the
@@ -1183,7 +1510,7 @@ def simulate(policy: str | SchedPolicy, cfg: SimConfig) -> SimResult:
                 st = limp_states[i]
                 st.observe(
                     normalize_duration(
-                        pending_dur[i], task[1],
+                        pending_dur[i], int(task_cls[task]),
                         class_t[i] if has_classes else None,
                     )
                 )
@@ -1207,6 +1534,7 @@ def simulate(policy: str | SchedPolicy, cfg: SimConfig) -> SimResult:
             boundary(i, now)
             start_task(i, now)
         elif kind == "arrive":
+            push_arrival()  # stream the next trace entry onto the heap
             arrived += 1
             target = route()
             if target < 0:
@@ -1265,6 +1593,72 @@ def simulate(policy: str | SchedPolicy, cfg: SimConfig) -> SimResult:
                 delay = cfg.retry_interval * (1.3 ** min(payload, 12))
                 push_event(now + delay, "retry", i, payload + 1)
             # on success the stolen tasks arrive via a "receive" event
+        elif kind == "scale":
+            live = int(alive_sim.sum())
+            pending = arrived - stats["done"] - stats["lost"]
+            if scaler.mode == "threshold":
+                # PR-3 serve-plane port: one action per tick on the
+                # instantaneous backlog, scale-in after a full idle streak.
+                if (
+                    pending > scaler.high_pending_per_replica * max(live, 1)
+                    and len(res_active) < len(reserve)
+                ):
+                    scale_out(res0 + len(res_active), now, pending)
+                    scale_state["idle"] = 0
+                elif pending == 0:
+                    scale_state["idle"] += 1
+                    if (
+                        scale_state["idle"] >= scaler.idle_ticks_to_retire
+                        and res_active
+                    ):
+                        scale_in(now, pending)
+                        scale_state["idle"] = 0
+                else:
+                    scale_state["idle"] = 0
+            else:
+                # Predictive: Holt's level+trend on the observed arrival
+                # rate, capacity provisioned against the HORIZON forecast —
+                # reserves come up before the backlog a threshold scaler
+                # waits for ever forms.
+                inst = (arrived - scale_state["prev"]) / scaler.interval
+                scale_state["prev"] = arrived
+                if not scale_state["init"]:
+                    scale_state["init"] = True
+                    scale_state["level"] = inst
+                else:
+                    lvl_prev = scale_state["level"]
+                    a = scaler.rate_alpha
+                    scale_state["level"] = a * inst + (1.0 - a) * lvl_prev
+                    b = scaler.trend_beta
+                    scale_state["trend"] = (
+                        b * (scale_state["level"] - lvl_prev)
+                        + (1.0 - b) * scale_state["trend"]
+                    )
+                lam = max(
+                    scale_state["level"]
+                    + scale_state["trend"] * scaler.horizon,
+                    0.0,
+                )
+                need = lam / scaler.target_util  # tasks/s of capacity wanted
+                cap = sum(
+                    float(speeds[j]) / mean_task_s
+                    for j in range(p0)
+                    if alive_sim[j]
+                )
+                want = 0
+                for r in range(len(reserve)):
+                    if cap >= need:
+                        break
+                    cap += float(speeds[res0 + r]) / mean_task_s
+                    want += 1
+                while len(res_active) < want:
+                    scale_out(res0 + len(res_active), now, pending)
+                if len(res_active) > want and pending <= live:
+                    # Recede one per tick, and only once the backlog is
+                    # small — draining a reserve re-sprays its queue.
+                    scale_in(now, pending)
+            if arrived < total_tasks or pending > 0:
+                push_event(now + scaler.interval, "scale", -1)
         elif kind == "join":
             # Scale-out: node i materialises NOW — empty queue, no history,
             # preemptive estimates date from `born[i]`, and the policy grows
@@ -1315,4 +1709,7 @@ def simulate(policy: str | SchedPolicy, cfg: SimConfig) -> SimResult:
         net_failed=stats["net_failed"],
         lease_expired=stats["lease"],
         lost_tasks=stats["lost"],
+        slo_latencies=slo_lat,
+        slo_violations=slo_viol,
+        scale_log=scale_log,
     )

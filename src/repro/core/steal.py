@@ -52,6 +52,8 @@ from typing import Callable, Sequence
 import numpy as np
 
 __all__ = [
+    "class_counts",
+    "slo_split",
     "ideal_runtime",
     "tail_steal_amount",
     "steal_rate",
@@ -70,6 +72,52 @@ __all__ = [
 ]
 
 _EPS = 1e-12
+
+
+def class_counts(
+    tasks: Sequence,
+    classifier: Callable[[object], int] | None,
+    num_classes: int,
+) -> list[int]:
+    """Per-cost-class histogram of a task batch — THE loot/queue accounting
+    both planes share (DESIGN.md §Work-weighted stealing).
+
+    :class:`repro.core.deque.Task` records carry their class in ``.cls`` and
+    are counted directly; bare payloads go through ``classifier`` (clamped
+    to ``[0, num_classes)``; a raising classifier falls back to class 0 —
+    accounting must never kill a worker).  ``classifier=None`` counts
+    everything, Task or not, in class 0 — the count-based degenerate case.
+    """
+    from .deque import Task  # local: steal.py must stay import-light
+
+    counts = [0] * max(num_classes, 1)
+    hi = len(counts) - 1
+    for task in tasks:
+        if type(task) is Task:
+            c = task.cls
+        elif classifier is None:
+            c = 0
+        else:
+            try:
+                c = int(classifier(task))
+            except Exception:
+                c = 0
+        counts[min(max(c, 0), hi)] += 1
+    return counts
+
+
+def slo_split(tasks: Sequence) -> tuple[int, int]:
+    """``(batch, latency)`` counts of a loot batch (DESIGN.md §SLO serving).
+
+    Telemetry for the owner-vs-thief asymmetry claim: thief-end steals strip
+    the tail, so their loot should skew batch even when the victim's queue
+    holds latency work.  Uses :func:`repro.core.deque.slo_of`, so it accepts
+    Task records, future-likes and bare payloads alike.
+    """
+    from .deque import SLO_LATENCY, slo_of
+
+    lat = sum(1 for task in tasks if slo_of(task)[0] == SLO_LATENCY)
+    return len(tasks) - lat, lat
 
 
 def ideal_runtime(n: Sequence[float], t: Sequence[float]) -> float:

@@ -27,6 +27,7 @@ only fires at ``shutdown()``.
 
 from __future__ import annotations
 
+import math
 import threading
 import time
 from dataclasses import dataclass
@@ -37,6 +38,7 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core.a2ws import PoolCollapsed, RunStats, WorkerPool
+from repro.core.deque import SLO_BATCH, SLO_LATENCY, SLO_NAMES
 from repro.core.limp import LimpConfig, SlowdownSchedule
 from repro.core.netfault import NetFaultSchedule
 from repro.core.policy import SchedPolicy
@@ -287,10 +289,13 @@ class Replica:
 
 @dataclass
 class AutoscaleConfig:
-    """Threshold autoscaler for an elastic ``ServePool`` (DESIGN.md
-    §Elasticity).
+    """Autoscaler for an elastic ``ServePool`` (DESIGN.md §Elasticity,
+    §SLO serving).
 
-    A background watcher samples the pool every ``interval`` seconds:
+    A background watcher samples the pool every ``interval`` seconds and
+    acts in one of two modes:
+
+    ``mode="threshold"`` (the PR-3 reactive scaler):
 
     * **scale OUT** when the request backlog exceeds
       ``high_pending_per_replica`` × live replicas (queueing theory's "the
@@ -301,6 +306,19 @@ class AutoscaleConfig:
       consecutive samples and the pool is above ``min_replicas``: the
       highest-numbered live replica is drained back out (LIFO, so the boot
       replicas — typically the fast reserved capacity — stay).
+
+    ``mode="predictive"``: Holt's double-exponential forecast of the
+    ARRIVAL rate instead of the instantaneous backlog.  Each tick observes
+    the submit rate since the last tick, updates level/trend EWMAs
+    (``rate_alpha``/``trend_beta``), and provisions capacity against the
+    forecast ``level + trend × horizon`` at ``target_util`` utilisation,
+    where per-replica capacity is the observed mean service rate (served
+    tasks / busy seconds, pool-wide).  The pool scales out while live <
+    wanted and recedes (one per tick, only when the backlog is already
+    small) when live > wanted — reserves come up BEFORE the backlog a
+    threshold scaler needs as evidence, which is what rescues the latency
+    tail on a diurnal ramp.  Until a service-time observation exists the
+    predictive mode stands pat (no capacity estimate to provision against).
 
     **Straggler interaction** (DESIGN.md §Straggler plane): when the pool
     runs with limp detection (``ServePool(limp=...)``), a flagged replica is
@@ -323,6 +341,15 @@ class AutoscaleConfig:
     interval: float = 0.02
     limp_scale_out: bool = True
     drain_limping_ticks: int = 3
+    mode: str = "threshold"  # "threshold" | "predictive"
+    rate_alpha: float = 0.3  # predictive: level EWMA weight
+    trend_beta: float = 0.2  # predictive: trend EWMA weight
+    horizon: float = 5.0  # predictive: forecast look-ahead, in ticks
+    target_util: float = 0.75  # predictive: provisioned utilisation target
+
+    def __post_init__(self) -> None:
+        if self.mode not in ("threshold", "predictive"):
+            raise ValueError(f"unknown autoscale mode {self.mode!r}")
 
 
 class ServeFuture:
@@ -333,11 +360,17 @@ class ServeFuture:
     ``submit_t`` (entered the pool), ``start_t``/``end_t`` (execution on the
     serving replica), ``latency`` = end - submit (the open-arrival sojourn
     time the §Open-arrival design optimises for).
+
+    SLO attributes (DESIGN.md §SLO serving): ``slo_class`` (SLO_BATCH /
+    SLO_LATENCY) and an ABSOLUTE ``deadline`` (pool-clock seconds; +inf =
+    none).  These are what the scheduler's SLO-ordered owner pops and
+    ``RunStats.slo_stats`` read off the future (the duck-typed face of
+    ``core.deque.Task``, with ``submit_t`` as the arrival stamp).
     """
 
     __slots__ = (
         "request", "response", "error", "worker",
-        "submit_t", "start_t", "end_t", "_done",
+        "submit_t", "start_t", "end_t", "slo_class", "deadline", "_done",
     )
 
     def __init__(self, request: dict) -> None:
@@ -348,6 +381,8 @@ class ServeFuture:
         self.submit_t: float = float("nan")
         self.start_t: float = float("nan")
         self.end_t: float = float("nan")
+        self.slo_class: int = SLO_BATCH
+        self.deadline: float = math.inf
         self._done = threading.Event()
 
     def done(self) -> bool:
@@ -424,12 +459,23 @@ class ServePool:
         topology: Topology | None = None,
         migration_cost: float = 0.0,
         netfaults: NetFaultSchedule | None = None,
+        slo_order: bool = False,
+        slo_aging: float = math.inf,
     ):
         self.replicas = replicas
         self.radius = radius
         self.seed = seed
         self.policy = policy
         self.autoscale = autoscale
+        # SLO plane (DESIGN.md §SLO serving): slo_order=True makes every
+        # replica pop its own deque SLO-first (latency jumps batch, EDF
+        # within class, batch older than slo_aging promoted); thief-end
+        # steals still strip the oldest tail, i.e. batch work.  Off by
+        # default — bit-for-bit the PR-9 pop path.
+        if not slo_aging > 0.0:  # also rejects NaN
+            raise ValueError(f"slo_aging {slo_aging} must be > 0 (or inf)")
+        self.slo_order = slo_order
+        self.slo_aging = slo_aging
         if migration_cost < 0.0 or migration_cost != migration_cost:
             raise ValueError("migration_cost must be >= 0")
         # Per-request warm-state weight rides the same pricing hook as the
@@ -530,6 +576,8 @@ class ServePool:
             limp=self.limp,
             topology=self.topology,
             netfaults=self.netfaults,
+            slo=self.slo_order,
+            slo_aging=self.slo_aging,
         )
         # Share the runtime's transition log so limp telemetry stays
         # readable after shutdown() drops the runtime reference.
@@ -626,6 +674,11 @@ class ServePool:
         assert cfg is not None
         idle_ticks = 0
         limp_ticks: dict[int, int] = {}  # replica -> consecutive flagged+empty
+        # Predictive state: Holt's level+trend over the observed submit rate.
+        prev_submitted: int | None = None
+        level = 0.0
+        trend = 0.0
+        level_init = False
         while not self._scale_stop.wait(cfg.interval):
             rt = self._runtime
             if rt is None:
@@ -662,7 +715,53 @@ class ServePool:
             healthy = (
                 len(live) - len(limping) if cfg.limp_scale_out else len(live)
             )
-            if (
+            if cfg.mode == "predictive":
+                submitted = rt.submitted.load()
+                if prev_submitted is not None:
+                    inst = (submitted - prev_submitted) / cfg.interval
+                    if not level_init:
+                        level_init = True
+                        level = inst  # first observation seeds the level
+                    else:
+                        lvl_prev = level
+                        level = cfg.rate_alpha * inst + (
+                            1.0 - cfg.rate_alpha
+                        ) * lvl_prev
+                        trend = cfg.trend_beta * (level - lvl_prev) + (
+                            1.0 - cfg.trend_beta
+                        ) * trend
+                prev_submitted = submitted
+                # Per-replica capacity from OBSERVED service times (served
+                # tasks / busy seconds, pool-wide mean); no observation yet
+                # -> stand pat, there is nothing to provision against.
+                served = sum(w.executed for w in rt.workers)
+                busy_s = sum(w.runtime_sum for w in rt.workers)
+                if served <= 0 or busy_s <= 0.0:
+                    continue
+                rate_per_replica = served / busy_s
+                lam = max(level + trend * cfg.horizon, 0.0)
+                want = math.ceil(
+                    lam / (cfg.target_util * rate_per_replica)
+                )
+                want = min(max(want, cfg.min_replicas), cfg.max_replicas)
+                if healthy < want and len(live) < cfg.max_replicas:
+                    wid = self.add_replica(cfg.factory)
+                    self.scale_events.append(
+                        (time.perf_counter(), "out", wid, pending)
+                    )
+                elif (
+                    len(live) > want
+                    and len(live) > cfg.min_replicas
+                    and pending <= len(live)
+                ):
+                    # Recede one per tick, only once the backlog is small —
+                    # draining a replica re-sprays its queue.
+                    victim = max(live)  # LIFO: boot replicas stay
+                    self.retire_replica(victim, drain=True)
+                    self.scale_events.append(
+                        (time.perf_counter(), "in", victim, pending)
+                    )
+            elif (
                 pending > cfg.high_pending_per_replica * max(healthy, 1)
                 and len(live) < cfg.max_replicas
             ):
@@ -748,17 +847,45 @@ class ServePool:
                 return members[self._route_rr % len(members)]
         return None
 
-    def submit(self, request: dict, *, replica: int | None = None) -> ServeFuture:
+    def submit(
+        self,
+        request: dict,
+        *,
+        replica: int | None = None,
+        slo_class: int | str | None = None,
+        deadline: float | None = None,
+    ) -> ServeFuture:
         """Inject one request into the live pool (thread-safe); returns a
         ``ServeFuture``.  ``replica`` pins the initial deque (tests/traces);
         default routing round-robins and lets stealing do the balancing —
         except while a partition is active (``netfaults``), where the
         request routes into the largest reachable component instead
-        (:meth:`_partition_route`)."""
+        (:meth:`_partition_route`).
+
+        ``slo_class`` tags the request ``"latency"``/``"batch"`` (or the
+        SLO_LATENCY/SLO_BATCH ints); ``deadline`` is a RELATIVE budget in
+        seconds, resolved against the submit stamp into the absolute
+        deadline the SLO-ordered pops and ``RunStats.slo_stats`` act on.
+        Both default to the batch/no-deadline degenerate case."""
         if self._runtime is None:
             self.start()
         fut = ServeFuture(request)
+        if slo_class is not None:
+            if isinstance(slo_class, str):
+                try:
+                    slo_class = SLO_NAMES.index(slo_class)
+                except ValueError:
+                    raise ValueError(
+                        f"slo_class {slo_class!r} not in {SLO_NAMES}"
+                    ) from None
+            if slo_class not in (SLO_BATCH, SLO_LATENCY):
+                raise ValueError(f"slo_class {slo_class} must be 0 or 1")
+            fut.slo_class = int(slo_class)
         fut.submit_t = time.perf_counter()
+        if deadline is not None:
+            if not deadline > 0.0:  # also rejects NaN
+                raise ValueError(f"deadline budget {deadline} must be > 0")
+            fut.deadline = fut.submit_t + deadline
         assert self._runtime is not None
         if replica is None:
             replica = self._partition_route()
@@ -782,9 +909,19 @@ class ServePool:
         return fut
 
     def submit_wave(
-        self, requests: Sequence[dict], *, replica: int | None = None
+        self,
+        requests: Sequence[dict],
+        *,
+        replica: int | None = None,
+        slo_class: int | str | None = None,
+        deadline: float | None = None,
     ) -> list[ServeFuture]:
-        return [self.submit(r, replica=replica) for r in requests]
+        return [
+            self.submit(
+                r, replica=replica, slo_class=slo_class, deadline=deadline
+            )
+            for r in requests
+        ]
 
     def stats(self) -> RunStats:
         """Live scheduler stats snapshot (callable while serving)."""

@@ -1,0 +1,506 @@
+"""SLO plane (DESIGN.md §SLO serving): the first-class Task record, SLO-
+ordered owner pops (latency jumps batch, EDF within class, batch aging),
+the no-SLO degenerate bit-for-bit conformance in both planes (flat +
+hierarchical), the diurnal trace generator, the `_arrival_times` fast
+path, p99.9 telemetry, the sim autoscale plane, and the serve-plane SLO
+submit path."""
+
+import math
+
+import numpy as np
+import pytest
+
+from _hypo import given, settings, st  # skips properties w/o hypothesis
+from repro.core.a2ws import (
+    DEFAULT_QS,
+    WorkerPool,
+    latency_percentiles,
+)
+from repro.core.deque import (
+    SLO_BATCH,
+    SLO_LATENCY,
+    SLO_NAMES,
+    Task,
+    TaskDeque,
+    slo_key,
+    slo_of,
+)
+from repro.core.policy import HierarchicalA2WSPolicy
+from repro.core.simulator import (
+    SimAutoscale,
+    SimConfig,
+    _arrival_times,
+    simulate,
+    table2_speeds,
+)
+from repro.core.trace import diurnal_trace, load_trace, save_trace
+from repro.serve.engine import Replica, ServePool
+
+
+# ------------------------------------------------------------ the Task record
+def test_task_record_defaults_and_slo_of():
+    t = Task()
+    assert t.id == -1 and t.cls == 0 and t.slo == SLO_BATCH
+    assert t.arrival != t.arrival and t.deadline == math.inf
+    t2 = Task(id=3, arrival=1.5, cls=2, slo=SLO_LATENCY, deadline=2.0,
+              payload={"x": 1})
+    assert slo_of(t2) == (SLO_LATENCY, 2.0, 1.5)
+    assert "latency" in repr(t2)
+    # duck-typed face: anything with slo_class/deadline/submit_t (the
+    # ServeFuture shape) reads identically
+    class Fut:
+        slo_class = SLO_LATENCY
+        deadline = 9.0
+        submit_t = 4.0
+    assert slo_of(Fut()) == (SLO_LATENCY, 9.0, 4.0)
+    # plain payloads are batch-class, no deadline
+    s, d, a = slo_of({"prompt": "hi"})
+    assert s == SLO_BATCH and d == math.inf and a != a
+
+
+def test_slo_key_ordering_rule():
+    key = slo_key(now=100.0, aging=10.0)
+    lat_tight = Task(slo=SLO_LATENCY, deadline=101.0)
+    lat_loose = Task(slo=SLO_LATENCY, deadline=105.0)
+    fresh_batch = Task(slo=SLO_BATCH, arrival=95.0)
+    aged_batch = Task(slo=SLO_BATCH, arrival=85.0)  # age 15 > 10
+    ranks = sorted(
+        [lat_loose, fresh_batch, aged_batch, lat_tight], key=key
+    )
+    # EDF among latency; the aged batch task is promoted to (0, 85+10=95),
+    # ahead of BOTH deadlines; the fresh batch task stays last.
+    assert ranks == [aged_batch, lat_tight, lat_loose, fresh_batch]
+    # aging=inf never promotes
+    key_inf = slo_key(now=1e9, aging=math.inf)
+    assert key_inf(aged_batch) > key_inf(lat_loose)
+
+
+def test_taskdeque_slo_ordered_owner_pops_and_thief_asymmetry():
+    d = TaskDeque()
+    tasks = [
+        Task(id=0, arrival=0.0, slo=SLO_BATCH),
+        Task(id=1, arrival=0.1, slo=SLO_BATCH),
+        Task(id=2, arrival=0.2, slo=SLO_LATENCY, deadline=5.0),
+        Task(id=3, arrival=0.3, slo=SLO_LATENCY, deadline=2.0),
+    ]
+    for t in tasks:
+        d.push([t])  # one push per submit, as the runtime does
+    # owner: EDF latency first (id 3 then 2), batch only afterwards
+    key = slo_key(1.0)
+    assert d.get_task(key).id == 3
+    assert d.get_task(key).id == 2
+    assert {d.get_task(key).id, d.get_task(key).id} == {0, 1}
+    assert d.get_task(key) is None
+    # thief end is UNCHANGED: steals strip the oldest tail slots, i.e.
+    # batch work preferentially (the batch tasks were submitted first)
+    for t in tasks:
+        d.push([t])
+    loot = d.steal(2).tasks
+    assert [t.id for t in loot] == [1, 0]
+    assert d.get_task(slo_key(1.0)).id == 3
+
+
+def test_taskdeque_keyed_pop_degenerates_on_plain_payloads():
+    a, b = TaskDeque(), TaskDeque()
+    a.push(list(range(8)))
+    b.push(list(range(8)))
+    got_a = [a.get_task() for _ in range(8)]
+    got_b = [b.get_task(slo_key(0.0)) for _ in range(8)]
+    assert got_a == got_b  # plain payloads: SLO pops == LIFO pops
+
+
+@given(
+    seed=st.integers(0, 2**16),
+    n=st.integers(1, 24),
+    aging=st.sampled_from([0.5, 2.0, math.inf]),
+)
+@settings(max_examples=25, deadline=None)
+def test_property_keyed_pop_returns_min_rank_and_never_starves(seed, n, aging):
+    """get_task(key) always returns a minimum-rank task; with finite aging,
+    a batch task older than `aging` whose promoted key beats every latency
+    deadline is never passed over (the no-starvation bound)."""
+    rng = np.random.default_rng(seed)
+    d = TaskDeque()
+    shadow = []
+    for i in range(n):
+        if rng.random() < 0.5:
+            t = Task(id=i, arrival=float(rng.uniform(0, 5)), slo=SLO_BATCH)
+        else:
+            t = Task(id=i, arrival=float(rng.uniform(0, 5)),
+                     slo=SLO_LATENCY,
+                     deadline=float(rng.uniform(0, 10)))
+        shadow.append(t)
+        d.push([t])
+    now = 5.0
+    while shadow:
+        key = slo_key(now, aging)
+        got = d.get_task(key)
+        best = min(key(t) for t in shadow)
+        assert key(got) == best
+        shadow.remove(got)
+        now += 0.25
+    assert d.get_task(slo_key(now, aging)) is None
+
+
+# --------------------------------------------- satellite: _arrival_times perf
+def test_arrival_times_accepts_arrays_sorts_and_validates():
+    rng = np.random.default_rng(0)
+    unsorted = np.asarray([3.0, 1.0, 2.0])
+    cfg = SimConfig(speeds=(1.0,), num_tasks=3, arrival="trace",
+                    arrival_trace=unsorted)
+    out = _arrival_times(cfg, rng)
+    assert out.tolist() == [1.0, 2.0, 3.0]
+    assert unsorted.tolist() == [3.0, 1.0, 2.0]  # input never mutated
+    # list input works; already-sorted ndarray input is copied, not aliased
+    cfg2 = SimConfig(speeds=(1.0,), num_tasks=3, arrival="trace",
+                     arrival_trace=[1.0, 2.0, 3.0])
+    assert _arrival_times(cfg2, rng).dtype == np.float64
+    sorted_arr = np.asarray([1.0, 2.0])
+    cfg3 = SimConfig(speeds=(1.0,), num_tasks=2, arrival="trace",
+                     arrival_trace=sorted_arr)
+    out3 = _arrival_times(cfg3, rng)
+    out3[0] = -1.0
+    assert sorted_arr[0] == 1.0
+    for bad in ((), (1.0, math.nan), (math.inf,)):
+        with pytest.raises(ValueError):
+            _arrival_times(
+                SimConfig(speeds=(1.0,), num_tasks=1, arrival="trace",
+                          arrival_trace=bad),
+                rng,
+            )
+
+
+# ---------------------------------------------------- satellite: p99.9 quants
+def test_default_percentiles_include_p999():
+    assert 99.9 in DEFAULT_QS
+    pct = latency_percentiles([float(i) for i in range(1000)])
+    assert 99.9 in pct and pct[99.9] > pct[99.0]
+    res = simulate("a2ws", SimConfig(
+        speeds=(1.0, 1.0), num_tasks=50, task_cost=0.01,
+        arrival="poisson", arrival_rate=100.0,
+    ))
+    assert "p99.9" in res.summary()
+    assert 99.9 in res.latency_percentiles()
+
+
+# ------------------------------------------- no-SLO degenerate: bit-for-bit
+def _sim_equal(a, b):
+    assert b.makespan == a.makespan
+    assert b.per_node_tasks == a.per_node_tasks
+    assert b.per_node_busy == a.per_node_busy
+    assert b.records == a.records
+    assert b.latencies == a.latencies
+    assert b.steal_log == a.steal_log
+    assert (b.steals, b.failed_steals, b.moved_tasks, b.boundaries) == (
+        a.steals, a.failed_steals, a.moved_tasks, a.boundaries
+    )
+
+
+def _slo_off_variants(cfg: SimConfig, n: int):
+    """Configs that must be indistinguishable from the bare scheduler: SLO
+    telemetry without ordering, and ordering over an all-batch trace with
+    no aging (every pop degenerates to the plain LIFO choice)."""
+    zeros = np.zeros(n, np.int8)
+    return (
+        cfg.with_(slo_trace=zeros, slo_order=False),
+        cfg.with_(slo_trace=zeros, slo_order=True, slo_aging=math.inf),
+    )
+
+
+@pytest.mark.parametrize("conf,seed", [("C1", 0), ("C4", 3)])
+def test_sim_no_slo_degenerate_bit_for_bit_flat(conf, seed):
+    cfg = SimConfig(
+        speeds=table2_speeds(conf), num_tasks=140, seed=seed,
+        arrival="poisson", arrival_rate=40.0, task_cost=1.0,
+    )
+    bare = simulate("a2ws", cfg)
+    for variant in _slo_off_variants(cfg, 140):
+        res = simulate("a2ws", variant)
+        _sim_equal(bare, res)
+        assert res.slo_violations == {"batch": 0, "latency": 0}
+    assert bare.slo_latencies == {} and bare.scale_log == []
+
+
+@pytest.mark.parametrize("seed", [0, 37])
+def test_sim_no_slo_degenerate_bit_for_bit_hierarchical(seed):
+    p = 16
+    cfg = SimConfig(
+        speeds=table2_speeds("C4")[:p], num_tasks=160, seed=seed,
+        arrival="poisson", arrival_rate=30.0, task_cost=1.0,
+    )
+    bare = simulate(HierarchicalA2WSPolicy(p), cfg)
+    for variant in _slo_off_variants(cfg, 160):
+        _sim_equal(bare, simulate(HierarchicalA2WSPolicy(p), variant))
+
+
+@given(seed=st.integers(0, 2**16), tasks=st.integers(40, 160))
+@settings(max_examples=12, deadline=None)
+def test_property_sim_no_slo_degenerate_is_identity(seed, tasks):
+    """Property-tested conformance over arbitrary seeds/sizes: an all-batch
+    SLO trace with no deadlines hit and no aging can NEVER perturb the
+    scheduler — plans, rng streams and whole-run telemetry included."""
+    cfg = SimConfig(
+        speeds=table2_speeds("C4")[:16], num_tasks=tasks, seed=seed,
+        arrival="poisson", arrival_rate=50.0, task_cost=1.0,
+    )
+    bare = simulate("a2ws", cfg)
+    for variant in _slo_off_variants(cfg, tasks):
+        _sim_equal(bare, simulate("a2ws", variant))
+
+
+def _crafted_plans(policy, p, seed, slo):
+    """Deterministic boundary plans from a constructed (never started) pool
+    with crafted imbalance (mirrors tests/test_netfault.py)."""
+    pool = WorkerPool(
+        list(range(p * 5)), p, lambda w, t: None, policy=policy, seed=seed,
+        slo=slo,
+    )
+    for i in (0, p // 2):
+        w = pool.workers[i]
+        while w.deque.get_task() is not None:
+            pass
+    now = pool.clock()
+    for i, w in enumerate(pool.workers):
+        w.executed, w.runtime_sum, w.ran_any = 5, 5 * 0.05, True
+        w.start_time = now - 1e-3
+        pool._update_info(i)
+    for i in range(p):
+        pool.info.communicate(i)
+    plans = []
+    for i in range(p):
+        plan = pool.policy.on_boundary(pool._make_view(i))
+        plans.append(
+            None if plan is None else
+            (plan.victim, plan.amount, plan.criterion, plan.delay, plan.work)
+        )
+    return plans
+
+
+@pytest.mark.parametrize("policy", ["a2ws", "ha2ws"])
+@pytest.mark.parametrize("p,seed", [(5, 7), (24, 1234)])
+def test_threaded_plans_bit_for_bit_under_slo_pops(policy, p, seed):
+    """Conformance, threaded plane: enabling SLO-ordered pops over plain
+    payloads produces IDENTICAL boundary plans — same victims, amounts,
+    criteria, delays, work targets, same rng stream."""
+    assert _crafted_plans(policy, p, seed, False) == \
+        _crafted_plans(policy, p, seed, True)
+
+
+# ------------------------------------------------- SLO ordering improves tail
+def test_sim_slo_ordering_improves_latency_tail_batch_within_noise():
+    """Cross-plane conformance, sim side: under an overloaded bursty trace,
+    SLO ordering improves the latency-class p99 while total makespan (the
+    batch-class completion bound) stays within noise."""
+    arr, slo = diurnal_trace(
+        8000, mean_rate=120.0, period=120.0, depth=0.6, spikes=2,
+        spike_amp=1.5, spike_width=6.0, latency_frac=0.25, seed=3,
+    )
+    base = dict(
+        speeds=(1.0,) * 4, num_tasks=len(arr), task_cost=0.03,
+        arrival="trace", arrival_trace=arr, slo_trace=slo,
+        slo_deadlines=(30.0, 0.5), seed=1,
+    )
+    off = simulate("a2ws", SimConfig(**base, slo_order=False))
+    on = simulate("a2ws", SimConfig(**base, slo_order=True, slo_aging=10.0))
+    p99_off = float(np.percentile(off.slo_latencies["latency"], 99.0))
+    p99_on = float(np.percentile(on.slo_latencies["latency"], 99.0))
+    assert p99_on < p99_off
+    assert on.makespan == pytest.approx(off.makespan, rel=0.05)
+    assert sum(on.per_node_tasks) == len(arr)
+    vr = on.slo_violation_rate()
+    assert vr["latency"] <= off.slo_violation_rate()["latency"]
+    assert "slo[" in on.summary()
+
+
+def test_threaded_slo_ordering_latency_jumps_batch_edf_within_class():
+    """Cross-plane conformance, threaded side: with the worker held busy,
+    queued latency-class Tasks are served before earlier-queued batch
+    Tasks, EDF within the latency class."""
+    import threading
+
+    order: list[int] = []
+    gate = threading.Event()
+    started = threading.Event()
+
+    def task_fn(wid: int, task: Task) -> None:
+        if task.id == -100:
+            started.set()
+            assert gate.wait(5.0)
+            return
+        order.append(task.id)
+
+    pool = WorkerPool(
+        [], 1, task_fn, open_arrival=True, slo=True, seed=0,
+    )
+    pool.start()
+    try:
+        pool.submit(Task(id=-100), worker=0)
+        assert started.wait(5.0)
+        # queued while the worker is busy: two latency (EDF inverted vs
+        # submit order) between batch tasks
+        pool.submit(Task(id=1, slo=SLO_BATCH), worker=0)
+        pool.submit(Task(id=2, slo=SLO_LATENCY, deadline=50.0), worker=0)
+        pool.submit(Task(id=3, slo=SLO_LATENCY, deadline=10.0), worker=0)
+        pool.submit(Task(id=4, slo=SLO_BATCH), worker=0)
+        gate.set()
+        pool.drain()
+        stats = pool.join()
+    finally:
+        gate.set()
+    assert order == [3, 2, 4, 1]  # EDF latency first; batch LIFO after
+    slo_stats = stats.slo_stats()
+    assert slo_stats["latency"]["count"] == 2.0
+
+
+# ------------------------------------------------------------- sim autoscale
+def test_sim_autoscale_validations():
+    ok = SimConfig(speeds=(1.0,), num_tasks=10, arrival="poisson",
+                   arrival_rate=5.0)
+    with pytest.raises(ValueError):
+        simulate("a2ws", ok.with_(
+            arrival="closed",
+            autoscale=SimAutoscale(reserve=(1.0,)),
+        ))
+    with pytest.raises(ValueError):
+        simulate("a2ws", ok.with_(
+            joins=((1.0, 1.0),), autoscale=SimAutoscale(reserve=(1.0,)),
+        ))
+    with pytest.raises(ValueError):
+        simulate("a2ws", ok.with_(autoscale=SimAutoscale(reserve=())))
+    with pytest.raises(ValueError):
+        simulate("a2ws", ok.with_(
+            autoscale=SimAutoscale(reserve=(1.0,), mode="psychic"),
+        ))
+    with pytest.raises(ValueError):
+        simulate("a2ws", ok.with_(slo_trace=(0,) * 3))  # length mismatch
+    with pytest.raises(ValueError):
+        simulate("a2ws", ok.with_(slo_trace=(0,) * 10, slo_deadlines=(0.0, 1.0)))
+    with pytest.raises(ValueError):
+        simulate("a2ws", ok.with_(slo_trace=(2,) * 10))
+    with pytest.raises(ValueError):
+        simulate("a2ws", ok.with_(slo_aging=0.0))
+
+
+def _burst_trace(n: int, rate: float) -> np.ndarray:
+    rng = np.random.default_rng(5)
+    return np.cumsum(rng.exponential(1.0 / rate, n))
+
+
+@pytest.mark.parametrize("mode", ["threshold", "predictive"])
+def test_sim_autoscale_scales_out_under_overload_and_completes(mode):
+    n = 3000
+    arr = _burst_trace(n, 60.0)  # 2 nodes x 20/s: 3x overloaded
+    res = simulate("a2ws", SimConfig(
+        speeds=(1.0, 1.0), num_tasks=n, task_cost=0.05,
+        arrival="trace", arrival_trace=arr, seed=0,
+        autoscale=SimAutoscale(reserve=(1.0, 1.0, 1.0), interval=0.5,
+                               mode=mode),
+    ))
+    assert sum(res.per_node_tasks) == n
+    outs = [e for e in res.scale_log if e[1] == "out"]
+    assert outs, f"{mode} scaler never activated a reserve under overload"
+    assert "scale[" in res.summary()
+    # reserves actually served work
+    assert sum(res.per_node_tasks[2:]) > 0
+
+
+def test_sim_autoscale_none_is_bit_for_bit_off():
+    n = 400
+    arr = _burst_trace(n, 30.0)
+    cfg = SimConfig(speeds=(1.0, 1.0), num_tasks=n, task_cost=0.02,
+                    arrival="trace", arrival_trace=arr, seed=2)
+    _sim_equal(simulate("a2ws", cfg), simulate("a2ws", cfg))  # determinism
+    assert simulate("a2ws", cfg).scale_log == []
+
+
+# ------------------------------------------------------------- trace generator
+def test_diurnal_trace_deterministic_sorted_exact_n():
+    a1, s1 = diurnal_trace(5000, mean_rate=80.0, period=120.0, seed=11)
+    a2, s2 = diurnal_trace(5000, mean_rate=80.0, period=120.0, seed=11)
+    assert np.array_equal(a1, a2) and np.array_equal(s1, s2)
+    assert a1.shape == s1.shape == (5000,)
+    assert bool((np.diff(a1) >= 0.0).all())
+    assert a1.dtype == np.float64 and s1.dtype == np.int8
+    assert set(np.unique(s1)) <= {0, 1}
+    frac = float(s1.mean())
+    assert 0.15 < frac < 0.35  # latency_frac default 0.25
+    a3, _ = diurnal_trace(5000, mean_rate=80.0, period=120.0, seed=12)
+    assert not np.array_equal(a1, a3)
+
+
+def test_diurnal_trace_validation_and_roundtrip(tmp_path):
+    for bad in (
+        dict(n=0), dict(mean_rate=-1.0), dict(depth=1.0),
+        dict(latency_frac=2.0), dict(spike_width=0.0),
+    ):
+        with pytest.raises(ValueError):
+            diurnal_trace(**{"n": 100, **bad})
+    arr, slo = diurnal_trace(300, mean_rate=50.0, period=60.0, seed=0)
+    path = str(tmp_path / "t.npz")
+    save_trace(path, arr, slo)
+    a2, s2 = load_trace(path)
+    assert np.array_equal(arr, a2) and np.array_equal(slo, s2)
+    with pytest.raises(ValueError):
+        save_trace(path, arr, slo[:-1])
+
+
+def test_diurnal_trace_feeds_simulator_directly():
+    arr, slo = diurnal_trace(2000, mean_rate=100.0, period=60.0, seed=4)
+    res = simulate("a2ws", SimConfig(
+        speeds=(1.0,) * 4, num_tasks=len(arr), task_cost=0.02,
+        arrival="trace", arrival_trace=arr, slo_trace=slo,
+        slo_order=True, slo_deadlines=(30.0, 0.5), seed=0,
+    ))
+    assert sum(res.per_node_tasks) == 2000
+    counts = {k: len(v) for k, v in res.slo_latencies.items()}
+    assert counts["latency"] == int(slo.sum())
+    assert counts["batch"] == 2000 - int(slo.sum())
+
+
+# ------------------------------------------------------------------ serve SLO
+def _echo_replicas(k: int) -> list[Replica]:
+    return [
+        Replica(name=f"r{i}", generate=lambda req: {"ok": True})
+        for i in range(k)
+    ]
+
+
+def test_serve_submit_slo_kwargs_and_stats():
+    pool = ServePool(_echo_replicas(2), slo_order=True, slo_aging=5.0)
+    pool.start()
+    futs = []
+    for i in range(6):
+        futs.append(pool.submit(
+            {"i": i},
+            slo_class="latency" if i % 3 == 0 else "batch",
+            deadline=30.0 if i % 3 == 0 else None,
+        ))
+    for f in futs:
+        assert f.result(10.0) == {"ok": True}
+    lat = [f for f in futs if f.slo_class == SLO_LATENCY]
+    assert len(lat) == 2
+    assert all(math.isfinite(f.deadline) for f in lat)
+    assert all(f.deadline > f.submit_t for f in lat)
+    stats = pool.shutdown()
+    slo = stats.slo_stats()
+    assert slo["latency"]["count"] == 2.0
+    assert slo["batch"]["count"] == 4.0
+    assert slo["latency"]["violations"] == 0.0
+    assert "slo[" in stats.summary() and "p99.9" in stats.summary()
+
+
+def test_serve_submit_slo_validation():
+    pool = ServePool(_echo_replicas(1))
+    pool.start()
+    try:
+        with pytest.raises(ValueError):
+            pool.submit({}, slo_class="gold")
+        with pytest.raises(ValueError):
+            pool.submit({}, slo_class=7)
+        with pytest.raises(ValueError):
+            pool.submit({}, deadline=0.0)
+        with pytest.raises(ValueError):
+            ServePool(_echo_replicas(1), slo_aging=-1.0)
+        assert SLO_NAMES[pool.submit({}).slo_class] == "batch"
+    finally:
+        pool.shutdown()
